@@ -1,0 +1,36 @@
+"""Shared benchmark scaffolding: every benchmark prints a paper-style table
+and emits ``name,value,derived`` CSV rows for machine consumption."""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+CSV_ROWS: list[str] = []
+
+
+def emit(name: str, value, derived: str = ""):
+    row = f"{name},{value},{derived}"
+    CSV_ROWS.append(row)
+    return row
+
+
+def mesh_dp(n=8):
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def mesh_2d(shape=(4, 2)):
+    return jax.make_mesh(shape, ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def flush_csv(path: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write("name,value,derived\n")
+        for row in CSV_ROWS:
+            f.write(row + "\n")

@@ -1,0 +1,76 @@
+"""Paper §4: monitoring overhead (ComScribe: 1.4x at runtime).
+
+Ours splits into:
+* trace-time overhead — the interceptor's bind hooks run once per trace;
+* steady-state overhead — ZERO by construction: the compiled binary is
+  unchanged; we verify by timing the same compiled function before/after
+  monitoring and by checking executable fingerprints.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, mesh_dp
+from repro.core import CollectiveInterceptor
+from repro.models.resnet import ResNet18
+from repro.data import SyntheticImageData
+from repro.train import ddp
+
+
+def main():
+    mesh = mesh_dp(8)
+    model = ResNet18(num_classes=64)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = SyntheticImageData(num_classes=64, global_batch=16,
+                               image_size=32).batch_at(0)
+    ef = ddp.init_error_feedback(params)
+    step = ddp.make_ddp_train_step(model.loss_fn, mesh, mode="bucketed")
+
+    # --- trace-time overhead -------------------------------------------
+    def trace_once():
+        t0 = time.perf_counter()
+        step.lower(params, ef, batch)
+        return time.perf_counter() - t0
+
+    trace_once()  # warm caches
+    base = min(trace_once() for _ in range(3))
+    with CollectiveInterceptor(mesh=mesh):
+        hooked = min(trace_once() for _ in range(3))
+    trace_ovh = hooked / base
+    emit("overhead/trace", trace_ovh, f"base={base:.3f}s hooked={hooked:.3f}s")
+
+    # --- steady-state overhead ------------------------------------------
+    compiled = step.lower(params, ef, batch).compile()
+    with CollectiveInterceptor(mesh=mesh):
+        compiled_mon = step.lower(params, ef, batch).compile()
+    same_binary = compiled.as_text() == compiled_mon.as_text()
+
+    def run(c):
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(c(params, ef, batch))
+        return (time.perf_counter() - t0) / 3
+
+    run(compiled)
+    t_plain = min(run(compiled) for _ in range(3))
+    t_mon = min(run(compiled_mon) for _ in range(3))
+    steady = t_mon / t_plain
+    emit("overhead/steady_state", steady,
+         f"identical_binary={same_binary}")
+
+    print("== Monitoring overhead (paper: 1.4x at runtime) ==")
+    print(f"trace-time   : {trace_ovh:.3f}x  "
+          f"({base*1e3:.0f} ms -> {hooked*1e3:.0f} ms, once per jit)")
+    print(f"steady-state : {steady:.3f}x  (compiled binary identical: "
+          f"{same_binary})")
+    assert same_binary, "monitoring must not change the compiled program"
+    assert trace_ovh < 2.0, f"trace overhead too high: {trace_ovh}"
+    print("[overhead] steady-state monitoring cost is structurally 0x — "
+          "interception happens at trace, the binary is unchanged "
+          "(improves on the paper's 1.4x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table3     # one
+"""
+import sys
+import time
+import traceback
+
+from benchmarks import common
+
+BENCHES = ("table1", "table2", "table3", "fig3", "overhead", "roofline")
+
+
+def run_one(name: str) -> bool:
+    import importlib
+    mod = {
+        "table1": "benchmarks.table1_collective_bytes",
+        "table2": "benchmarks.table2_gnmt",
+        "table3": "benchmarks.table3_resnet_bucketing",
+        "fig3": "benchmarks.fig3_per_primitive",
+        "overhead": "benchmarks.overhead",
+        "roofline": "benchmarks.roofline_table",
+    }[name]
+    print(f"\n{'='*72}\n## {name} ({mod})\n{'='*72}")
+    t0 = time.perf_counter()
+    try:
+        importlib.import_module(mod).main()
+        print(f"[{name}] PASS in {time.perf_counter()-t0:.1f}s")
+        return True
+    except Exception:
+        traceback.print_exc()
+        print(f"[{name}] FAIL")
+        return False
+
+
+def main() -> None:
+    todo = sys.argv[1:] or list(BENCHES)
+    results = {name: run_one(name) for name in todo}
+    common.flush_csv("artifacts/benchmarks.csv")
+    print("\n== benchmark summary ==")
+    for name, ok in results.items():
+        print(f"  {name:10s} {'PASS' if ok else 'FAIL'}")
+    if not all(results.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 3 + §4.2: ResNet-18 DDP gradient bucketing.
+
+The paper shows PyTorch's gradient bucketing reduces ncclAllReduce calls from
+the naive D x N (one per parameter per iteration).  We sweep:
+
+* naive per-parameter AllReduce,
+* bucketed (PyTorch-style, 1 MiB and 25 MiB buckets),
+* bf16-compressed buckets (beyond paper: halves wire bytes),
+
+counting *traced* (application) calls — the paper's measurement — and
+*compiled* ops, where XLA's all-reduce combiner performs automatic bucketing
+(beyond-paper finding: the compiler gives you Table 3's optimization for
+free on TPU).
+"""
+import jax
+
+from benchmarks.common import emit, mesh_dp
+from repro.core import CollectiveInterceptor, parse_hlo_collectives
+from repro.core.reporter import format_table, human_bytes
+from repro.data import SyntheticImageData
+from repro.models.resnet import ResNet18
+from repro.train import ddp
+
+
+def main():
+    mesh = mesh_dp(8)
+    model = ResNet18(num_classes=200)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    data = SyntheticImageData(num_classes=200, global_batch=32,
+                              image_size=64)
+    batch = data.batch_at(0)
+    ef = ddp.init_error_feedback(params)
+
+    rows = []
+    for label, mode, bucket_mb, compress in (
+            ("naive per-param", "per_param", 0, False),
+            ("bucketed 1 MiB", "bucketed", 1.0, False),
+            ("bucketed 25 MiB (PyTorch)", "bucketed", 25.0, False),
+            ("bucketed 25 MiB + bf16+EF", "bucketed", 25.0, True)):
+        step = ddp.make_ddp_train_step(model.loss_fn, mesh, mode=mode,
+                                       bucket_mb=bucket_mb,
+                                       compress=compress)
+        with CollectiveInterceptor(mesh=mesh) as icpt:
+            lowered = step.lower(params, ef, batch)
+        traced = sum(1 for e in icpt.events if e.primitive == "psum")
+        traced_bytes = sum(e.payload_bytes for e in icpt.events
+                           if e.primitive == "psum")
+        ops = [o for o in parse_hlo_collectives(lowered.compile().as_text())
+               if o.kind == "all-reduce"]
+        compiled_bytes = sum(o.payload_bytes for o in ops)
+        rows.append([label, f"{traced:,}", human_bytes(traced_bytes * 8),
+                     f"{len(ops):,}", human_bytes(compiled_bytes * 8)])
+        emit(f"table3/{mode}_{bucket_mb}_{compress}", traced,
+             f"compiled={len(ops)},wire_bytes={compiled_bytes*8}")
+
+    print(f"== Table 3: ResNet-18 ({n_params/1e6:.1f}M params) DDP gradient "
+          "sync on 8 devices, one step ==")
+    print(format_table(rows, ["gradient sync", "traced AllReduce",
+                              "traced bytes (x8 ranks)",
+                              "compiled all-reduce", "compiled bytes"]))
+    naive, b25 = int(rows[0][1].replace(",", "")), \
+        int(rows[2][1].replace(",", ""))
+    assert b25 < naive / 4, "bucketing must reduce call count >=4x"
+    print(f"[table3] bucketing reduces application AllReduce calls "
+          f"{naive} -> {b25} (paper's claim); the XLA combiner further "
+          f"merges to {rows[0][3]} compiled op(s) even for naive code "
+          "(beyond paper)")
+
+
+if __name__ == "__main__":
+    main()

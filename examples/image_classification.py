@@ -1,0 +1,75 @@
+"""Paper §4.2: data-parallel ResNet-18 image classification, monitored.
+
+End-to-end driver: REALLY trains ResNet-18 on synthetic 64x64 images across
+8 data-parallel devices with explicit DDP gradient sync, then uses the
+monitor to explain the communication — including the paper's gradient
+bucketing experiment.
+
+Run:  PYTHONPATH=src python examples/image_classification.py [--steps 100]
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import argparse
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core import CollectiveInterceptor
+from repro.data import SyntheticImageData
+from repro.models.resnet import ResNet18
+from repro.train import ddp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--classes", type=int, default=8)
+    # paper uses 64x64; default 32 keeps the XLA:CPU collective rendezvous
+    # comfortable on oversubscribed host devices (use --image-size 64 on
+    # real hardware)
+    ap.add_argument("--image-size", type=int, default=32)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    model = ResNet18(num_classes=args.classes)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticImageData(num_classes=args.classes,
+                              global_batch=args.batch,
+                              image_size=args.image_size)
+    ef = ddp.init_error_feedback(params)
+
+    step = ddp.make_ddp_train_step(model.loss_fn, mesh, mode="bucketed",
+                                   bucket_mb=25.0, lr=5e-2)
+
+    # count application-issued collectives exactly as the paper does
+    with CollectiveInterceptor(mesh=mesh) as icpt:
+        step.lower(params, ef, data.batch_at(0))
+    ar_per_step = sum(1 for e in icpt.events if e.primitive == "psum")
+
+    eval_acc = jax.jit(lambda p, b: model.loss_fn(p, b)[1]["acc"])
+    t0 = time.perf_counter()
+    acc = None
+    for i in range(args.steps):
+        batch = data.batch_at(i)
+        params, ef, loss = step(params, ef, batch)
+        loss = float(loss)  # sync before anything else touches the devices
+        if i % 10 == 0 or i == args.steps - 1:
+            acc = float(eval_acc(params, batch))
+            print(f"step {i:4d} loss {loss:.4f} acc {acc:.2f} "
+                  f"({time.perf_counter()-t0:.1f}s)", flush=True)
+    print(f"\nAllReduce calls per step (bucketed, 25 MiB): {ar_per_step}")
+    print(f"-> one epoch of {args.steps} steps issues "
+          f"{ar_per_step * args.steps} AllReduce calls "
+          "(paper Table 3 accounting)")
+    assert acc is not None and acc > 0.5, "model failed to learn"
+    print("image classification example OK")
+
+
+if __name__ == "__main__":
+    main()

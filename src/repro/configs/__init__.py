@@ -1,0 +1,122 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports:
+  CONFIG   — the exact published configuration (full scale; dry-run only),
+  REDUCED  — same family at smoke-test scale (instantiated on CPU in tests),
+  TRAIN    — TrainConfig preset (microbatching / grad dtype tuned to fit HBM).
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every input
+of the step a shape exercises (train_step / prefill / decode) — the dry-run
+lowers against these, so full configs never allocate memory.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ShapeConfig, SHAPES_BY_NAME
+
+ARCH_IDS = (
+    "grok_1_314b",
+    "llama4_maverick_400b_a17b",
+    "codeqwen15_7b",
+    "granite_3_2b",
+    "qwen3_8b",
+    "granite_20b",
+    "xlstm_1_3b",
+    "chameleon_34b",
+    "musicgen_medium",
+    "recurrentgemma_2b",
+)
+
+# archs whose attention is strictly quadratic-full -> long_500k skipped
+LONG_CONTEXT_ARCHS = ("xlstm_1_3b", "recurrentgemma_2b")
+
+
+def get(arch: str):
+    """Returns the config module for an arch id (dashes tolerated)."""
+    name = arch.replace("-", "_").replace(".", "")
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = get(arch)
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def train_config(arch: str):
+    return get(arch).TRAIN
+
+
+def cells(include_long: bool = True):
+    """All runnable (arch, shape) dry-run cells."""
+    out = []
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+                continue  # DESIGN.md §4: full-attention archs skip long_500k
+            if not include_long and shape == "long_500k":
+                continue
+            out.append((arch, shape))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# input stand-ins per (cfg, shape)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct batch for the step this shape lowers."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.input_mode == "embeddings":
+            # modality frontend stub: precomputed frame/patch embeddings
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.input_mode == "embeddings":
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                               jnp.bfloat16)
+    return batch
+
+
+def reduce_config(cfg: ModelConfig, **over) -> ModelConfig:
+    """Same family, smoke-test scale (runs a real step on CPU)."""
+    import dataclasses
+    nh = min(cfg.n_heads, 4)
+    nkv = max(1, min(cfg.n_kv_heads, nh))
+    if cfg.n_kv_heads == cfg.n_heads:
+        nkv = nh
+    d = 16 * nh
+    repl = dict(
+        name=cfg.name + "-reduced",
+        n_layers=6 if cfg.family == "hybrid" else 4,
+        d_model=d,
+        n_heads=nh,
+        n_kv_heads=nkv,
+        head_dim=d // nh,
+        d_ff=0 if cfg.d_ff == 0 else 4 * d,
+        vocab_size=512,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        attn_window=32 if cfg.attn_window else 0,
+        d_rnn=d if cfg.d_rnn else 0,
+        mlstm_chunk=16,
+    )
+    repl.update(over)
+    return dataclasses.replace(cfg, **repl)

@@ -1,0 +1,16 @@
+"""chameleon-34b — 48L d8192 64H(kv8) ff22016 v65536, early-fusion VQ image
+tokens.  Modality frontend STUBBED: input_specs() supplies precomputed
+patch-token embeddings (B,S,D).  [arXiv:2405.09818; unverified]"""
+from repro.configs import reduce_config
+from repro.models.common import ModelConfig
+from repro.train import TrainConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab_size=65536, qk_norm=True, input_mode="embeddings",
+)
+
+REDUCED = reduce_config(CONFIG)
+
+TRAIN = TrainConfig(microbatches=16, remat="full", accum_dtype="bfloat16")

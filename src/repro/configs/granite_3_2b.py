@@ -1,0 +1,16 @@
+"""granite-3-2b — 40L d2048 32H(kv8) ff8192 v49155 (not TP-divisible:
+embedding replicated over model axis by the rules fallback).
+[hf:ibm-granite/granite-3.0-2b-base; hf]"""
+from repro.configs import reduce_config
+from repro.models.common import ModelConfig
+from repro.train import TrainConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8, d_ff=8192,
+    vocab_size=49155,
+)
+
+REDUCED = reduce_config(CONFIG)
+
+TRAIN = TrainConfig(microbatches=8, remat="full")

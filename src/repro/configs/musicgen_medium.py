@@ -1,0 +1,16 @@
+"""musicgen-medium — 48L d1536 24H(kv24 = MHA) ff6144 v2048, decoder-only
+over EnCodec tokens.  Frontend STUBBED: input_specs() supplies precomputed
+frame embeddings.  [arXiv:2306.05284; hf]"""
+from repro.configs import reduce_config
+from repro.models.common import ModelConfig
+from repro.train import TrainConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, d_ff=6144,
+    vocab_size=2048, input_mode="embeddings",
+)
+
+REDUCED = reduce_config(CONFIG)
+
+TRAIN = TrainConfig(microbatches=8, remat="full")

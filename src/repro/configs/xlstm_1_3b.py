@@ -1,0 +1,17 @@
+"""xlstm-1.3b — 48L d2048 4H, sLSTM + mLSTM blocks (1:1 alternating here;
+DESIGN.md §4), O(1) recurrent state -> runs long_500k.
+[arXiv:2405.04517; unverified]"""
+from repro.configs import reduce_config
+from repro.models.common import ModelConfig
+from repro.train import TrainConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304, subquadratic=True, mlstm_chunk=256,
+    block_pattern=("mlstm", "slstm"),
+)
+
+REDUCED = reduce_config(CONFIG)
+
+TRAIN = TrainConfig(microbatches=8, remat="full")

@@ -1,0 +1,23 @@
+# CommScribe-JAX core: the paper's contribution (collective-communication
+# monitoring) as a composable library. See DESIGN.md §3.
+from .events import CollectiveOp, HostTransfer, Shape, TraceEvent, jax_shape
+from .interceptor import CollectiveInterceptor, intercept
+from .hlo_parser import parse_hlo_collectives, summarize, total_wire_bytes
+from .comm_matrix import matrix_for_ops, per_primitive_matrices, add_host_transfers
+from .cost_models import wire_bytes_per_rank, collective_time, table1_allreduce_bytes
+from .topology import HardwareSpec, MeshTopology, V5E
+from .monitor import CommReport, monitor_fn, roofline_of
+from .roofline import RooflineReport, analyze as roofline_analyze
+from . import reporter
+
+__all__ = [
+    "CollectiveOp", "HostTransfer", "Shape", "TraceEvent", "jax_shape",
+    "CollectiveInterceptor", "intercept",
+    "parse_hlo_collectives", "summarize", "total_wire_bytes",
+    "matrix_for_ops", "per_primitive_matrices", "add_host_transfers",
+    "wire_bytes_per_rank", "collective_time", "table1_allreduce_bytes",
+    "HardwareSpec", "MeshTopology", "V5E",
+    "CommReport", "monitor_fn", "roofline_of",
+    "RooflineReport", "roofline_analyze",
+    "reporter",
+]

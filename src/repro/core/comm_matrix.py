@@ -1,0 +1,99 @@
+"""Communication matrices -- the paper's central visualization.
+
+A ``(d+1) x (d+1)`` matrix where entry ``(i+1, j+1)`` is the number of bytes
+device ``i`` sends to device ``j``; row/column 0 is reserved for the host
+(paper Fig. 2).  Matrices are built from compiled :class:`CollectiveOp` lists
+with an algorithm-aware edge model:
+
+* ring collectives place traffic on consecutive group neighbours,
+* tree collectives place traffic on binary-tree edges,
+* collective-permute uses its explicit source-target pairs,
+* all-to-all places uniform pairwise traffic.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import numpy as np
+
+from .events import CollectiveOp, HostTransfer
+from . import cost_models
+
+
+def _ring_edges(group: list[int]) -> list[tuple[int, int]]:
+    n = len(group)
+    return [(group[i], group[(i + 1) % n]) for i in range(n)]
+
+
+def _tree_edges(group: list[int]) -> list[tuple[int, int]]:
+    """Binary-tree edges (both directions: reduce up, broadcast down)."""
+    edges = []
+    n = len(group)
+    for i in range(1, n):
+        parent = group[(i - 1) // 2]
+        child = group[i]
+        edges.append((child, parent))
+        edges.append((parent, child))
+    return edges
+
+
+def matrix_for_ops(
+    ops: Iterable[CollectiveOp],
+    num_devices: int,
+    algorithm: str = "ring",
+    kinds: Optional[set[str]] = None,
+) -> np.ndarray:
+    """Bytes-sent matrix, shape ``(d+1, d+1)``; row/col 0 = host."""
+    mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
+    for op in ops:
+        if kinds is not None and op.kind not in kinds:
+            continue
+        w = getattr(op, "weight", 1.0)   # execution count (loop trip counts)
+        if op.kind == "collective-permute":
+            nbytes = op.result_bytes * w
+            for src, dst in op.source_target_pairs:
+                if src < num_devices and dst < num_devices:
+                    mat[src + 1, dst + 1] += nbytes
+            continue
+        for group in op.replica_groups or [[]]:
+            if len(group) <= 1:
+                continue
+            n = len(group)
+            s = op.payload_bytes
+            if op.kind in ("all-to-all", "ragged-all-to-all"):
+                block = s / (n * n) * w
+                for a in group:
+                    for b in group:
+                        if a != b and a < num_devices and b < num_devices:
+                            mat[a + 1, b + 1] += block
+                continue
+            per_rank = cost_models.wire_bytes_per_rank(op.kind, s, n, algorithm)
+            if algorithm == "tree" and op.kind == "all-reduce":
+                edges = _tree_edges(group)
+                per_edge = per_rank * n / max(1, len(edges)) * w
+            else:
+                edges = _ring_edges(group)
+                per_edge = per_rank * w  # per_rank to the next hop, per exec
+            for src, dst in edges:
+                if src < num_devices and dst < num_devices:
+                    mat[src + 1, dst + 1] += per_edge
+    return mat
+
+
+def add_host_transfers(mat: np.ndarray, transfers: Iterable[HostTransfer]) -> np.ndarray:
+    for t in transfers:
+        if t.direction == "h2d":
+            mat[0, t.device + 1] += t.nbytes
+        else:
+            mat[t.device + 1, 0] += t.nbytes
+    return mat
+
+
+def per_primitive_matrices(
+    ops: list[CollectiveOp], num_devices: int, algorithm: str = "ring"
+) -> dict[str, np.ndarray]:
+    """Paper Fig. 3: one matrix per collective primitive."""
+    kinds = sorted({op.kind for op in ops})
+    return {
+        k: matrix_for_ops(ops, num_devices, algorithm, kinds={k}) for k in kinds
+    }

@@ -1,0 +1,166 @@
+"""Event datatypes for communication monitoring.
+
+Two sources of truth, mirroring the paper's design (ComScribe intercepts NCCL
+calls; we additionally read the compiled program):
+
+* ``TraceEvent``   -- a collective the *application* issued, captured at trace
+  time by the interceptor (the LD_PRELOAD analogue).
+* ``CollectiveOp`` -- a collective the *compiler* emitted, extracted from the
+  compiled HLO module (the ground truth for wire traffic on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Bytes per element for HLO dtype names.
+DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e4m3": 1,
+}
+
+# Canonical collective kinds (HLO opcode spelling).
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+
+@dataclasses.dataclass
+class Shape:
+    dtype: str
+    dims: tuple[int, ...]
+
+    @property
+    def num_elements(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.num_elements * DTYPE_BYTES.get(self.dtype, 4)
+
+    def __repr__(self) -> str:
+        return f"{self.dtype}[{','.join(map(str, self.dims))}]"
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    """One collective op from a compiled (SPMD-partitioned, per-device) module."""
+
+    kind: str                            # one of COLLECTIVE_KINDS
+    name: str                            # HLO instruction name, e.g. %all-reduce.2
+    result_shapes: list[Shape]           # tuple results flattened
+    replica_groups: list[list[int]]      # explicit groups (possibly from iota form)
+    channel_id: Optional[int] = None
+    dimensions: tuple[int, ...] = ()     # gather/scatter/a2a dimension(s)
+    source_target_pairs: list[tuple[int, int]] = dataclasses.field(default_factory=list)
+    op_name: str = ""                    # metadata op_name (jax source op)
+    weight: float = 1.0                  # execution count (while trip counts)
+
+    # ------------------------------------------------------------------
+    # Byte accounting.  The compiled module is per-device: result shapes are
+    # the *local* post-op shapes.  ``payload_bytes`` is the full logical
+    # payload S of the collective (paper Table 1's S), per group.
+    # ------------------------------------------------------------------
+    @property
+    def group_size(self) -> int:
+        if self.replica_groups:
+            return len(self.replica_groups[0])
+        if self.source_target_pairs:
+            return len({d for p in self.source_target_pairs for d in p})
+        return 1
+
+    @property
+    def num_groups(self) -> int:
+        return max(1, len(self.replica_groups))
+
+    @property
+    def result_bytes(self) -> int:
+        return sum(s.bytes for s in self.result_shapes)
+
+    @property
+    def payload_bytes(self) -> int:
+        """Full logical payload S per group (bytes)."""
+        n = self.group_size
+        if self.kind == "all-reduce":
+            # result (local) == full reduced tensor
+            return self.result_bytes
+        if self.kind in ("all-gather", "collective-broadcast"):
+            # result is the gathered tensor == S
+            return self.result_bytes
+        if self.kind == "reduce-scatter":
+            # result is S/N
+            return self.result_bytes * n
+        if self.kind in ("all-to-all", "ragged-all-to-all"):
+            # each rank holds S/N in and out; define S as the full exchanged set
+            return self.result_bytes * n
+        if self.kind == "collective-permute":
+            return self.result_bytes
+        return self.result_bytes
+
+    def wire_bytes_per_rank(self, algorithm: str = "ring") -> float:
+        """Bytes *sent* by one participating rank (paper Table 1 analogue)."""
+        from . import cost_models
+
+        return cost_models.wire_bytes_per_rank(
+            self.kind, self.payload_bytes, self.group_size, algorithm
+        )
+
+    def wire_bytes_total(self, algorithm: str = "ring") -> float:
+        """Bytes on the wire summed over every rank in every group,
+        weighted by execution count (while-loop trip counts)."""
+        if self.kind == "collective-permute":
+            return float(self.result_bytes
+                         * max(1, len(self.source_target_pairs))) * self.weight
+        return (self.wire_bytes_per_rank(algorithm) * self.group_size
+                * self.num_groups * self.weight)
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """A collective issued by user code, captured by the interceptor."""
+
+    primitive: str                       # e.g. "psum", "all_gather", "ppermute"
+    axis_name: str                       # mesh axis (or tuple repr)
+    arg_shapes: list[Shape]
+    axis_size: Optional[int] = None      # resolved group size if known
+    call_site: str = ""                  # abbreviated stack location
+
+    @property
+    def payload_bytes(self) -> int:
+        return sum(s.bytes for s in self.arg_shapes)
+
+
+@dataclasses.dataclass
+class HostTransfer:
+    """Host<->device transfer (paper's row/col 0); recorded by the data layer."""
+
+    direction: str                       # "h2d" | "d2h"
+    device: int
+    nbytes: int
+    label: str = ""
+
+
+def jax_shape(x) -> Shape:
+    """Shape from a jax array / ShapeDtypeStruct / np array."""
+    dt = str(x.dtype)
+    dt = {"float32": "f32", "float64": "f64", "float16": "f16",
+          "bfloat16": "bf16", "int32": "s32", "int64": "s64",
+          "int16": "s16", "int8": "s8", "uint32": "u32", "uint64": "u64",
+          "uint16": "u16", "uint8": "u8", "bool": "pred"}.get(dt, dt)
+    return Shape(dtype=dt, dims=tuple(x.shape))

@@ -1,0 +1,177 @@
+"""Extract collective-communication ops from compiled HLO text.
+
+This is the TPU/XLA analogue of the paper's NCCL interception: on TPU the
+*compiler* decides the communication schedule, so the compiled (SPMD
+partitioned, per-device) module is the ground truth.  We parse
+``compiled.as_text()`` for every collective op, its result shape(s),
+replica groups (explicit or iota form) and metadata.
+
+The parser is line-oriented and regex-based; HLO prints one instruction per
+line.  Async pairs (``all-gather-start``/``-done``) are counted once at the
+``-start``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterable
+
+import numpy as np
+
+from .events import COLLECTIVE_KINDS, CollectiveOp, Shape
+
+# ----------------------------------------------------------------------------
+# Shape parsing
+# ----------------------------------------------------------------------------
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128"
+    r"|f8e4m3fn|f8e4m3b11fnuz|f8e4m3fnuz|f8e5m2fnuz|f8e5m2|f8e3m4|f8e4m3)"
+    r"\[([0-9,]*)\]"
+)
+
+
+def _parse_shapes(text: str) -> list[Shape]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d != "")
+        out.append(Shape(dtype=m.group(1), dims=dims))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Replica-group parsing: explicit {{0,1},{2,3}} and iota [4,2]<=[8] or
+# [2,4]<=[4,2]T(1,0) forms.
+# ----------------------------------------------------------------------------
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[0-9,{}\s]*\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+
+
+def parse_replica_groups(line: str) -> list[list[int]]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        group_shape = [int(x) for x in m.group(1).split(",")]
+        src_dims = [int(x) for x in m.group(2).split(",")]
+        v = np.arange(int(np.prod(src_dims))).reshape(src_dims)
+        if m.group(3):
+            perm = [int(x) for x in m.group(3).split(",")]
+            v = v.transpose(perm)
+        v = v.reshape(group_shape)
+        return [list(map(int, row)) for row in v]
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        inner = m.group(1)
+        groups = re.findall(r"\{([0-9,\s]*)\}", inner)
+        return [
+            [int(x) for x in g.replace(" ", "").split(",") if x != ""]
+            for g in groups
+        ]
+    return []
+
+
+_PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+_DIMS_RE = re.compile(r"dimensions=\{([0-9,]*)\}")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+# instruction: [ROOT] %name = <result-type> opcode(
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute"
+    r"|collective-broadcast|ragged-all-to-all)"
+    r"(-start)?\s*\("
+)
+
+
+_PROMOTED_RE = re.compile(r"to_apply=%?\S*promoted")
+
+
+def parse_hlo_collectives(hlo_text: str) -> list[CollectiveOp]:
+    """Parse all collective ops from HLO text (one per async pair).
+
+    XLA:CPU *promotes* bf16 all-reduces to f32 (convert -> AR(f32) ->
+    convert, reduction computation named ``*_promoted``); TPU reduces bf16
+    natively.  Promoted ops are accounted at their pre-promotion width.
+    """
+    ops: list[CollectiveOp] = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line or "=" not in line:
+            continue
+        m = _INSTR_RE.match(line)
+        if m is None:
+            continue
+        name, result_text, kind, _start = m.group(1), m.group(2), m.group(3), m.group(4)
+        # skip fusions that merely *consume* a collective: opcode must follow '='
+        result_shapes = _parse_shapes(result_text)
+        if _PROMOTED_RE.search(line):
+            result_shapes = [
+                Shape("bf16", s.dims) if s.dtype == "f32" else s
+                for s in result_shapes]
+        # async-start results repeat operand + result; dedupe: the final shape
+        # tuple of a start op is ((operands), results, ...) -- keep the result
+        # entries only for the common (operand, result, u32[]) layout.
+        if _start and len(result_shapes) >= 2:
+            # all-gather-start: (op, result); all-reduce-start: same shape
+            half = len(result_shapes) // 2
+            result_shapes = result_shapes[half:] or result_shapes
+        groups = parse_replica_groups(line)
+        pairs = []
+        pm = _PAIRS_RE.search(line)
+        if pm:
+            pairs = [
+                tuple(int(x) for x in p.split(","))
+                for p in re.findall(r"\{(\d+,\d+)\}", pm.group(1))
+            ]
+        cm = _CHANNEL_RE.search(line)
+        dm = _DIMS_RE.search(line)
+        om = _OPNAME_RE.search(line)
+        ops.append(
+            CollectiveOp(
+                kind=kind,
+                name=name,
+                result_shapes=result_shapes,
+                replica_groups=groups,
+                channel_id=int(cm.group(1)) if cm else None,
+                dimensions=tuple(int(x) for x in dm.group(1).split(",") if x)
+                if dm
+                else (),
+                source_target_pairs=pairs,
+                op_name=om.group(1) if om else "",
+            )
+        )
+    return ops
+
+
+# ----------------------------------------------------------------------------
+# Summaries
+# ----------------------------------------------------------------------------
+def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring") -> dict:
+    """Paper Table-2/3-style summary: per-kind call counts and byte totals.
+
+    Counts are execution-weighted: an op inside a while body with trip count
+    64 contributes 64 calls (loop-aware, see hlo_cost.py).
+    """
+    table: dict[str, dict] = {}
+    for op in ops:
+        row = table.setdefault(
+            op.kind,
+            {"calls": 0, "payload_bytes": 0, "wire_bytes": 0.0},
+        )
+        row["calls"] += int(op.weight)
+        row["payload_bytes"] += int(op.payload_bytes * op.num_groups * op.weight)
+        row["wire_bytes"] += op.wire_bytes_total(algorithm)
+    return table
+
+
+def total_wire_bytes(ops: Iterable[CollectiveOp], algorithm: str = "ring") -> float:
+    """Global bytes-on-the-wire across all devices (roofline numerator)."""
+    return float(sum(op.wire_bytes_total(algorithm) for op in ops))
+
+
+def count_by_opname(ops: Iterable[CollectiveOp]) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for op in ops:
+        key = op.op_name or "<unattributed>"
+        out[key] = out.get(key, 0) + 1
+    return out

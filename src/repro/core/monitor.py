@@ -1,0 +1,217 @@
+"""High-level monitoring API — ComScribe's workflow, end to end.
+
+The paper's workflow (Fig. 1): preload shim -> record transfers during
+execution -> post-process into matrices + statistics.  Ours:
+
+1. **intercept**: trace the function under a scoped primitive hook
+   (:mod:`repro.core.interceptor`) -> logical, application-issued collectives;
+2. **extract**: compile and parse the SPMD module
+   (:mod:`repro.core.hlo_parser`) -> physical, compiler-scheduled collectives;
+3. **post-process**: per-primitive statistics (Tables 2/3), ``(d+1)^2``
+   communication matrices (Figs. 2/3), logical-vs-physical diff, and the
+   roofline terms used by the perf loop.
+
+``monitor_fn`` is the one-call entry point used by examples, benchmarks and
+the dry-run launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from . import comm_matrix, cost_models, hlo_parser, reporter, roofline
+from .events import CollectiveOp, HostTransfer, TraceEvent
+from .interceptor import CollectiveInterceptor
+from .topology import MeshTopology, V5E
+
+
+@dataclasses.dataclass
+class CommReport:
+    """Everything ComScribe produces for one program, plus the TPU extras."""
+
+    name: str
+    num_devices: int
+    traced: list[TraceEvent]
+    compiled_ops: list[CollectiveOp]
+    traced_summary: dict
+    compiled_summary: dict
+    matrix: np.ndarray                      # (d+1)x(d+1) bytes, row/col 0 host
+    per_primitive: dict[str, np.ndarray]
+    cost: dict
+    memory_stats: Optional[dict]
+    trace_seconds: float
+    compile_seconds: float
+    topo: Optional[MeshTopology] = None
+    host_transfers: list[HostTransfer] = dataclasses.field(default_factory=list)
+
+    # -- paper-style renderings -------------------------------------------
+    def usage_table(self) -> str:
+        return reporter.primitive_usage_table(
+            self.compiled_summary, title=f"{self.name}: compiled collectives")
+
+    def logical_table(self) -> str:
+        return reporter.primitive_usage_table(
+            self.traced_summary, title=f"{self.name}: traced (application) collectives")
+
+    def heatmap(self, kind: Optional[str] = None) -> str:
+        mat = self.per_primitive.get(kind, self.matrix) if kind else self.matrix
+        t = f"{self.name} comm matrix" + (f" [{kind}]" if kind else "")
+        return reporter.ascii_heatmap(mat, title=t)
+
+    def diff(self) -> str:
+        return reporter.diff_table(self.traced_summary, self.compiled_summary)
+
+    def total_wire_bytes(self, algorithm: str = "ring") -> float:
+        return hlo_parser.total_wire_bytes(self.compiled_ops, algorithm)
+
+    def collective_seconds(self, algorithm: str = "ring") -> float:
+        if self.topo is None:
+            return 0.0
+        return cost_models.total_time(self.compiled_ops, self.topo, algorithm)
+
+    def render(self) -> str:
+        parts = [
+            f"### CommReport: {self.name} ({self.num_devices} devices) ###",
+            self.logical_table(),
+            self.usage_table(),
+            "-- traced vs compiled --",
+            self.diff(),
+            self.heatmap(),
+        ]
+        parts.append(
+            f"trace {self.trace_seconds * 1e3:.1f} ms | "
+            f"compile {self.compile_seconds * 1e3:.1f} ms | "
+            f"wire bytes (all devices) {reporter.human_bytes(self.total_wire_bytes())}")
+        return "\n\n".join(parts)
+
+    def save(self, path: str):
+        reporter.dump_report(
+            path,
+            summary=self.compiled_summary,
+            ops=self.compiled_ops,
+            matrix=self.matrix,
+            extra={
+                "name": self.name,
+                "traced_summary": self.traced_summary,
+                "num_devices": self.num_devices,
+                "cost": {k: v for k, v in self.cost.items()
+                         if isinstance(v, (int, float))},
+            },
+        )
+
+
+def _memory_stats(compiled) -> Optional[dict]:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": m.argument_size_in_bytes,
+            "output_bytes": m.output_size_in_bytes,
+            "temp_bytes": m.temp_size_in_bytes,
+            "alias_bytes": m.alias_size_in_bytes,
+            "generated_code_bytes": m.generated_code_size_in_bytes,
+            "total_bytes": (m.argument_size_in_bytes + m.output_size_in_bytes
+                            + m.temp_size_in_bytes - m.alias_size_in_bytes),
+        }
+    except Exception:
+        return None
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0] if c else {}
+        return dict(c)
+    except Exception:
+        return {}
+
+
+def monitor_fn(
+    fn,
+    *args,
+    mesh=None,
+    name: str = "fn",
+    in_shardings=None,
+    out_shardings=None,
+    donate_argnums=(),
+    static_argnums=(),
+    algorithm: str = "ring",
+    host_transfers: Optional[list[HostTransfer]] = None,
+    **kwargs,
+) -> CommReport:
+    """Monitor a function end-to-end: trace (intercepted) + compile + parse.
+
+    ``args``/``kwargs`` may be concrete arrays or ``jax.ShapeDtypeStruct``
+    stand-ins (the dry-run path: no device memory is allocated).
+    """
+    jit_kw: dict[str, Any] = {}
+    if in_shardings is not None:
+        jit_kw["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        jit_kw["out_shardings"] = out_shardings
+    if donate_argnums:
+        jit_kw["donate_argnums"] = donate_argnums
+    if static_argnums:
+        jit_kw["static_argnums"] = static_argnums
+
+    jitted = jax.jit(fn, **jit_kw)
+
+    t0 = time.perf_counter()
+    with CollectiveInterceptor(mesh=mesh) as icpt:
+        lowered = jitted.lower(*args, **kwargs)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    hlo_text = compiled.as_text()
+    # loop-aware extraction: ops inside while bodies carry execution weights
+    from . import hlo_cost
+    ops = hlo_cost.analyze_hlo(hlo_text).collectives
+    num_devices = int(np.prod(mesh.devices.shape)) if mesh is not None else jax.device_count()
+    topo = MeshTopology.from_mesh(mesh) if mesh is not None else None
+
+    mat = comm_matrix.matrix_for_ops(ops, num_devices, algorithm)
+    if host_transfers:
+        comm_matrix.add_host_transfers(mat, host_transfers)
+    report = CommReport(
+        name=name,
+        num_devices=num_devices,
+        traced=list(icpt.events),
+        compiled_ops=ops,
+        traced_summary=icpt.summary(),
+        compiled_summary=hlo_parser.summarize(ops, algorithm),
+        matrix=mat,
+        per_primitive=comm_matrix.per_primitive_matrices(ops, num_devices, algorithm),
+        cost=_cost_analysis(compiled),
+        memory_stats=_memory_stats(compiled),
+        trace_seconds=t1 - t0,
+        compile_seconds=t2 - t1,
+        topo=topo,
+        host_transfers=list(host_transfers or []),
+    )
+    # stash the artifacts for roofline / debugging without re-compiling
+    report._lowered = lowered
+    report._compiled = compiled
+    report._hlo_text = hlo_text
+    return report
+
+
+def roofline_of(report: CommReport, *, arch: str = "", mesh_name: str = "",
+                model_flops: float = 0.0,
+                algorithm: str = "ring") -> roofline.RooflineReport:
+    assert report.topo is not None, "monitor_fn needs mesh= for roofline"
+    return roofline.analyze(
+        arch=arch or report.name,
+        mesh_name=mesh_name,
+        cost=report.cost,
+        hlo_text=report._hlo_text,
+        topo=report.topo,
+        hw=report.topo.hw if report.topo else V5E,
+        model_flops=model_flops,
+        memory_stats=report.memory_stats,
+        algorithm=algorithm,
+    )

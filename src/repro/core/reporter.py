@@ -1,0 +1,194 @@
+"""Human/machine-readable reports: the paper's tables, matrices and heatmaps.
+
+Everything ComScribe emits, we emit:
+
+* per-primitive call-count / byte tables (paper Tables 2 & 3),
+* the ``(d+1) x (d+1)`` communication matrix rendered as an ASCII heatmap in
+  log scale (paper Figs. 2 & 3) plus CSV/JSON for machine consumption,
+* the traced-vs-compiled diff table (beyond-paper: visible compiler-inserted
+  communication).
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Iterable, Optional
+
+import numpy as np
+
+from .events import CollectiveOp
+
+# ---------------------------------------------------------------------------
+# formatting helpers
+# ---------------------------------------------------------------------------
+_UNITS = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"]
+
+
+def human_bytes(n: float) -> str:
+    n = float(n)
+    if n <= 0:
+        return "0 B"
+    k = min(len(_UNITS) - 1, int(math.log(n, 1024)))
+    return f"{n / 1024 ** k:,.2f} {_UNITS[k]}"
+
+
+def format_table(rows: list[list[str]], header: list[str]) -> str:
+    widths = [len(h) for h in header]
+    for r in rows:
+        for i, c in enumerate(r):
+            widths[i] = max(widths[i], len(str(c)))
+    def fmt(row):
+        return " | ".join(str(c).ljust(w) for c, w in zip(row, widths))
+    sep = "-+-".join("-" * w for w in widths)
+    return "\n".join([fmt(header), sep] + [fmt(r) for r in rows])
+
+
+# ---------------------------------------------------------------------------
+# paper Table 2/3 — primitive usage analysis
+# ---------------------------------------------------------------------------
+def primitive_usage_table(summary: dict, title: str = "") -> str:
+    """``summary`` maps primitive name -> {calls, payload_bytes[, wire_bytes]}."""
+    rows = []
+    for name in sorted(summary, key=lambda k: -summary[k].get("payload_bytes", 0)):
+        row = summary[name]
+        cells = [name, f"{row['calls']:,}", human_bytes(row.get("payload_bytes", 0))]
+        if "wire_bytes" in row:
+            cells.append(human_bytes(row["wire_bytes"]))
+        rows.append(cells)
+    header = ["Communication Type", "Number of Calls", "Total Size"]
+    if rows and len(rows[0]) == 4:
+        header.append("Wire Bytes")
+    out = format_table(rows, header)
+    if title:
+        out = f"== {title} ==\n{out}"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 2/3 — communication-matrix heatmap (log scale), ASCII rendering
+# ---------------------------------------------------------------------------
+_SHADES = " .:-=+*#%@"
+
+
+def ascii_heatmap(mat: np.ndarray, title: str = "", log: bool = True,
+                  max_devices: int = 32) -> str:
+    """Render a (d+1)x(d+1) byte matrix as an ASCII heatmap.
+
+    Row/col 0 is the host (paper convention).  For d > max_devices the matrix
+    is coarsened by block-summing so the rendering stays terminal-sized.
+    """
+    m = np.asarray(mat, dtype=np.float64)
+    d = m.shape[0]
+    if d > max_devices + 1:
+        # coarsen device block (keep host row/col exact)
+        dev = m[1:, 1:]
+        k = math.ceil(dev.shape[0] / max_devices)
+        nb = math.ceil(dev.shape[0] / k)
+        pad = nb * k - dev.shape[0]
+        dev = np.pad(dev, ((0, pad), (0, pad)))
+        dev = dev.reshape(nb, k, nb, k).sum(axis=(1, 3))
+        hm = np.zeros((nb + 1, nb + 1))
+        hm[1:, 1:] = dev
+        hm[0, 1:] = np.pad(m[0, 1:], (0, pad)).reshape(nb, k).sum(1)
+        hm[1:, 0] = np.pad(m[1:, 0], (0, pad)).reshape(nb, k).sum(1)
+        m = hm
+        blk = f" (device blocks of {k})"
+    else:
+        blk = ""
+    v = m.copy()
+    if log:
+        with np.errstate(divide="ignore"):
+            v = np.where(v > 0, np.log10(v), 0.0)
+    vmax = v.max() if v.max() > 0 else 1.0
+    lines = []
+    if title or blk:
+        lines.append(f"== {title}{blk} ==")
+    lines.append("    " + "".join(f"{j:>2d}" for j in range(m.shape[1])))
+    for i in range(m.shape[0]):
+        row = "".join(
+            " " + _SHADES[min(len(_SHADES) - 1, int(v[i, j] / vmax * (len(_SHADES) - 1)))]
+            for j in range(m.shape[1])
+        )
+        lines.append(f"{i:>3d} {row}")
+    lines.append(f"max cell = {human_bytes(m.max())}"
+                 + (" (log scale)" if log else ""))
+    return "\n".join(lines)
+
+
+def matrix_to_csv(mat: np.ndarray) -> str:
+    d = mat.shape[0]
+    header = "," + ",".join(["host"] + [f"gpu{i}" for i in range(d - 1)])
+    lines = [header]
+    for i in range(d):
+        name = "host" if i == 0 else f"gpu{i-1}"
+        lines.append(name + "," + ",".join(f"{mat[i, j]:.0f}" for j in range(d)))
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# traced-vs-compiled diff (beyond paper)
+# ---------------------------------------------------------------------------
+def diff_table(traced_summary: dict, compiled_summary: dict) -> str:
+    """Logical (application) vs physical (compiler) collective comparison."""
+    # map HLO kinds to NCCL-ish names for alignment
+    kind_to_name = {
+        "all-reduce": "AllReduce",
+        "all-gather": "AllGather",
+        "reduce-scatter": "ReduceScatter",
+        "all-to-all": "AllToAll",
+        "ragged-all-to-all": "AllToAll",
+        "collective-permute": "SendRecv",
+        "collective-broadcast": "Broadcast",
+    }
+    phys: dict[str, dict] = {}
+    for kind, row in compiled_summary.items():
+        name = kind_to_name.get(kind, kind)
+        agg = phys.setdefault(name, {"calls": 0, "payload_bytes": 0})
+        agg["calls"] += row["calls"]
+        agg["payload_bytes"] += row["payload_bytes"]
+    names = sorted(set(traced_summary) | set(phys))
+    rows = []
+    for n in names:
+        t = traced_summary.get(n, {"calls": 0, "payload_bytes": 0})
+        p = phys.get(n, {"calls": 0, "payload_bytes": 0})
+        rows.append([
+            n, f"{t['calls']:,}", human_bytes(t["payload_bytes"]),
+            f"{p['calls']:,}", human_bytes(p["payload_bytes"]),
+        ])
+    return format_table(
+        rows,
+        ["Primitive", "Traced Calls", "Traced Bytes",
+         "Compiled Ops", "Compiled Bytes"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# JSON dump of a full report
+# ---------------------------------------------------------------------------
+def ops_to_json(ops: Iterable[CollectiveOp]) -> list[dict]:
+    return [
+        {
+            "kind": op.kind,
+            "name": op.name,
+            "shapes": [repr(s) for s in op.result_shapes],
+            "payload_bytes": op.payload_bytes,
+            "group_size": op.group_size,
+            "num_groups": op.num_groups,
+            "op_name": op.op_name,
+        }
+        for op in ops
+    ]
+
+
+def dump_report(path: str, *, summary: dict, ops: list[CollectiveOp],
+                matrix: Optional[np.ndarray] = None, extra: Optional[dict] = None):
+    payload = {
+        "summary": summary,
+        "ops": ops_to_json(ops),
+    }
+    if matrix is not None:
+        payload["matrix"] = matrix.tolist()
+    if extra:
+        payload.update(extra)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)

@@ -1,0 +1,5 @@
+from .synthetic import (SyntheticLMData, SyntheticImageData, SyntheticSeq2Seq,
+                        host_transfer_log)
+
+__all__ = ["SyntheticLMData", "SyntheticImageData", "SyntheticSeq2Seq",
+           "host_transfer_log"]

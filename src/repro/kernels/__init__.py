@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the framework's compute hot-spots (the paper itself
+# contributes monitoring infrastructure, not kernels — these cover the model
+# substrate's roofline-dominant ops; see DESIGN.md §6).
+#
+# Each kernel package: <name>/kernel.py (pl.pallas_call + BlockSpec),
+# <name>/ops.py (jit'd dispatch wrapper w/ CPU fallback), <name>/ref.py
+# (pure-jnp oracle swept against the kernel in interpret mode).

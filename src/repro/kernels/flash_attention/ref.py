@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention: naive full-score attention.
+
+Materializes the (Sq, Skv) score matrix — O(S^2) memory, only usable at test
+scale, which is exactly its job: the Pallas kernel and the chunked XLA path
+are both validated against this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """q: (B,Sq,H,dh); k,v: (B,Skv,KVH,dh) -> (B,Sq,H,dh)."""
+    b, sq, h, dh = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg * dh ** -0.5, kf)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)

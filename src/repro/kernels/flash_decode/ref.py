@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """q: (B,H,dh); k/v: (B,L,KVH,dh); cache_len: () int32 -> (B,H,dh)."""
+    b, h, dh = q.shape
+    _, lmax, kvh, _ = k_cache.shape
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dh).astype(jnp.float32) * dh ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(lmax)
+    mask = kpos < cache_len
+    if window > 0:
+        mask &= kpos >= cache_len - window
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RG-LRU diagonal linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(x, log_a, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + x_t, scanned over axis 1.
+
+    x, log_a: (B, S, D) fp32; h0: (B, D) initial state.  Returns (B, S, D).
+    """
+    b, s, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), x.dtype)
+
+    def step(h, xs):
+        xt, lat = xs
+        h = jnp.exp(lat) * h + xt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (x.swapaxes(0, 1), log_a.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,12 @@
+from .common import (ModelConfig, ShapeConfig, Spec, ALL_SHAPES,
+                     SHAPES_BY_NAME, TRAIN_4K, PREFILL_32K, DECODE_32K,
+                     LONG_500K, init_params, param_axes, param_shapes,
+                     rms_norm, cross_entropy_loss)
+from .api import build_model
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "Spec", "ALL_SHAPES", "SHAPES_BY_NAME",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "init_params", "param_axes", "param_shapes", "rms_norm",
+    "cross_entropy_loss", "build_model",
+]

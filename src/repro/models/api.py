@@ -1,0 +1,16 @@
+"""Model factory: one entry point for all assigned architectures."""
+from __future__ import annotations
+
+from .common import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        from .xlstm import XLSTMLM
+        return XLSTMLM(cfg)
+    if cfg.family == "hybrid":
+        from .rglru import GriffinLM
+        return GriffinLM(cfg)
+    # dense / moe / vlm / audio all run on the transformer backbone
+    from .transformer import TransformerLM
+    return TransformerLM(cfg)

@@ -1,0 +1,212 @@
+"""Model substrate foundations: configs and declarative parameter specs.
+
+Models declare their parameters as a pytree of :class:`Spec` (shape + logical
+sharding axes + initializer).  From that single declaration we derive:
+
+* ``init_params``    — materialized parameters (reduced configs, smoke tests),
+* ``param_shapes``   — ``ShapeDtypeStruct`` stand-ins (full-config dry-runs,
+  no allocation),
+* ``param_axes``     — logical-axes pytree consumed by
+  :mod:`repro.parallel.sharding` to produce ``NamedSharding``.
+
+Keeping shapes/axes/init in one object is what keeps 10 architectures x 2
+meshes coherent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | vlm | audio | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # attention variants
+    qk_norm: bool = False
+    attn_window: int = 0             # 0 = full causal; >0 = sliding window
+    rope_theta: float = 10000.0
+    # layer pattern, cycled over depth: "attn" | "mlstm" | "slstm" | "rec"
+    block_pattern: tuple[str, ...] = ("attn",)
+    # modality frontend: "tokens" (LM) | "embeddings" (stubbed vlm/audio)
+    input_mode: str = "tokens"
+    tie_embeddings: bool = False
+    # recurrent blocks
+    conv_width: int = 4              # RG-LRU temporal conv width
+    d_rnn: int = 0                   # RG-LRU recurrence width (0 -> d_model)
+    mlstm_chunk: int = 256           # chunkwise-parallel mLSTM chunk length
+    norm_eps: float = 1e-6
+    # dtypes (strings to keep config hashable/serializable)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # long_500k eligibility (sub-quadratic attention / recurrent state)
+    subquadratic: bool = False
+    # optimizer preset for this scale ("adamw" | "adafactor")
+    optimizer: str = "adamw"
+    # optimizer state dtype (large models use bf16 moments to fit HBM)
+    opt_state_dtype: str = "float32"
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_rnn_(self) -> int:
+        return self.d_rnn or self.d_model
+
+    def block_kind(self, layer: int) -> str:
+        return self.block_pattern[layer % len(self.block_pattern)]
+
+    @property
+    def n_params(self) -> float:
+        """Approximate total parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        dh, nh, nkv = self.dh, self.n_heads, self.n_kv_heads
+        per_block = {}
+        attn = d * nh * dh + 2 * d * nkv * dh + nh * dh * d
+        dense_mlp = 3 * d * f
+        per_block["attn"] = attn + dense_mlp
+        if self.n_experts:
+            per_block["attn"] = attn + self.n_experts * 3 * d * f + d * self.n_experts
+        dr = self.d_rnn_
+        per_block["rec"] = (2 * d * dr + dr * self.conv_width + 2 * dr
+                            + dr * d) + 3 * d * f
+        di = 2 * d  # xlstm inner dim
+        per_block["mlstm"] = 2 * d * di + 3 * di * (dh * nh) // max(1, nh) + di * d
+        per_block["slstm"] = 4 * d * d + 4 * d * d + d * d
+        total = 0.0
+        for layer in range(self.n_layers):
+            total += per_block.get(self.block_kind(layer), per_block["attn"])
+        total += v * d * (1 if self.tie_embeddings else 2)
+        return float(total)
+
+    @property
+    def n_params_active(self) -> float:
+        """Active params per token (MoE counts top_k experts only)."""
+        if not self.n_experts:
+            return self.n_params
+        d, f = self.d_model, self.d_ff
+        inactive = (self.n_experts - self.top_k) * 3 * d * f * self.n_layers
+        return self.n_params - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# declarative parameter specs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """One parameter leaf: shape + logical axes + initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+    init: str = "fan_in"             # fan_in | normal | zeros | ones | embed | rglru_a
+    scale: float = 1.0
+    dtype: Optional[str] = None      # None -> model param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: Spec, key, param_dtype: str) -> jax.Array:
+    dt = jnp.dtype(spec.dtype or param_dtype)
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(shape, dt)
+    if spec.init == "normal":
+        return (jax.random.normal(key, shape) * spec.scale).astype(dt)
+    if spec.init == "embed":
+        return (jax.random.normal(key, shape) * spec.scale).astype(dt)
+    if spec.init == "rglru_a":
+        # Lambda init so that a = sigmoid(Lambda) ** c lies in [0.9, 0.999]
+        u = jax.random.uniform(key, shape, minval=0.9, maxval=0.999)
+        lam = jnp.log(u ** (1.0 / 8.0) / (1 - u ** (1.0 / 8.0)))
+        return lam.astype(dt)
+    if spec.init == "fan_in":
+        # fan-in on the second-to-last dim treated as input (stacked-layer
+        # leading dims are ignored for fan computation)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = spec.scale / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, shape) * std).astype(dt)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs, rng, param_dtype: str = "float32"):
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(s, k, param_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_shapes(specs, param_dtype: str = "float32"):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or param_dtype)),
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def param_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, Spec))
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# small numerics shared by every model
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean token cross-entropy in fp32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) if mask is None else mask
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

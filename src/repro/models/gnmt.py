@@ -1,0 +1,116 @@
+"""GNMT-style seq2seq (LSTM encoder/decoder + Luong attention) in JAX.
+
+The paper's machine-translation evaluation app (§4.1): a data-parallel GNMT
+whose training step the monitor profiles into Table 2 / Figs. 2-3.  This is
+a faithful-at-communication-scale compact variant: stacked LSTM encoder,
+attention decoder, shared training objective — the collective profile
+(AllReduce of every gradient, Broadcast of initial params, AllGather of
+metrics) matches the paper's table structure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Spec, init_params, param_axes, param_shapes
+
+
+def _lstm_spec(d_in, d_h):
+    return {"wx": Spec((d_in, 4 * d_h), (None, "mlp")),
+            "wh": Spec((d_h, 4 * d_h), (None, "mlp")),
+            "b": Spec((4 * d_h,), ("mlp",), init="zeros")}
+
+
+def gnmt_specs(vocab: int = 32000, d: int = 512, layers: int = 2):
+    return {
+        "embed_src": Spec((vocab, d), ("vocab", "embed"), init="embed"),
+        "embed_tgt": Spec((vocab, d), ("vocab", "embed"), init="embed"),
+        "enc": [_lstm_spec(d, d) for _ in range(layers)],
+        "dec": [_lstm_spec(d if i else 2 * d, d) for i in range(layers)],
+        "attn_w": Spec((d, d), (None, "mlp")),
+        "out": Spec((2 * d, vocab), (None, "vocab")),
+    }
+
+
+def _lstm_scan(p, xs, h0, c0):
+    """xs: (B,S,Din) -> hs (B,S,Dh)."""
+    def step(carry, x):
+        h, c = carry
+        z = x @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (h, c), hs = jax.lax.scan(step, (h0, c0), xs.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), (h, c)
+
+
+def gnmt_loss(params, batch, shd=None, remat=None):
+    """batch: {"src": (B,S), "tgt": (B,T), "labels": (B,T)}."""
+    src, tgt, labels = batch["src"], batch["tgt"], batch["labels"]
+    b, s = src.shape
+    d = params["embed_src"].shape[1]
+
+    x = jnp.take(params["embed_src"], src, axis=0)
+    h0 = jnp.zeros((b, d), x.dtype)
+    enc = x
+    for lp in params["enc"]:
+        enc, _ = _lstm_scan(lp, enc, h0, h0)
+
+    y = jnp.take(params["embed_tgt"], tgt, axis=0)
+    # Luong attention per decoder step against encoder outputs
+    keys = enc @ params["attn_w"]
+
+    def dec_step(carry, yt):
+        states = carry
+        new_states = []
+        inp = yt
+        for li, lp in enumerate(params["dec"]):
+            h, c = states[li]
+            if li == 0:
+                # attention context from previous top hidden state
+                score = jnp.einsum("bd,bsd->bs", states[-1][0], keys)
+                ctx = jnp.einsum("bs,bsd->bd", jax.nn.softmax(score), enc)
+                inp = jnp.concatenate([yt, ctx], axis=-1)
+            z = inp @ lp["wx"] + h @ lp["wh"] + lp["b"]
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            new_states.append((h, c))
+            inp = h
+        score = jnp.einsum("bd,bsd->bs", new_states[-1][0], keys)
+        ctx = jnp.einsum("bs,bsd->bd", jax.nn.softmax(score), enc)
+        out = jnp.concatenate([new_states[-1][0], ctx], axis=-1)
+        return tuple(new_states), out
+
+    states0 = tuple((h0, h0) for _ in params["dec"])
+    _, outs = jax.lax.scan(dec_step, states0, y.swapaxes(0, 1))
+    outs = outs.swapaxes(0, 1)                              # (B,T,2d)
+    logits = (outs @ params["out"]).astype(jnp.float32)
+    valid = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    loss = (nll * valid).sum() / jnp.maximum(valid.sum(), 1)
+    return loss, {"xent": loss}
+
+
+class GNMT:
+    def __init__(self, vocab: int = 32000, d: int = 512, layers: int = 2):
+        self.vocab, self.d, self.layers = vocab, d, layers
+
+    def specs(self):
+        return gnmt_specs(self.vocab, self.d, self.layers)
+
+    def init(self, rng):
+        return init_params(self.specs(), rng)
+
+    def shapes(self):
+        return param_shapes(self.specs())
+
+    def axes(self):
+        return param_axes(self.specs())
+
+    def loss_fn(self, params, batch, shd=None, remat=None):
+        return gnmt_loss(params, batch, shd, remat)

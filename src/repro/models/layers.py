@@ -1,0 +1,144 @@
+"""Shared neural layers: embeddings, projections, MLPs, chunked LM loss.
+
+All layers take ``(params, x, ...)`` plus the :class:`~repro.parallel.Sharder`
+for activation constraints, and are written against the declarative
+:class:`~repro.models.common.Spec` system.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Spec, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+def embed_spec(cfg: ModelConfig) -> dict:
+    return {"tok": Spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                        init="embed", scale=1.0)}
+
+
+def head_spec(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": Spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))}
+
+
+def mlp_spec(cfg: ModelConfig, stacked: int = 0) -> dict:
+    """GeGLU / SwiGLU MLP: gate+up projections and down projection."""
+    d, f = cfg.d_model, cfg.d_ff
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    return {
+        "wi": Spec(lead + (d, 2 * f), lax_ + ("embed", "mlp")),
+        "wo": Spec(lead + (f, d), lax_ + ("mlp", "embed")),
+    }
+
+
+def norm_spec(cfg: ModelConfig, stacked: int = 0, dim: Optional[int] = None) -> Spec:
+    d = dim or cfg.d_model
+    if stacked:
+        return Spec((stacked, d), ("layers", None), init="ones")
+    return Spec((d,), (None,), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# applies
+# ---------------------------------------------------------------------------
+def embed(params, tokens, cfg: ModelConfig, shd):
+    """Token embedding lookup with a vocab-sharded table."""
+    w = params["tok"].astype(jnp.dtype(cfg.compute_dtype))
+    out = jnp.take(w, tokens, axis=0)
+    return shd.constraint(out, ("batch", "seq", None))
+
+
+def mlp(params, x, cfg: ModelConfig, shd):
+    """SwiGLU MLP; hidden dim sharded over the model axis (TP)."""
+    dt = x.dtype
+    wi = params["wi"].astype(dt)
+    wo = params["wo"].astype(dt)
+    h = jnp.einsum("bsd,dF->bsF", x, wi)
+    h = shd.constraint(h, ("batch", "seq", "mlp"))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("bsf,fd->bsd", h, wo)
+    return shd.constraint(out, ("batch", "seq", None))
+
+
+def lm_logits(params_head, params_embed, h, cfg: ModelConfig, shd):
+    """Final logits; vocab sharded over model axis."""
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        w = params_embed["tok"].astype(dt).T
+    else:
+        w = params_head["w"].astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    return shd.constraint(logits, ("batch", "seq", "vocab"))
+
+
+def chunked_lm_loss(params_head, params_embed, h, labels, cfg: ModelConfig,
+                    shd, chunk: int = 512):
+    """Cross-entropy without materializing (B,S,V) logits.
+
+    Scans over sequence chunks; per chunk computes logits -> fp32 CE.  With
+    remat this caps logits memory at (B, chunk, V/tp) — the difference between
+    fitting and OOM for 131k-vocab models at 4k sequence.
+    """
+    b, s, d = h.shape
+    if s % chunk != 0:
+        chunk = s  # degenerate fallback (smoke tests with tiny seq)
+    n_chunks = s // chunk
+    if cfg.tie_embeddings:
+        w = params_embed["tok"].T
+    else:
+        w = params_head["w"]
+    w = w.astype(h.dtype)
+
+    hc = h.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)        # (C,B,chunk,d)
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hx, lx = xs
+        logits = jnp.einsum("bsd,dv->bsv", hx, w)
+        logits = shd.constraint(logits, ("batch", "seq", "vocab"))
+        logits = logits.astype(jnp.float32)
+        valid = lx >= 0
+        lab = jnp.maximum(lx, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = ((logz - gold) * valid).sum()
+        return (carry[0] + nll, carry[1] + valid.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32)), (hc, lc))
+    return nll / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                               # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B,S,dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+__all__ = [
+    "embed_spec", "head_spec", "mlp_spec", "norm_spec",
+    "embed", "mlp", "lm_logits", "chunked_lm_loss",
+    "apply_rope", "rms_norm",
+]

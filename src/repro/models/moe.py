@@ -1,0 +1,100 @@
+"""Mixture-of-Experts block: top-k router + capacity-bounded dense dispatch.
+
+GShard/Switch-style einsum dispatch (the TPU-native formulation: dispatch is
+a matmul, not a scatter, so it runs on the MXU and shards cleanly):
+
+* tokens are grouped (``moe_group``) so the dispatch tensor is
+  ``tokens x E x C_group`` with ``C_group = ceil(cf * k * group / E)`` —
+  linear in group size, not sequence length;
+* expert weights ``(E, d, f)`` shard E over the model axis when divisible
+  (EP: llama4's 128 experts / 16), else the hidden dim f (TP-experts:
+  grok's 8 experts);
+* an auxiliary load-balancing loss and router z-loss are returned for the
+  training objective.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, Spec
+
+MOE_GROUP = 512  # tokens per dispatch group
+
+
+def moe_spec(cfg: ModelConfig, stacked: int = 0) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    return {
+        "router": Spec(lead + (d, e), lx + ("embed", "expert"), scale=0.1),
+        "wi": Spec(lead + (e, d, 2 * f), lx + ("expert", "embed", "mlp")),
+        "wo": Spec(lead + (e, f, d), lx + ("expert", "mlp", "embed")),
+    }
+
+
+def group_capacity(cfg: ModelConfig, group: int = MOE_GROUP) -> int:
+    c = math.ceil(cfg.capacity_factor * cfg.top_k * group / cfg.n_experts)
+    return max(4, c)
+
+
+def moe_block(params, x, cfg: ModelConfig, shd, group: int = MOE_GROUP):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar fp32)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = x.dtype
+    if s % group != 0:
+        group = s                                          # tiny smoke configs
+    ng = s // group
+    c = group_capacity(cfg, group)
+
+    xg = x.reshape(b, ng, group, d)
+    router = params["router"].astype(jnp.float32)
+    logits = jnp.einsum("bGsd,de->bGse", xg.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)                # (b,G,s,e)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # (b,G,s,k)
+    if k > 1:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # choice-major position-in-expert (1st choices never dropped for 2nd)
+    counts = jnp.zeros((b, ng, e), jnp.float32)
+    dispatch = jnp.zeros((b, ng, group, e, c), jnp.float32)
+    combine = jnp.zeros((b, ng, group, e, c), jnp.float32)
+    sel_sum = jnp.zeros((b, ng, group, e), jnp.float32)
+    for ki in range(k):
+        sel_k = jax.nn.one_hot(gate_idx[..., ki], e, dtype=jnp.float32)
+        pos_k = jnp.cumsum(sel_k, axis=2) - sel_k + counts[:, :, None, :]
+        keep_k = sel_k * (pos_k < c)
+        counts = counts + sel_k.sum(axis=2)
+        oh = jax.nn.one_hot(pos_k.astype(jnp.int32), c,
+                            dtype=jnp.float32) * keep_k[..., None]
+        dispatch = dispatch + oh
+        combine = combine + gate_vals[..., ki, None, None] * oh
+        sel_sum = sel_sum + sel_k
+    dispatch = shd.constraint(dispatch, ("batch", None, "seq", "expert", None))
+    combine = shd.constraint(combine, ("batch", None, "seq", "expert", None))
+
+    # expert computation
+    wi = params["wi"].astype(dt)
+    wo = params["wo"].astype(dt)
+    xin = jnp.einsum("bGsec,bGsd->beGcd", dispatch.astype(dt), xg)
+    xin = shd.constraint(xin, ("batch", "expert", None, None, None))
+    h = jnp.einsum("beGcd,edF->beGcF", xin, wi)
+    h = shd.constraint(h, ("batch", "expert", None, None, "mlp"))
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("beGcf,efd->beGcd", h, wo)
+    out = jnp.einsum("beGcd,bGsec->bGsd", out, combine.astype(dt))
+    out = out.reshape(b, s, d)
+
+    # aux losses: load balance (Switch) + router z-loss
+    frac_tokens = jnp.mean(sel_sum, axis=(0, 1, 2))        # (e,)
+    frac_probs = jnp.mean(probs, axis=(0, 1, 2))           # (e,)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = 0.01 * lb_loss + 0.001 * z_loss
+    return shd.constraint(out, ("batch", "seq", None)), aux

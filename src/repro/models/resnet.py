@@ -1,0 +1,120 @@
+"""ResNet-18 in pure JAX — the paper's image-classification evaluation app.
+
+The paper (§4.2) profiles a data-parallel PyTorch ResNet-18 on 64x64
+ImageNet-subset images and shows how gradient bucketing changes the
+AllReduce call count (Table 3).  We reproduce that experiment with this
+model + repro.train's bucketed DDP gradient sync + the monitor.
+
+GroupNorm replaces BatchNorm (no cross-device stats; DDP does not sync BN
+statistics either, so the communication profile is unchanged — DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Spec, init_params, param_axes, param_shapes
+
+STAGES = (2, 2, 2, 2)                      # ResNet-18 basic blocks
+WIDTHS = (64, 128, 256, 512)
+
+
+def _conv_spec(cin, cout, k):
+    return Spec((k, k, cin, cout), (None, None, None, "mlp"),
+                scale=jnp.sqrt(2.0))
+
+
+def _gn_spec(c):
+    return {"scale": Spec((c,), ("mlp",), init="ones"),
+            "bias": Spec((c,), ("mlp",), init="zeros")}
+
+
+def resnet18_specs(num_classes: int = 200, in_ch: int = 3):
+    specs = {
+        "stem": {"conv": _conv_spec(in_ch, 64, 3), "gn": _gn_spec(64)},
+        "stages": [],
+        "fc": {"w": Spec((WIDTHS[-1], num_classes), (None, "mlp")),
+               "b": Spec((num_classes,), ("mlp",), init="zeros")},
+    }
+    cin = 64
+    stages = []
+    for si, (n, w) in enumerate(zip(STAGES, WIDTHS)):
+        blocks = []
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            block = {
+                "conv1": _conv_spec(cin, w, 3), "gn1": _gn_spec(w),
+                "conv2": _conv_spec(w, w, 3), "gn2": _gn_spec(w),
+            }
+            if stride != 1 or cin != w:
+                block["proj"] = _conv_spec(cin, w, 1)
+            blocks.append(block)
+            cin = w
+        stages.append(blocks)
+    specs["stages"] = stages
+    return specs
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn(x, p, groups=8):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g).astype(jnp.float32)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    x = xg.reshape(b, h, w, c).astype(x.dtype)
+    return x * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+
+
+def resnet18_apply(params, images, shd=None):
+    """images: (B, H, W, 3) -> logits (B, num_classes)."""
+    x = images
+    x = _conv(x, params["stem"]["conv"].astype(x.dtype))
+    x = jax.nn.relu(_gn(x, params["stem"]["gn"]))
+    for si, blocks in enumerate(params["stages"]):
+        for bi, bp in enumerate(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            r = x
+            y = jax.nn.relu(_gn(_conv(x, bp["conv1"].astype(x.dtype), stride),
+                                bp["gn1"]))
+            y = _gn(_conv(y, bp["conv2"].astype(x.dtype)), bp["gn2"])
+            if "proj" in bp:
+                r = _conv(x, bp["proj"].astype(x.dtype), stride)
+            x = jax.nn.relu(y + r)
+    x = x.mean(axis=(1, 2))                                 # global avg pool
+    return x @ params["fc"]["w"].astype(x.dtype) + params["fc"]["b"].astype(x.dtype)
+
+
+def resnet18_loss(params, batch, shd=None):
+    logits = resnet18_apply(params, batch["images"], shd).astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return nll, {"acc": acc}
+
+
+class ResNet18:
+    def __init__(self, num_classes: int = 200):
+        self.num_classes = num_classes
+
+    def specs(self):
+        return resnet18_specs(self.num_classes)
+
+    def init(self, rng):
+        return init_params(self.specs(), rng)
+
+    def shapes(self):
+        return param_shapes(self.specs())
+
+    def axes(self):
+        return param_axes(self.specs())
+
+    def loss_fn(self, params, batch, shd=None, remat=None):
+        return resnet18_loss(params, batch, shd)

@@ -1,0 +1,452 @@
+"""xLSTM: alternating mLSTM (matrix memory) and sLSTM (scalar memory) blocks.
+
+arXiv 2405.04517, adapted to TPU (DESIGN.md §2):
+
+* **mLSTM** — training/prefill use the *parallel (quadratic) form*: the
+  exponential-gated matrix-memory recurrence
+      C_t = f_t C_{t-1} + i_t v_t k_t^T,   h_t = C_t q_t / max(|n_t q_t|, e^-m)
+  is algebraically a decay-masked linear attention
+      h_i = sum_j exp(b_i - b_j + itilde_j - m_i) (q_i.k_j) v_j / denom ,
+  which we evaluate with the same chunked online-max scheme as flash
+  attention — no per-step matrix state, so activation memory is O(chunk^2)
+  and the 4k-token backward fits.  Decode uses the exact O(1) stabilized
+  recurrence on (C, n, m).  Both paths agree to fp32 tolerance
+  (tests/test_xlstm.py).
+* **sLSTM** — inherently sequential (recurrent weights); two-level scan
+  (outer chunks rematted) bounds backward memory.
+
+Assignment: 48L, d_model 2048, 4 heads.  We alternate (mLSTM, sLSTM) 1:1 —
+the paper's 1.3B uses an mLSTM-heavy ratio; noted in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .common import ModelConfig, Spec, init_params, param_axes, param_shapes, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+def mlstm_spec(cfg: ModelConfig, stacked: int = 0) -> dict:
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.n_heads
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    return {
+        "norm": layers.norm_spec(cfg, stacked=stacked),
+        "w_up": Spec(lead + (d, 2 * di), lx + ("embed", "inner")),
+        "conv_w": Spec(lead + (cfg.conv_width, di), lx + ("conv", "inner"), scale=0.5),
+        "conv_b": Spec(lead + (di,), lx + ("inner",), init="zeros"),
+        "wq": Spec(lead + (di, di), lx + ("inner", None)),
+        "wk": Spec(lead + (di, di), lx + ("inner", None)),
+        "wv": Spec(lead + (di, di), lx + ("inner", None)),
+        "w_i": Spec(lead + (di, nh), lx + ("inner", None), scale=0.1),
+        "b_i": Spec(lead + (nh,), lx + (None,), init="zeros"),
+        "w_f": Spec(lead + (di, nh), lx + ("inner", None), scale=0.1),
+        "b_f": Spec(lead + (nh,), lx + (None,), init="ones"),
+        "head_norm": Spec(lead + (di,), lx + ("inner",), init="ones"),
+        "w_down": Spec(lead + (di, d), lx + ("inner", "embed")),
+    }
+
+
+def slstm_spec(cfg: ModelConfig, stacked: int = 0) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = Spec(lead + (d, d), lx + ("embed", "inner"))
+        gates[f"r_{g}"] = Spec(lead + (nh, dh, dh), lx + (None, "inner", None),
+                               scale=0.5)
+        gates[f"b_{g}"] = Spec(lead + (d,), lx + ("inner",),
+                               init="ones" if g == "f" else "zeros")
+    return {
+        "norm": layers.norm_spec(cfg, stacked=stacked),
+        **gates,
+        "head_norm": Spec(lead + (d,), lx + ("inner",), init="ones"),
+        "w_out": Spec(lead + (d, d), lx + ("inner", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM parallel (quadratic, chunked) form
+# ---------------------------------------------------------------------------
+def _mlstm_gates(p, xc):
+    """xc: (B,S,di) conv branch -> (log_f, itilde): (B,S,nh) fp32."""
+    xf = xc.astype(jnp.float32)
+    itilde = jnp.einsum("bsd,dh->bsh", xf, p["w_i"].astype(jnp.float32)) \
+        + p["b_i"].astype(jnp.float32)
+    ftilde = jnp.einsum("bsd,dh->bsh", xf, p["w_f"].astype(jnp.float32)) \
+        + p["b_f"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(ftilde)
+    return log_f, itilde
+
+
+def mlstm_parallel(q, k, v, log_f, itilde, *, chunk: int = 256):
+    """Decay-masked linear attention (the mLSTM parallel form).
+
+    q,k,v: (B,S,nh,dh); log_f,itilde: (B,S,nh).  Returns (B,S,nh,dh) fp32.
+    """
+    b, s, nh, dh = q.shape
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    bcum = jnp.cumsum(log_f, axis=1)                       # (B,S,nh)
+
+    if s <= chunk:
+        return _mlstm_block(qf, kf, vf, bcum, itilde)
+
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def reshape(x):
+        return x.reshape((b, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, bs_, is_ = map(reshape, (qf, kf, vf, bcum, itilde))
+
+    def body(_, xs):
+        qi, bi, ii, ci = xs
+        # chunk ci attends to kv chunks 0..ci (masked inside)
+        num = jnp.zeros((b, chunk, nh, dh), jnp.float32)
+        den = jnp.zeros((b, chunk, nh), jnp.float32)
+        m = jnp.full((b, chunk, nh), NEG_INF)
+
+        def inner(carry, ys):
+            num, den, m = carry
+            kj, vj, bj, ij, cj = ys
+            d_ = bi[:, :, None, :] - bj[:, None, :, :] + ij[:, None, :, :]
+            mask = (cj < ci) | ((cj == ci)
+                                & (jnp.arange(chunk)[None, :, None, None]
+                                   >= jnp.arange(chunk)[None, None, :, None]))
+            valid = (cj <= ci)
+            d_ = jnp.where(mask & valid, d_, NEG_INF)      # (B,cq,ck,nh)
+            m_new = jnp.maximum(m, d_.max(axis=2))
+            alpha = jnp.exp(m - m_new)
+            sc = jnp.einsum("bqhd,bkhd->bqkh", qi, kj) * jnp.exp(
+                d_ - m_new[:, :, None, :])
+            num = num * alpha[..., None] + jnp.einsum("bqkh,bkhd->bqhd", sc, vj)
+            den = den * alpha + sc.sum(axis=2)
+            return (num, den, m_new), None
+
+        cidx = jnp.arange(nc)
+        (num, den, m), _ = jax.lax.scan(
+            inner, (num, den, m), (ks, vs, bs_, is_, cidx))
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qs, bs_, is_, jnp.arange(nc)))
+    return outs.swapaxes(0, 1).reshape(b, s, nh, dh)
+
+
+def _mlstm_block(qf, kf, vf, bcum, itilde):
+    """Single-block quadratic evaluation (S small)."""
+    d_ = bcum[:, :, None, :] - bcum[:, None, :, :] + itilde[:, None, :, :]
+    s = qf.shape[1]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    d_ = jnp.where(mask[None, :, :, None], d_, NEG_INF)
+    m = d_.max(axis=2)                                     # (B,S,nh)
+    sc = jnp.einsum("bqhd,bkhd->bqkh", qf, kf) * jnp.exp(d_ - m[:, :, None, :])
+    num = jnp.einsum("bqkh,bkhd->bqhd", sc, vf)
+    den = sc.sum(axis=2)
+    return num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+
+def mlstm_decode_step(q, k, v, log_f, itilde, state):
+    """Exact O(1) stabilized recurrence.  q,k,v: (B,nh,dh); gates: (B,nh).
+
+    state: {"C": (B,nh,dh,dh), "n": (B,nh,dh), "m": (B,nh)}.
+    """
+    scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    m_new = jnp.maximum(log_f + state["m"], itilde)
+    fprime = jnp.exp(log_f + state["m"] - m_new)
+    iprime = jnp.exp(itilde - m_new)
+    C = state["C"] * fprime[..., None, None] + iprime[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", v.astype(jnp.float32), k.astype(jnp.float32))
+    n = state["n"] * fprime[..., None] + iprime[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C, qf)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_final_state(k, v, log_f, itilde):
+    """State after consuming a sequence (prefill).  k,v: (B,S,nh,dh)."""
+    bcum = jnp.cumsum(log_f, axis=1)
+    btot = bcum[:, -1]                                      # (B,nh)
+    d_ = btot[:, None] - bcum + itilde                      # (B,S,nh)
+    m = d_.max(axis=1)                                      # (B,nh)
+    w = jnp.exp(d_ - m[:, None])                            # (B,S,nh)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", w, vf, kf)
+    n = jnp.einsum("bsh,bshd->bhd", w, kf)
+    return {"C": C, "n": n, "m": m}
+
+
+def mlstm_block_apply(p, x, cfg: ModelConfig, shd,
+                      state: Optional[dict] = None):
+    """Full mLSTM residual block.  x: (B,S,D)."""
+    from .rglru import temporal_conv
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.n_heads
+    dh = di // nh
+    dt = x.dtype
+    b, s, _ = x.shape
+
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,dk->bsk", h, p["w_up"].astype(dt))
+    up = shd.constraint(up, ("batch", "seq", "inner"))
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_buf = None if state is None else state.get("conv")
+    xc, new_conv = temporal_conv(p, xm, cfg, conv_buf)
+    xc = jax.nn.silu(xc)
+
+    q = jnp.einsum("bsd,dk->bsk", xc, p["wq"].astype(dt)).reshape(b, s, nh, dh)
+    k = jnp.einsum("bsd,dk->bsk", xc, p["wk"].astype(dt)).reshape(b, s, nh, dh)
+    v = jnp.einsum("bsd,dk->bsk", xm, p["wv"].astype(dt)).reshape(b, s, nh, dh)
+    log_f, itilde = _mlstm_gates(p, xc)
+
+    new_state = None
+    if state is None:
+        ht = mlstm_parallel(q, k, v, log_f, itilde, chunk=cfg.mlstm_chunk)
+    elif s == 1:
+        hd, mstate = mlstm_decode_step(
+            q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], itilde[:, 0],
+            {"C": state["C"], "n": state["n"], "m": state["m"]})
+        ht = hd[:, None]
+        new_state = {**mstate, "conv": new_conv.astype(state["conv"].dtype)}
+    else:  # prefill: parallel outputs + final recurrent state
+        ht = mlstm_parallel(q, k, v, log_f, itilde, chunk=cfg.mlstm_chunk)
+        mstate = mlstm_final_state(k, v, log_f, itilde)
+        new_state = {**mstate, "conv": new_conv.astype(state["conv"].dtype)}
+
+    ht = ht.reshape(b, s, di)
+    ht = rms_norm(ht.astype(dt), p["head_norm"], cfg.norm_eps)
+    out = ht * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", out, p["w_down"].astype(dt))
+    return x + shd.constraint(out, ("batch", "seq", None)), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    di = 2 * cfg.d_model
+    nh = cfg.n_heads
+    dh = di // nh
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32),
+    }
+
+
+def mlstm_state_axes():
+    return {"C": ("batch", None, "inner", None),
+            "n": ("batch", None, "inner"),
+            "m": ("batch", None),
+            "conv": ("batch", None, "inner")}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential; two-level rematted scan)
+# ---------------------------------------------------------------------------
+def _slstm_step(p, carry, xg, nh, dh):
+    """One sLSTM step.  carry: (c,n,m,hprev) each (B,d); xg: dict of (B,d)."""
+    c, n, m, hp = carry
+    b = xg["z"].shape[0]
+    hph = hp.reshape(b, nh, dh)
+
+    def rec(g):
+        return jnp.einsum("bhd,hde->bhe", hph,
+                          p[f"r_{g}"].astype(jnp.float32)).reshape(b, nh * dh)
+
+    zt = jnp.tanh(xg["z"] + rec("z"))
+    it = xg["i"] + rec("i")
+    ft = xg["f"] + rec("f")
+    ot = jax.nn.sigmoid(xg["o"] + rec("o"))
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    fprime = jnp.exp(log_f + m - m_new)
+    iprime = jnp.exp(it - m_new)
+    c_new = fprime * c + iprime * zt
+    n_new = fprime * n + iprime
+    h = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h), h
+
+
+def slstm_apply(p, x, cfg: ModelConfig, shd, state: Optional[dict] = None,
+                chunk: int = 256):
+    """x: (B,S,D) -> (out, new_state).  Sequential over time."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    b, s, _ = x.shape
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    xf = h_in.astype(jnp.float32)
+    xg = {g: jnp.einsum("bsd,dk->bsk", xf, p[f"w_{g}"].astype(jnp.float32))
+          + p[f"b_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    if state is None:
+        carry = (jnp.zeros((b, d)), jnp.zeros((b, d)),
+                 jnp.full((b, d), -1e30), jnp.zeros((b, d)))
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+
+    def step(carry, xs):
+        return _slstm_step(p, carry, xs, nh, dh)
+
+    if s == 1:
+        carry, hs = step(carry, {g: xg[g][:, 0] for g in xg})
+        hs = hs[:, None]
+    else:
+        cs = chunk if s % chunk == 0 and s > chunk else s
+
+        def outer(carry, xs):
+            def inner(c2, ys):
+                return step(c2, ys)
+            carry, hs = jax.lax.scan(inner, carry, xs)
+            return carry, hs
+
+        xs = {g: xg[g].reshape(b, s // cs, cs, d).transpose(1, 2, 0, 3)
+              for g in xg}
+        outer_r = jax.checkpoint(outer)
+        carry, hs = jax.lax.scan(outer_r, carry, xs)       # (nc, cs, B, d)
+        hs = hs.reshape(s, b, d).transpose(1, 0, 2)
+
+    new_state = None
+    if state is not None:
+        new_state = {"c": carry[0], "n": carry[1], "m": carry[2],
+                     "h": carry[3]}
+    dt = x.dtype
+    hs = rms_norm(hs.astype(dt), p["head_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", hs, p["w_out"].astype(dt))
+    return x + shd.constraint(out, ("batch", "seq", None)), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d)), "n": jnp.zeros((batch, d)),
+            "m": jnp.full((batch, d), -1e30), "h": jnp.zeros((batch, d))}
+
+
+def slstm_state_axes():
+    a = ("batch", "inner")
+    return {"c": a, "n": a, "m": a, "h": a}
+
+
+# ---------------------------------------------------------------------------
+# the model: scan over (mLSTM, sLSTM) superblocks
+# ---------------------------------------------------------------------------
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.n_layers % 2 == 0
+        self.n_super = cfg.n_layers // 2
+
+    def specs(self):
+        cfg, ns = self.cfg, self.n_super
+        return {
+            "embed": layers.embed_spec(cfg),
+            "super": {
+                "mlstm": mlstm_spec(cfg, stacked=ns),
+                "slstm": slstm_spec(cfg, stacked=ns),
+            },
+            "final_norm": layers.norm_spec(cfg),
+            "head": layers.head_spec(cfg),
+        }
+
+    def init(self, rng):
+        return init_params(self.specs(), rng, self.cfg.param_dtype)
+
+    def shapes(self):
+        return param_shapes(self.specs(), self.cfg.param_dtype)
+
+    def axes(self):
+        return param_axes(self.specs())
+
+    def _super_fwd(self, x, sp, shd):
+        x, _ = mlstm_block_apply(sp["mlstm"], x, self.cfg, shd)
+        x, _ = slstm_apply(sp["slstm"], x, self.cfg, shd)
+        return x
+
+    def loss_fn(self, params, batch, shd, remat: Optional[str] = None):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], batch["tokens"], cfg, shd)
+
+        def body(carry, sp):
+            f = jax.checkpoint(
+                lambda c, s_: self._super_fwd(c, s_, shd),
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            return f(carry, sp), None
+
+        x, _ = jax.lax.scan(body, x, params["super"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        loss = layers.chunked_lm_loss(params.get("head"), params["embed"], x,
+                                      batch["labels"], cfg, shd)
+        return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype: str = "bfloat16"):
+        cfg, ns = self.cfg, self.n_super
+
+        def stack(tree):
+            return jax.tree.map(lambda a: jnp.zeros((ns,) + a.shape, a.dtype),
+                                tree)
+
+        return {"mlstm": stack(init_mlstm_state(cfg, batch)),
+                "slstm": stack(init_slstm_state(cfg, batch)),
+                "len": jnp.zeros((), jnp.int32)}
+
+    def cache_shapes(self, batch: int, max_len: int, dtype: str = "bfloat16"):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, dtype))
+
+    def cache_axes(self):
+        st = lambda d: {k: ("stack",) + v for k, v in d.items()}
+        return {"mlstm": st(mlstm_state_axes()),
+                "slstm": st(slstm_state_axes()), "len": ()}
+
+    def _step_or_prefill(self, params, cache, batch, shd, prefill: bool):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], batch["tokens"], cfg, shd)
+        b = x.shape[0]
+
+        def body(carry, xs):
+            sp, st = xs
+            if prefill:
+                mst = init_mlstm_state(cfg, b)
+                sst = init_slstm_state(cfg, b)
+            else:
+                mst = st["m_"]
+                sst = st["s_"]
+            x1, new_m = mlstm_block_apply(sp["mlstm"], carry, cfg, shd,
+                                          state=mst)
+            x2, new_s = slstm_apply(sp["slstm"], x1, cfg, shd, state=sst)
+            return x2, {"m_": new_m, "s_": new_s}
+
+        sts = {"m_": cache["mlstm"], "s_": cache["slstm"]}
+        x, new = jax.lax.scan(body, x, (params["super"], sts))
+        new_cache = {"mlstm": new["m_"], "slstm": new["s_"],
+                     "len": cache["len"] + x.shape[1]}
+        x = rms_norm(x[:, -1:] if prefill else x, params["final_norm"],
+                     cfg.norm_eps)
+        logits = layers.lm_logits(params.get("head"), params["embed"], x,
+                                  cfg, shd)
+        return (logits[:, 0] if prefill else logits), new_cache
+
+    def decode_step(self, params, cache, batch, shd):
+        return self._step_or_prefill(params, cache, batch, shd, prefill=False)
+
+    def prefill(self, params, batch, shd, max_len: Optional[int] = None):
+        cache = self.init_cache(batch["tokens"].shape[0], 0)
+        return self._step_or_prefill(params, cache, batch, shd, prefill=True)

@@ -1,0 +1,5 @@
+from .optimizers import (OptConfig, init_opt_state, apply_updates,
+                         opt_state_axes, lr_at_step)
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "opt_state_axes",
+           "lr_at_step"]

@@ -1,0 +1,149 @@
+"""Optimizers: AdamW and Adafactor on raw pytrees, dtype-configurable states.
+
+Production notes baked in:
+
+* moment dtype is configurable (`state_dtype`) — 314B/400B-class models use
+  bf16 moments (AdamW) or factored second moments (Adafactor) to fit v5e HBM
+  (EXPERIMENTS.md §Dry-run memory table);
+* optimizer state inherits the parameter's logical sharding axes
+  (`opt_state_axes`), so ZeRO-3 falls out of the same rules table;
+* global-norm gradient clipping, decoupled weight decay, linear-warmup +
+  cosine-decay schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"                  # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"         # bf16 moments for XXL models
+    # adafactor
+    factored_min_dim: int = 128          # factor 2nd moment if both dims >=
+
+
+def lr_at_step(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.decay_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.peak_lr * warm * scale
+
+
+def _is_factored(cfg: OptConfig, shape) -> bool:
+    return (cfg.name == "adafactor" and len(shape) >= 2
+            and shape[-1] >= cfg.factored_min_dim
+            and shape[-2] >= cfg.factored_min_dim)
+
+
+# ---------------------------------------------------------------------------
+# state init
+# ---------------------------------------------------------------------------
+def init_opt_state(params, cfg: OptConfig):
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def leaf(p):
+        if cfg.name == "adamw":
+            out = {"m": jnp.zeros(p.shape, sdt),
+                   "v": jnp.zeros(p.shape, sdt)}
+        elif _is_factored(cfg, p.shape):
+            out = {
+                "m": jnp.zeros(p.shape, sdt),
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        else:
+            out = {"m": jnp.zeros(p.shape, sdt),
+                   "v": jnp.zeros(p.shape, jnp.float32)}
+        if p.dtype == jnp.bfloat16:
+            # Megatron-style mixed precision: bf16 model params (grads sync
+            # natively in bf16 — half the wire bytes) + fp32 master here
+            out["w32"] = p.astype(jnp.float32)
+        return out
+
+    return jax.tree.map(leaf, params)
+
+
+def opt_state_axes(params_axes_tree, param_shapes_tree, cfg: OptConfig):
+    """Logical axes tree matching init_opt_state's structure."""
+    shape_leaves, treedef = jax.tree.flatten(param_shapes_tree)
+    axes_leaves = treedef.flatten_up_to(params_axes_tree)
+
+    out = []
+    for shp, ax in zip(shape_leaves, axes_leaves):
+        if cfg.name == "adamw" or not _is_factored(cfg, shp.shape):
+            entry = {"m": ax, "v": ax}
+        else:
+            entry = {"m": ax, "vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+        if hasattr(shp, "dtype") and shp.dtype == jnp.bfloat16:
+            entry["w32"] = ax
+        out.append(entry)
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: OptConfig, step):
+    """Returns (new_params, new_state, stats)."""
+    lr = lr_at_step(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def leaf(p, g, s):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * s["m"].astype(jnp.float32) + (1 - cfg.b1) * g
+        if "v" in s:
+            v = cfg.b2 * s["v"].astype(jnp.float32) + (1 - cfg.b2) * g * g
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            new_s = {"m": m.astype(sdt), "v": v.astype(s["v"].dtype)}
+        else:  # factored adafactor second moment
+            g2 = g * g + 1e-30
+            vr = cfg.b2 * s["vr"] + (1 - cfg.b2) * g2.mean(axis=-1)
+            vc = cfg.b2 * s["vc"] + (1 - cfg.b2) * g2.mean(axis=-2)
+            vhat_r = vr / bc2
+            vhat_c = vc / bc2
+            denom = (vhat_r[..., None] * vhat_c[..., None, :]
+                     / jnp.maximum(vhat_r.mean(-1)[..., None, None], 1e-30))
+            upd = (m / bc1) / (jnp.sqrt(denom) + cfg.eps)
+            new_s = {"m": m.astype(sdt), "vr": vr, "vc": vc}
+        master = s.get("w32", None)
+        w = master if master is not None else p.astype(jnp.float32)
+        new_w = w - lr * (upd + cfg.weight_decay * w)
+        if master is not None:
+            new_s["w32"] = new_w
+        return new_w.astype(p.dtype), new_s
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state)
+    new = [leaf(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree.unflatten(treedef, [a for a, _ in new])
+    new_state = jax.tree.unflatten(treedef, [b for _, b in new])
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,127 @@
+"""Logical-axis sharding: one rules table drives 10 architectures x 2 meshes.
+
+Every parameter/activation dimension carries a *logical* axis name
+(``"embed"``, ``"heads"``, ``"vocab"``...).  A :class:`Sharder` binds those to
+*mesh* axes through a rules table, with two production-grade twists:
+
+* **divisibility-aware fallback** — a logical dim is only sharded if its size
+  divides the mapped mesh-axes product (prefix fallback otherwise).  This is
+  what lets `llama4`'s 40 heads, `granite-3`'s 49155 vocab or `grok`'s 8
+  experts compile on a 16-way model axis without special-casing models.
+* **no axis reuse within a tensor** — first dim to claim a mesh axis wins;
+  later dims fall back or replicate.
+
+Parallelism styles expressed purely through the table (DESIGN.md §5):
+  FSDP   = "embed" -> data       (params + optimizer state sharded ZeRO-3)
+  TP     = "heads"/"mlp"/"vocab" -> model  (Megatron)
+  EP     = "expert" -> model
+  SP     = "seq" -> model        (sequence parallelism, opt-in)
+  DP     = "batch" -> (pod, data)
+  CP     = "kv_seq" -> model     (sequence-sharded KV cache for decode)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axes (in sharding-priority order)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),          # FSDP
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "rnn": ("model",),
+    "inner": ("model",),         # xlstm up-projected dim
+    "kv_seq": ("model",),        # KV-cache context parallelism (decode)
+    "attn_seq": ("model",),      # context-parallel attention (heads % tp != 0)
+    "seq": (),                   # -> ("model",) when SP enabled
+    "layers": (),
+    "conv": (),
+    "stack": (),
+}
+
+
+class Sharder:
+    """Binds logical axes to a concrete mesh; produces specs & constraints."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None,
+                 enable_sp: bool = False):
+        self.mesh = mesh
+        self.rules = dict(rules or DEFAULT_RULES)
+        if enable_sp:
+            self.rules["seq"] = ("model",)
+        self.mesh_sizes = dict(zip(map(str, mesh.axis_names), mesh.devices.shape))
+
+    # ------------------------------------------------------------------
+    def axis_size(self, mesh_axis: str) -> int:
+        return self.mesh_sizes.get(mesh_axis, 1)
+
+    def logical_size(self, logical: str) -> int:
+        """Product of mesh axes a logical name maps to (1 if unmapped)."""
+        axes = [a for a in self.rules.get(logical, ()) if a in self.mesh_sizes]
+        return int(math.prod(self.mesh_sizes[a] for a in axes)) if axes else 1
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size("model")
+
+    @property
+    def dp(self) -> int:
+        return self.logical_size("batch")
+
+    # ------------------------------------------------------------------
+    def spec(self, shape: Sequence[int],
+             axes: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for a tensor, divisibility-aware, no axis reuse."""
+        assert len(shape) == len(axes), (shape, axes)
+        used: set[str] = set()
+        entries = []
+        for dim, logical in zip(shape, axes):
+            if logical is None:
+                entries.append(None)
+                continue
+            mesh_axes = [a for a in self.rules.get(logical, ())
+                         if a in self.mesh_sizes and a not in used]
+            # prefix fallback: drop trailing axes until the product divides
+            while mesh_axes and dim % math.prod(
+                    self.mesh_sizes[a] for a in mesh_axes) != 0:
+                mesh_axes.pop()
+            if not mesh_axes:
+                entries.append(None)
+                continue
+            used.update(mesh_axes)
+            entries.append(tuple(mesh_axes) if len(mesh_axes) > 1 else mesh_axes[0])
+        return P(*entries)
+
+    def named(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def constraint(self, x, axes):
+        """with_sharding_constraint by logical axes (shape-aware)."""
+        return jax.lax.with_sharding_constraint(x, self.named(x.shape, axes))
+
+    # ------------------------------------------------------------------
+    def tree_shardings(self, shapes_tree, axes_tree):
+        """NamedSharding pytree for (ShapeDtypeStruct tree, axes tree).
+
+        ``axes_tree`` leaves are tuples of logical names; since tuples are
+        pytree nodes we flatten it *up to* the shapes tree's structure.
+        """
+        shape_leaves, treedef = jax.tree.flatten(shapes_tree)
+        axes_leaves = treedef.flatten_up_to(axes_tree)
+        out = [self.named(s.shape, a) for s, a in zip(shape_leaves, axes_leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+def logical_to_spec(sharder: Sharder, shape, axes) -> P:
+    return sharder.spec(shape, axes)

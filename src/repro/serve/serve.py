@@ -1,0 +1,84 @@
+"""Serving layer: batched prefill + decode steps over sharded caches.
+
+Decode-shape cells (``decode_32k``, ``long_500k``) lower ``serve_step`` — one
+new token against a seq_len-deep cache.  Cache sharding comes from the same
+logical-rules table as everything else: KV caches shard their sequence dim
+over the model axis (context parallelism), recurrent states shard their
+feature dim; batch shards over (pod, data).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import Sharder
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 2048
+    batch: int = 8
+    cache_dtype: str = "bfloat16"
+    temperature: float = 0.0             # 0 -> greedy
+
+
+def cache_shardings(model, serve_cfg: ServeConfig, shd: Sharder):
+    shapes = model.cache_shapes(serve_cfg.batch, serve_cfg.max_len,
+                                serve_cfg.cache_dtype)
+    axes = model.cache_axes()
+    return shd.tree_shardings(shapes, axes)
+
+
+def make_decode_step(model, shd: Sharder, serve_cfg: ServeConfig,
+                     params_sh=None, donate_cache: bool = True):
+    """jit'd decode_step(params, cache, batch) -> (logits, cache)."""
+    cache_sh = cache_shardings(model, serve_cfg, shd)
+
+    def step(params, cache, batch):
+        return model.decode_step(params, cache, batch, shd)
+
+    kw = dict(in_shardings=(params_sh, cache_sh, None),
+              out_shardings=(None, cache_sh))
+    if donate_cache:
+        kw["donate_argnums"] = (1,)
+    return jax.jit(step, **kw), cache_sh
+
+
+def make_prefill_step(model, shd: Sharder, serve_cfg: ServeConfig,
+                      params_sh=None):
+    cache_sh = cache_shardings(model, serve_cfg, shd)
+
+    def step(params, batch):
+        return model.prefill(params, batch, shd, max_len=serve_cfg.max_len)
+
+    return jax.jit(step, in_shardings=(params_sh, None),
+                   out_shardings=(None, cache_sh)), cache_sh
+
+
+def generate(model, params, prompts, shd: Sharder, *, steps: int = 16,
+             max_len: int = 256, rng=None, temperature: float = 0.0):
+    """Greedy/temperature batched generation (examples + integration tests)."""
+    scfg = ServeConfig(max_len=max_len, batch=prompts.shape[0],
+                       temperature=temperature)
+    prefill, _ = make_prefill_step(model, shd, scfg)
+    decode, _ = make_decode_step(model, shd, scfg, donate_cache=False)
+    logits, cache = prefill(params, {"tokens": prompts})
+    toks = []
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def sample(logits, rng):
+        if temperature > 0:
+            return jax.random.categorical(rng, logits / temperature, axis=-1)
+        return jnp.argmax(logits, axis=-1)
+
+    tok = sample(logits.astype(jnp.float32), rng)
+    toks.append(tok)
+    for i in range(steps - 1):
+        rng, k = jax.random.split(rng)
+        logits, cache = decode(params, cache, {"tokens": tok[:, None]})
+        tok = sample(logits[:, -1].astype(jnp.float32), k)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

@@ -1,0 +1,5 @@
+from .train import TrainConfig, TrainState, make_train_step, init_train_state, train_state_shardings
+from . import ddp
+
+__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_train_state",
+           "train_state_shardings", "ddp"]

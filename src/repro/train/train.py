@@ -1,0 +1,152 @@
+"""Training loop core: jit-compiled train step with GSPMD parallelism.
+
+Collectives here are *compiler-scheduled* (FSDP all-gather/reduce-scatter, TP
+psum, DP all-reduce) — the monitor's traced-vs-compiled diff shows zero traced
+calls and the full compiled schedule, the TPU-native inversion of the paper's
+NCCL view (DESIGN.md §2).
+
+Features: microbatch gradient accumulation (collectives hoisted out of the
+scan), bf16 gradient communication (halves FSDP/DP wire bytes; §Perf),
+donated state, deterministic metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import OptConfig, apply_updates, init_opt_state, opt_state_axes
+from repro.parallel import Sharder
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: str = "dots"                  # none | dots | full
+    grad_dtype: str = "float32"          # "bfloat16" halves grad-sync bytes
+    accum_dtype: str = "float32"         # bf16 halves the accumulation buffer
+    seed: int = 0
+
+
+TrainState = dict  # {"params": pytree, "opt": pytree, "step": int32}
+
+
+def init_train_state(model, opt_cfg: OptConfig, rng) -> TrainState:
+    params = model.init(rng)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shapes(model, opt_cfg: OptConfig) -> TrainState:
+    params = model.shapes()
+    opt = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_shardings(model, opt_cfg: OptConfig, shd: Sharder):
+    p_axes = model.axes()
+    p_shapes = model.shapes()
+    o_axes = opt_state_axes(p_axes, p_shapes, opt_cfg)
+    o_shapes = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), p_shapes)
+    return {
+        "params": shd.tree_shardings(p_shapes, p_axes),
+        "opt": shd.tree_shardings(o_shapes, o_axes),
+        "step": shd.replicated(),
+    }
+
+
+def batch_shardings(batch_shapes, shd: Sharder):
+    def leaf(s):
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        if len(s.shape) >= 2:
+            axes = ("batch", "seq") + (None,) * (len(s.shape) - 2)
+        return shd.named(s.shape, axes)
+    return jax.tree.map(leaf, batch_shapes)
+
+
+def make_train_step(model, opt_cfg: OptConfig, train_cfg: TrainConfig,
+                    shd: Sharder) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        if train_cfg.grad_dtype == "bfloat16":
+            # cast to bf16 AND pin to the param sharding: the constraint
+            # keeps the convert on the sharded side so FSDP all-gathers move
+            # bf16, not the f32 master (halves weight-gather wire bytes)
+            p_axes = model.axes()
+            leaves, treedef = jax.tree.flatten(params)
+            axes = treedef.flatten_up_to(p_axes)
+            leaves = [
+                shd.constraint(p.astype(jnp.bfloat16), ax)
+                if p.dtype == jnp.float32 and p.ndim > 1 else p
+                for p, ax in zip(leaves, axes)]
+            params = jax.tree.unflatten(treedef, leaves)
+        return model.loss_fn(params, batch, shd, remat=train_cfg.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state["params"]
+        a = train_cfg.microbatches
+        if a <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
+                batch)
+
+            # accumulator pinned to the parameter sharding: each microbatch
+            # reduce-scatters its gradient (ZeRO); without the constraint
+            # GSPMD may keep the carry replicated and emit full all-reduces
+            # per microbatch (llama4 §Perf iteration: 1.3 PiB/step saved)
+            p_axes = model.axes()
+
+            def pin(tree):
+                shapes, treedef = jax.tree.flatten(tree)
+                axes = treedef.flatten_up_to(p_axes)
+                return jax.tree.unflatten(treedef, [
+                    shd.constraint(x, ax) for x, ax in zip(shapes, axes)])
+
+            def body(carry, b):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, b)
+                # pin the microbatch grad BEFORE the add: the partitioner
+                # then reduces the grad dot directly into the shard
+                # (reduce-scatter) instead of AR-ing a full copy and
+                # re-gathering the sharded accumulator
+                g = pin(g)
+                g_acc = jax.tree.map(
+                    lambda x, y: x + y.astype(x.dtype), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(train_cfg.accum_dtype)),
+                params))
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / a, grads)
+            loss = loss / a
+            metrics = {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, stats = apply_updates(
+            params, grads, state["opt"], opt_cfg, state["step"])
+        metrics = dict(metrics, loss=loss, **stats)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step
+
+
+def jit_train_step(model, opt_cfg: OptConfig, train_cfg: TrainConfig,
+                   shd: Sharder, donate: bool = True):
+    """jit'd train step with explicit state shardings (the dry-run target)."""
+    step = make_train_step(model, opt_cfg, train_cfg, shd)
+    state_sh = train_state_shardings(model, opt_cfg, shd)
+    kw: dict[str, Any] = dict(
+        in_shardings=(state_sh, None), out_shardings=(state_sh, None))
+    if donate:
+        kw["donate_argnums"] = (0,)
+    return jax.jit(step, **kw), state_sh

@@ -1,0 +1,28 @@
+"""Test fixtures.  8 host devices (NOT the dry-run's 512 — that flag stays
+inside launch/dryrun.py) so distribution tests exercise real mesh sharding."""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def mesh_dp():
+    return jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+@pytest.fixture(scope="session")
+def sharder(mesh8):
+    from repro.parallel import Sharder
+    return Sharder(mesh8)

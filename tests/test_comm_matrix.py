@@ -1,0 +1,109 @@
+"""Communication-matrix invariants (paper Figs. 2-3), property-based."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import comm_matrix
+from repro.core.events import CollectiveOp, HostTransfer, Shape
+
+
+def mk_op(kind, dims, groups, dtype="f32", pairs=None):
+    return CollectiveOp(kind=kind, name="t", result_shapes=[Shape(dtype, dims)],
+                        replica_groups=groups,
+                        source_target_pairs=pairs or [])
+
+
+class TestMatrixInvariants:
+    @given(n=st.sampled_from([2, 4, 8]), elems=st.integers(1, 4096))
+    @settings(max_examples=60, deadline=None)
+    def test_matrix_sum_equals_wire_total_ring(self, n, elems):
+        op = mk_op("all-reduce", (elems,), [list(range(n))])
+        mat = comm_matrix.matrix_for_ops([op], n)
+        assert mat.sum() == pytest.approx(op.wire_bytes_total("ring"))
+
+    @given(n=st.sampled_from([2, 4, 8]), elems=st.integers(1, 1024))
+    @settings(max_examples=40, deadline=None)
+    def test_ring_traffic_only_on_ring_edges(self, n, elems):
+        op = mk_op("all-gather", (elems * n,), [list(range(n))])
+        mat = comm_matrix.matrix_for_ops([op], n)[1:, 1:]
+        for i in range(n):
+            for j in range(n):
+                if j == (i + 1) % n:
+                    assert mat[i, j] > 0
+                else:
+                    assert mat[i, j] == 0
+
+    def test_host_row_and_column(self):
+        mat = np.zeros((5, 5))
+        comm_matrix.add_host_transfers(mat, [
+            HostTransfer("h2d", 0, 100), HostTransfer("h2d", 3, 50),
+            HostTransfer("d2h", 1, 25)])
+        assert mat[0, 1] == 100 and mat[0, 4] == 50 and mat[2, 0] == 25
+        assert mat[1:, 1:].sum() == 0
+
+    def test_permute_matrix_matches_pairs(self):
+        op = mk_op("collective-permute", (8,), [],
+                   pairs=[(0, 1), (1, 2), (2, 0)])
+        mat = comm_matrix.matrix_for_ops([op], 4)
+        nb = 8 * 4
+        assert mat[1, 2] == nb and mat[2, 3] == nb and mat[3, 1] == nb
+        assert mat.sum() == 3 * nb
+
+    def test_all_to_all_uniform(self):
+        n, elems = 4, 64
+        op = mk_op("all-to-all", (elems,), [list(range(n))])
+        mat = comm_matrix.matrix_for_ops([op], n)[1:, 1:]
+        off_diag = mat[~np.eye(n, dtype=bool)]
+        assert np.all(off_diag == off_diag[0]) and off_diag[0] > 0
+        assert np.all(np.diag(mat) == 0)
+
+    def test_multiple_groups_disjoint(self):
+        op = mk_op("all-reduce", (16,), [[0, 1], [2, 3]])
+        mat = comm_matrix.matrix_for_ops([op], 4)[1:, 1:]
+        # no traffic between groups
+        assert mat[0, 2] == mat[0, 3] == mat[1, 2] == mat[1, 3] == 0
+        assert mat[2, 0] == mat[3, 0] == mat[2, 1] == mat[3, 1] == 0
+
+    def test_per_primitive_split_sums_to_total(self):
+        ops = [mk_op("all-reduce", (64,), [[0, 1, 2, 3]]),
+               mk_op("all-gather", (64,), [[0, 1, 2, 3]])]
+        total = comm_matrix.matrix_for_ops(ops, 4)
+        per = comm_matrix.per_primitive_matrices(ops, 4)
+        assert set(per) == {"all-reduce", "all-gather"}
+        np.testing.assert_allclose(sum(per.values()), total)
+
+    def test_tree_algorithm_uses_tree_edges(self):
+        op = mk_op("all-reduce", (64,), [[0, 1, 2, 3, 4, 5, 6, 7]])
+        ring = comm_matrix.matrix_for_ops([op], 8, algorithm="ring")
+        tree = comm_matrix.matrix_for_ops([op], 8, algorithm="tree")
+        assert not np.allclose(ring, tree)
+        # tree root (rank 0) exchanges with children 1,2 only
+        assert tree[1, 2] > 0 and tree[1, 3] > 0 and tree[1, 4] == 0
+
+
+class TestReporter:
+    def test_heatmap_renders(self):
+        from repro.core import reporter
+        mat = np.random.default_rng(0).random((9, 9)) * 1e9
+        txt = reporter.ascii_heatmap(mat, title="test")
+        assert "test" in txt and len(txt.splitlines()) >= 10
+
+    def test_heatmap_coarsens_large(self):
+        from repro.core import reporter
+        mat = np.ones((257, 257))
+        txt = reporter.ascii_heatmap(mat, max_devices=32)
+        assert "blocks of" in txt
+
+    def test_csv(self):
+        from repro.core import reporter
+        mat = np.arange(9).reshape(3, 3).astype(float)
+        csv = reporter.matrix_to_csv(mat)
+        assert csv.splitlines()[0] == ",host,gpu0,gpu1"
+        assert csv.splitlines()[1] == "host,0,1,2"
+
+    def test_human_bytes(self):
+        from repro.core.reporter import human_bytes
+        assert human_bytes(0) == "0 B"
+        assert human_bytes(1024) == "1.00 KiB"
+        assert human_bytes(3.5 * 2**30) == "3.50 GiB"

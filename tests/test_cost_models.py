@@ -1,0 +1,88 @@
+"""Paper Table 1 values + algorithm-model properties (hypothesis)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import cost_models
+from repro.core.cost_models import (table1_allreduce_bytes,
+                                    wire_bytes_per_rank)
+
+
+class TestTable1:
+    """The published entries, verbatim (paper §3, Table 1)."""
+
+    def test_ring_allreduce(self):
+        # Ring: 2 x (N-1) x S/N
+        assert table1_allreduce_bytes(4, 100.0, "ring") == 2 * 3 * 100.0 / 4
+        assert table1_allreduce_bytes(16, 1.0, "ring") == 2 * 15 / 16
+
+    def test_tree_allreduce(self):
+        # Tree: root S, others 2S
+        assert table1_allreduce_bytes(8, 5.0, "tree", role="root") == 5.0
+        assert table1_allreduce_bytes(8, 5.0, "tree", role="other") == 10.0
+
+    def test_collnet_allreduce(self):
+        # Collnet: intranode 2S, internode S
+        assert table1_allreduce_bytes(8, 3.0, "collnet", "intranode") == 6.0
+        assert table1_allreduce_bytes(8, 3.0, "collnet", "internode") == 3.0
+
+    def test_generalized_matches_table1_ring(self):
+        for n in (2, 4, 8, 16):
+            for s in (1.0, 1e6):
+                assert wire_bytes_per_rank("all-reduce", s, n, "ring") == \
+                    pytest.approx(table1_allreduce_bytes(n, s, "ring"))
+
+    def test_generalized_matches_table1_tree(self):
+        assert wire_bytes_per_rank("all-reduce", 7.0, 8, "tree") == 14.0
+
+
+class TestProperties:
+    @given(s=st.floats(1, 1e12), n=st.integers(2, 1024))
+    @settings(max_examples=200, deadline=None)
+    def test_ring_allreduce_below_2s(self, s, n):
+        # ring AllReduce never exceeds 2S per rank and approaches it as N grows
+        w = wire_bytes_per_rank("all-reduce", s, n, "ring")
+        assert 0 < w < 2 * s
+        assert w >= s  # and is at least S for N>=2
+
+    @given(s=st.floats(1, 1e12), n=st.integers(2, 1024))
+    @settings(max_examples=100, deadline=None)
+    def test_allreduce_equals_rs_plus_ag(self, s, n):
+        # AllReduce(ring) == ReduceScatter + AllGather exactly
+        ar = wire_bytes_per_rank("all-reduce", s, n, "ring")
+        rs = wire_bytes_per_rank("reduce-scatter", s, n, "ring")
+        ag = wire_bytes_per_rank("all-gather", s, n, "ring")
+        assert ar == pytest.approx(rs + ag)
+
+    @given(s=st.floats(1, 1e9), n=st.integers(2, 256))
+    @settings(max_examples=100, deadline=None)
+    def test_monotone_in_payload(self, s, n):
+        for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all"):
+            assert wire_bytes_per_rank(kind, 2 * s, n) == \
+                pytest.approx(2 * wire_bytes_per_rank(kind, s, n))
+
+    @given(n=st.integers(2, 64))
+    @settings(max_examples=50, deadline=None)
+    def test_all_to_all_less_than_gather(self, n):
+        # a2a moves each rank's (n-1)/n blocks of S/n -> less than AllGather
+        s = 1e6
+        assert wire_bytes_per_rank("all-to-all", s, n) < \
+            wire_bytes_per_rank("all-gather", s, n) + 1e-9
+
+    def test_single_rank_is_free(self):
+        for kind in ("all-reduce", "all-gather", "all-to-all"):
+            assert wire_bytes_per_rank(kind, 1e9, 1) == 0.0
+
+    def test_unknown_algorithm_raises(self):
+        with pytest.raises(ValueError):
+            wire_bytes_per_rank("all-reduce", 1.0, 2, "warp-shuffle")
+
+
+class TestLatencyModel:
+    def test_tree_is_logarithmic(self):
+        assert cost_models.latency_model("all-reduce", 256, "tree") == \
+            2 * 8  # 2*log2(256)
+
+    def test_ring_is_linear(self):
+        assert cost_models.latency_model("all-reduce", 8, "ring") == 14
