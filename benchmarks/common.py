@@ -19,13 +19,13 @@ def emit(name: str, value, derived: str = ""):
 
 
 def mesh_dp(n=8):
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    return make_mesh((n,), ("data",))
 
 
 def mesh_2d(shape=(4, 2)):
-    return jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    return make_mesh(shape, ("data", "model"))
 
 
 def flush_csv(path: str):

@@ -1,7 +1,13 @@
 """Benchmark harness: one entry per paper table/figure + the roofline report.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run table3     # one
+The CLI front door (preferred):
+
+  python -m repro bench                              # all
+  python -m repro bench table3                       # one
+
+Direct invocation still works:
+
+  PYTHONPATH=src python -m benchmarks.run [names...]
 """
 import sys
 import time
@@ -34,16 +40,22 @@ def run_one(name: str) -> bool:
         return False
 
 
-def main() -> None:
-    todo = sys.argv[1:] or list(BENCHES)
+def main(names=None) -> int:
+    if names is None:               # direct invocation: read our own argv
+        names = sys.argv[1:]
+    todo = list(names) or list(BENCHES)
+    unknown = [n for n in todo if n not in BENCHES]
+    if unknown:
+        print(f"unknown benchmark(s) {unknown}; known: {list(BENCHES)}",
+              file=sys.stderr)
+        return 2
     results = {name: run_one(name) for name in todo}
     common.flush_csv("artifacts/benchmarks.csv")
     print("\n== benchmark summary ==")
     for name, ok in results.items():
         print(f"  {name:10s} {'PASS' if ok else 'FAIL'}")
-    if not all(results.values()):
-        raise SystemExit(1)
+    return 0 if all(results.values()) else 1
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -22,6 +22,7 @@ from repro.core import CollectiveInterceptor
 from repro.data import SyntheticImageData
 from repro.models.resnet import ResNet18
 from repro.train import ddp
+from repro.compat import make_mesh
 
 
 def main():
@@ -35,8 +36,7 @@ def main():
     ap.add_argument("--image-size", type=int, default=32)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     model = ResNet18(num_classes=args.classes)
     params = model.init(jax.random.PRNGKey(0))
     data = SyntheticImageData(num_classes=args.classes,

@@ -5,7 +5,8 @@ The one-call workflow (paper Fig. 1, TPU edition):
     report = monitor_fn(step, *args, mesh=mesh, in_shardings=...)
     print(report.render())
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python -m repro monitor examples/quickstart.py
+(or directly: PYTHONPATH=src python examples/quickstart.py)
 """
 import os
 
@@ -19,12 +20,12 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import monitor_fn, roofline_of
+from repro.compat import make_mesh
 
 
 def main():
     # an 8-device (data=4, model=2) mesh on forced host devices
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
 
     # a model-parallel train step the user wants to understand
     def train_step(w1, w2, x):
@@ -57,8 +58,15 @@ def main():
           f"{rl.memory_s:.3e}s | collective {rl.collective_s:.3e}s")
     print(rl.one_liner())
 
+    # persist + browser/Perfetto renderings via the export subsystem;
+    # re-export later without recompiling:
+    #   python -m repro report artifacts/quickstart_report.json --formats csv
+    from repro.core import export
     report.save("artifacts/quickstart_report.json")
-    print("\nreport written to artifacts/quickstart_report.json")
+    export.export_html(report, "artifacts/quickstart_report.html")
+    export.export_perfetto(report, "artifacts/quickstart_report.trace.json")
+    print("\nreport written to artifacts/quickstart_report.{json,html,"
+          "trace.json}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from repro.core import monitor_fn
 from repro.models import build_model
 from repro.parallel import Sharder
 from repro.serve import generate
+from repro.compat import make_mesh
 
 
 def main():
@@ -33,8 +34,7 @@ def main():
     ap.add_argument("--tokens", type=int, default=24)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     shd = Sharder(mesh)
     cfg = configs.config(args.arch, reduced=True)
     model = build_model(cfg)

@@ -24,6 +24,7 @@ from repro.data import SyntheticSeq2Seq
 from repro.models.gnmt import GNMT
 from repro.optim import OptConfig, apply_updates, init_opt_state
 from repro.train import ddp
+from repro.compat import make_mesh, shard_map
 
 
 def main():
@@ -31,8 +32,7 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     model = GNMT(vocab=64, d=128, layers=2)
     params = model.init(jax.random.PRNGKey(0))
     data = SyntheticSeq2Seq(vocab_size=64, src_len=12, tgt_len=12,
@@ -50,7 +50,7 @@ def main():
         params, opt, _ = apply_updates(params, grads, opt, ocfg, i)
         return params, opt, loss
 
-    sharded_step = jax.jit(jax.shard_map(
+    sharded_step = jax.jit(shard_map(
         step, mesh=mesh, in_specs=(P(), P(), P(), P("data")),
         out_specs=(P(), P(), P()), check_vma=False))
 
@@ -65,7 +65,7 @@ def main():
 
     # one monitored step -> Table-2 stats + Fig-3 per-primitive matrices
     rep = monitor_fn(
-        jax.shard_map(step, mesh=mesh,
+        shard_map(step, mesh=mesh,
                       in_specs=(P(), P(), P(), P("data")),
                       out_specs=(P(), P(), P()), check_vma=False),
         params, opt, jnp.asarray(0), data.batch_at(0),

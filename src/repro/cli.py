@@ -1,0 +1,297 @@
+"""``python -m repro`` -- the command-line front door.
+
+Subcommands:
+
+* ``monitor``  -- run a monitoring script (``python -m repro monitor
+  examples/quickstart.py``) or monitor a named sweep config directly
+  (``python -m repro monitor gnmt --mesh 8 --formats html``);
+* ``sweep``    -- the config-sweep engine: configs x meshes x algorithms,
+  cached, with comparative JSON/CSV/HTML/Perfetto artifacts;
+* ``report``   -- re-export a saved report (``CommReport.save`` / cache
+  entry) into any format without recompiling anything;
+* ``configs``  -- list the sweepable configs;
+* ``cache``    -- inspect or clear the on-disk report cache;
+* ``bench``    -- the paper-table benchmark suite (``benchmarks/run.py``);
+* ``dryrun``   -- the production-scale dry-run launcher
+  (``repro.launch.dryrun``).
+
+Argument parsing happens before any jax import so ``--devices`` can still
+influence ``XLA_FLAGS`` (host-device count must be set before the backend
+initializes).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _ensure_devices(n: int):
+    from repro.compat import ensure_host_devices
+    ensure_host_devices(n)
+
+
+def _split(csv: str) -> list[str]:
+    return [p.strip() for p in csv.split(",") if p.strip()]
+
+
+# ---------------------------------------------------------------------------
+# subcommands
+# ---------------------------------------------------------------------------
+def _cmd_monitor(args) -> int:
+    _ensure_devices(args.devices)
+    if args.target.endswith(".py"):
+        # run a monitoring script as __main__ (the quickstart path);
+        # script exceptions keep their full traceback instead of being
+        # mistaken for CLI usage errors by main()'s handler
+        import runpy
+        import traceback
+        if args.formats or args.out != "artifacts":
+            print("note: --formats/--out are ignored for script targets -- "
+                  "scripts control their own output", file=sys.stderr)
+        sys.argv = [args.target] + list(getattr(args, "script_args", []))
+        try:
+            runpy.run_path(args.target, run_name="__main__")
+        except Exception:
+            traceback.print_exc()
+            return 1
+        return 0
+    # otherwise: a sweep-config name, monitored on one mesh
+    from repro import sweep as sweep_mod
+
+    registry = sweep_mod.available_configs()
+    if args.target not in registry:
+        print(f"error: {args.target!r} is neither a .py file nor a config; "
+              f"known configs: {sorted(registry)}", file=sys.stderr)
+        return 2
+    result = sweep_mod.run_sweep(
+        [args.target], [args.mesh], _split(args.algorithms),
+        cache=_cache_from(args), use_cache=not args.no_cache)
+    if result.failures:
+        print(f"error: {result.failures[0]['error']}", file=sys.stderr)
+        return 1
+    for rep in result.reports:      # one rendering per requested algorithm
+        print(rep.render())
+        print()
+    if args.formats:
+        from repro.core import export
+        paths = export.export_comparison(
+            result.reports, args.out, _split(args.formats),
+            stem=args.target)
+        for fmt, path in paths.items():
+            print(f"[{fmt}] {path}")
+    return 0
+
+
+def _cmd_sweep(args) -> int:
+    _ensure_devices(args.devices)
+    from repro import sweep as sweep_mod
+    from repro.core import export
+
+    registry = sweep_mod.available_configs()
+    unknown = [c for c in _split(args.configs) if c not in registry]
+    if unknown:
+        print(f"error: unknown config(s) {unknown}; known: "
+              f"{sorted(registry)}", file=sys.stderr)
+        return 2
+    result = sweep_mod.run_sweep(
+        _split(args.configs), _split(args.meshes), _split(args.algorithms),
+        cache=_cache_from(args), use_cache=not args.no_cache)
+    if not result.reports:
+        print("no cell finished; failures:", file=sys.stderr)
+        for f in result.failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+
+    table = result.summary_table()
+    print()
+    print(f"== sweep summary: {len(result.reports)} cells "
+          f"({result.compiles} compiled, {result.cache_hits} cache hits) ==")
+    print(table)
+    formats = _split(args.formats)
+    result.artifacts = export.export_comparison(
+        result.reports, args.out, formats, stem="sweep")
+    summary_path = os.path.join(args.out, "summary.txt")
+    with open(summary_path, "w") as f:
+        f.write(table + "\n")
+    result.artifacts["summary"] = summary_path
+    print()
+    for fmt, path in sorted(result.artifacts.items()):
+        print(f"[{fmt}] {path}")
+    if result.failures:
+        print(f"\n{len(result.failures)} cell(s) failed:", file=sys.stderr)
+        for f in result.failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def _cmd_report(args) -> int:
+    from repro.core import export
+
+    reports = export.load_json_reports(args.path)   # report, cache entry,
+    if args.render:                                 # or sweep document
+        for rep in reports:
+            print(rep.render())
+            print()
+    stem = os.path.splitext(os.path.basename(args.path))[0]
+    if stem.endswith(".trace"):
+        stem = stem[:-len(".trace")]
+    if len(reports) == 1:
+        for fmt in _split(args.formats):
+            path = os.path.join(args.out, stem + export.SUFFIXES.get(fmt, ""))
+            export.export_report(reports[0], fmt, path)   # validates fmt
+            print(f"[{fmt}] {path}")
+    else:
+        for fmt, path in export.export_comparison(
+                reports, args.out, _split(args.formats), stem=stem).items():
+            print(f"[{fmt}] {path}")
+    return 0
+
+
+def _cmd_configs(args) -> int:
+    from repro import sweep as sweep_mod
+    from repro.core.reporter import format_table
+
+    registry = sweep_mod.available_configs()
+    rows = [[s.name, s.version, s.description]
+            for s in registry.values()]
+    print(format_table(rows, ["config", "version", "description"]))
+    return 0
+
+
+def _cmd_cache(args) -> int:
+    cache = _cache_from(args)
+    if args.clear:
+        n = cache.clear()
+        print(f"cleared {n} entries from {cache.root}")
+        return 0
+    entries = cache.entries()
+    total = sum(e["size"] for e in entries)
+    print(f"cache {cache.root}: {len(entries)} entries, {total:,} bytes")
+    for e in entries:
+        meta = e.get("meta", {})
+        tag = (f"{meta.get('config', '?')} mesh={meta.get('mesh', '?')} "
+               f"alg={meta.get('algorithm', '?')}")
+        print(f"  {e['key']}  {e['size']:>9,} B  {tag}")
+    return 0
+
+
+def _cmd_bench(args) -> int:
+    _ensure_devices(args.devices)
+    sys.path.insert(0, os.getcwd())   # benchmarks/ is a repo-root package
+    try:
+        from benchmarks import run as bench_run
+    except ImportError:
+        print("error: benchmarks package not importable -- run from the "
+              "repo root", file=sys.stderr)
+        return 2
+    return bench_run.main(args.names)
+
+
+def _cmd_dryrun(args) -> int:
+    from repro.launch import dryrun
+    return dryrun.main(args.rest)
+
+
+def _cache_from(args):
+    from repro.core.report_cache import ReportCache
+    return ReportCache(root=getattr(args, "cache_dir", None) or None)
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+def _add_cache_opts(p):
+    p.add_argument("--cache-dir", default=None,
+                   help="report-cache directory (default "
+                        "artifacts/report_cache or $REPRO_CACHE_DIR)")
+    p.add_argument("--no-cache", action="store_true",
+                   help="neither read nor write the report cache")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Monitor collective communication among accelerators "
+                    "(ComScribe, TPU/JAX edition).")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("monitor",
+                       help="run a monitoring script or one sweep config")
+    p.add_argument("target", help="a .py script or a sweep-config name")
+    p.add_argument("--mesh", default="4x2", help="mesh spec, e.g. 8 or 4x2")
+    p.add_argument("--algorithms", default="ring")
+    p.add_argument("--formats", default="",
+                   help="also export: comma list of json,csv,html,perfetto")
+    p.add_argument("--out", default="artifacts")
+    p.add_argument("--devices", type=int, default=8)
+    _add_cache_opts(p)
+    p.set_defaults(func=_cmd_monitor)
+
+    p = sub.add_parser("sweep", help="sweep configs x meshes x algorithms")
+    p.add_argument("--configs", required=True,
+                   help="comma list (see `python -m repro configs`)")
+    p.add_argument("--meshes", default="4x2",
+                   help="comma list of mesh specs, e.g. 8,4x2,2x2x2")
+    p.add_argument("--algorithms", default="ring",
+                   help="comma list of ring,tree,hierarchical")
+    p.add_argument("--formats", default="json,csv,html,perfetto")
+    p.add_argument("--out", default=os.path.join("artifacts", "sweep"))
+    p.add_argument("--devices", type=int, default=8)
+    _add_cache_opts(p)
+    p.set_defaults(func=_cmd_sweep)
+
+    p = sub.add_parser("report", help="re-export a saved report")
+    p.add_argument("path", help="a CommReport.save JSON file")
+    p.add_argument("--formats", default="html")
+    p.add_argument("--out", default="artifacts")
+    p.add_argument("--render", action="store_true",
+                   help="also print the terminal rendering")
+    p.set_defaults(func=_cmd_report)
+
+    p = sub.add_parser("configs", help="list sweepable configs")
+    p.set_defaults(func=_cmd_configs)
+
+    p = sub.add_parser("cache", help="inspect / clear the report cache")
+    p.add_argument("--clear", action="store_true")
+    _add_cache_opts(p)
+    p.set_defaults(func=_cmd_cache)
+
+    p = sub.add_parser("bench", help="paper-table benchmark suite")
+    p.add_argument("names", nargs="*",
+                   help="table1 table2 table3 fig3 overhead roofline "
+                        "(default: all)")
+    p.add_argument("--devices", type=int, default=8)
+    p.set_defaults(func=_cmd_bench)
+
+    p = sub.add_parser("dryrun", add_help=False,
+                       help="production-scale dry-run launcher "
+                            "(all arguments forwarded to repro.launch.dryrun)")
+    p.set_defaults(func=_cmd_dryrun, rest=[])
+    return ap
+
+
+def main(argv=None) -> int:
+    parser = build_parser()
+    # dryrun forwards everything (including --flags, which REMAINDER cannot
+    # capture) to repro.launch.dryrun's own parser
+    args, extra = parser.parse_known_args(argv)
+    if args.func is _cmd_dryrun:
+        args.rest = extra
+    elif (args.func is _cmd_monitor and args.target.endswith(".py")):
+        args.script_args = extra     # forwarded to the script's own argv
+    elif extra:
+        parser.error(f"unrecognized arguments: {' '.join(extra)}")
+    try:
+        return args.func(args) or 0
+    except (ValueError, FileNotFoundError) as e:
+        # spec / format / path errors are user errors, not crashes
+        # (anything else -- including KeyError -- keeps its traceback)
+        msg = e.args[0] if isinstance(e, ValueError) and e.args else e
+        print(f"error: {msg}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

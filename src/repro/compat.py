@@ -1,0 +1,50 @@
+"""Version tolerance for the handful of jax APIs that moved across releases.
+
+The repo targets current jax, but must degrade gracefully on the oldest
+toolchain we support (0.4.x): ``jax.sharding.AxisType`` and ``jax.shard_map``
+only exist on newer versions, so every call site goes through these wrappers
+instead of feature-detecting locally.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def ensure_host_devices(n: int):
+    """Append ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``.
+
+    Appends rather than overwrites so user-set flags survive; an existing
+    device-count flag (user-chosen) wins.  Must run before the jax backend
+    initializes (first device query).
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def mesh_axis_types_kw(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,)*n}`` where the jax API supports it, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         **mesh_axis_types_kw(len(axis_names)))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map``, falling back to the pre-promotion experimental API
+    (where ``check_vma`` was spelled ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

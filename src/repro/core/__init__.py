@@ -8,7 +8,9 @@ from .cost_models import wire_bytes_per_rank, collective_time, table1_allreduce_
 from .topology import HardwareSpec, MeshTopology, V5E
 from .monitor import CommReport, monitor_fn, roofline_of
 from .roofline import RooflineReport, analyze as roofline_analyze
+from .report_cache import ReportCache, cache_key
 from . import reporter
+from . import export
 
 __all__ = [
     "CollectiveOp", "HostTransfer", "Shape", "TraceEvent", "jax_shape",
@@ -19,5 +21,6 @@ __all__ = [
     "HardwareSpec", "MeshTopology", "V5E",
     "CommReport", "monitor_fn", "roofline_of",
     "RooflineReport", "roofline_analyze",
-    "reporter",
+    "ReportCache", "cache_key",
+    "reporter", "export",
 ]

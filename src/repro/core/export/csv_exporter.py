@@ -1,0 +1,61 @@
+"""CSV export: communication matrices + per-primitive summary rows.
+
+Two products:
+
+* ``export_matrix_csv`` -- one ``(d+1) x (d+1)`` matrix as CSV (paper Fig. 2/3
+  data), host row/column first, identical to ``reporter.matrix_to_csv``;
+* ``export_summary_csv`` -- long-form rows
+  ``config,mesh,algorithm,primitive,calls,payload_bytes,wire_bytes`` across
+  one or many reports -- the sweep's machine-readable comparison table.
+"""
+from __future__ import annotations
+
+import os
+
+from .. import reporter
+
+
+def export_matrix_csv(report, path: str) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(reporter.matrix_to_csv(report.matrix) + "\n")
+    return path
+
+
+def summary_rows(report) -> list[dict]:
+    """Long-form per-primitive rows for one report."""
+    meta = getattr(report, "meta", {}) or {}
+    mesh = meta.get("mesh", f"{report.num_devices}dev")
+    config = meta.get("config", report.name)
+    rows = []
+    for kind in sorted(report.compiled_summary):
+        row = report.compiled_summary[kind]
+        rows.append({
+            "config": config,
+            "mesh": mesh,
+            "algorithm": getattr(report, "algorithm", "ring"),
+            "num_devices": report.num_devices,
+            "primitive": kind,
+            "calls": row.get("calls", 0),
+            "payload_bytes": row.get("payload_bytes", 0),
+            "wire_bytes": round(float(row.get("wire_bytes", 0.0)), 3),
+        })
+    return rows
+
+
+_COLUMNS = ("config", "mesh", "algorithm", "num_devices", "primitive",
+            "calls", "payload_bytes", "wire_bytes")
+
+
+def export_summary_csv(reports, path: str) -> str:
+    """Write the long-form comparison CSV for one or many reports."""
+    if not isinstance(reports, (list, tuple)):
+        reports = [reports]
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    lines = [",".join(_COLUMNS)]
+    for rep in reports:
+        for row in summary_rows(rep):
+            lines.append(",".join(str(row[c]) for c in _COLUMNS))
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path

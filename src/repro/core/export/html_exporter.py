@@ -1,0 +1,178 @@
+"""Self-contained HTML dashboard of communication matrices (paper Figs. 2/3).
+
+One static file, no JavaScript libraries: every ``(d+1) x (d+1)`` matrix is an
+HTML table whose cells are bucketed onto a 13-step single-hue sequential ramp
+(log scale, light -> dark = near-zero -> max).  Dark mode re-steps the same
+ramp against the dark surface (reversed, so "near zero" recedes toward the
+surface in both modes) via ``prefers-color-scheme`` -- the cells themselves
+only carry a bucket class.
+
+Each cell exposes its exact value as a hover tooltip (``title``), every
+matrix ships a color legend with min/max labels, and a collapsible raw-value
+table preserves a text-readable view of the same data.
+"""
+from __future__ import annotations
+
+import html
+import math
+import os
+
+import numpy as np
+
+from .. import reporter
+
+# 13-step sequential blue ramp (steps 100..700 of the reference palette);
+# validated single-hue light->dark -- index 0 = near zero, 12 = max.
+_RAMP = (
+    "#cde2fb", "#b7d3f6", "#9ec5f4", "#86b6ef", "#6da7ec", "#5598e7",
+    "#3987e5", "#2a78d6", "#256abf", "#1c5cab", "#184f95", "#104281",
+    "#0d366b",
+)
+_NBUCKETS = len(_RAMP)
+
+_CSS = """
+:root {
+  color-scheme: light dark;
+  --surface: #fcfcfb; --surface-2: #f0efec;
+  --text-1: #0b0b0b; --text-2: #52514e; --border: #d9d8d3;
+}
+@media (prefers-color-scheme: dark) {
+  :root { --surface: #1a1a19; --surface-2: #262624;
+          --text-1: #ffffff; --text-2: #c3c2b7; --border: #3a3a37; }
+}
+body { background: var(--surface); color: var(--text-1);
+       font: 14px/1.5 system-ui, sans-serif; margin: 2rem auto;
+       max-width: 1100px; padding: 0 1rem; }
+h1, h2, h3 { font-weight: 600; }
+h1 { font-size: 1.4rem; } h2 { font-size: 1.15rem; margin-top: 2.5rem; }
+h3 { font-size: 0.95rem; color: var(--text-2); margin-bottom: 0.3rem; }
+.meta { color: var(--text-2); font-size: 0.85rem; }
+.grid { display: flex; flex-wrap: wrap; gap: 1.5rem; align-items: flex-start; }
+table.hm { border-collapse: separate; border-spacing: 2px; }
+table.hm td { width: 16px; height: 16px; padding: 0; border-radius: 2px; }
+table.hm th { font-weight: 400; font-size: 0.65rem; color: var(--text-2);
+              padding: 0 2px; text-align: center; }
+table.sum { border-collapse: collapse; margin: 0.5rem 0; }
+table.sum th, table.sum td { text-align: left; padding: 2px 12px 2px 0;
+  border-bottom: 1px solid var(--border); font-size: 0.85rem; }
+table.sum th { color: var(--text-2); font-weight: 500; }
+td.z { background: var(--surface-2); }
+.legend { display: flex; align-items: center; gap: 6px; margin: 0.4rem 0;
+          font-size: 0.75rem; color: var(--text-2); }
+.legend .bar { display: flex; }
+.legend .bar i { width: 12px; height: 10px; display: inline-block; }
+details { margin: 0.5rem 0 1rem; }
+details summary { cursor: pointer; color: var(--text-2); font-size: 0.8rem; }
+details pre { font-size: 0.7rem; overflow-x: auto; background: var(--surface-2);
+              padding: 0.5rem; border-radius: 4px; }
+""" + "\n".join(
+    f"td.q{i} {{ background: {c}; }}" for i, c in enumerate(_RAMP)
+) + "\n@media (prefers-color-scheme: dark) {\n" + "\n".join(
+    # dark mode: reversed ramp so near-zero recedes toward the dark surface
+    f"  td.q{i} {{ background: {c}; }}"
+    for i, c in enumerate(reversed(_RAMP))
+) + "\n}\n"
+
+
+def _bucket(value: float, vmax_log: float) -> int:
+    if value <= 0 or vmax_log <= 0:
+        return -1                      # zero cell: surface, not on the ramp
+    t = max(0.0, math.log10(value)) / vmax_log
+    return min(_NBUCKETS - 1, int(t * _NBUCKETS))
+
+
+def _labels(d: int, block: int) -> list[str]:
+    if block > 1:
+        return ["host"] + [f"d{i * block}" for i in range(d - 1)]
+    return ["host"] + [f"d{i}" for i in range(d - 1)]
+
+
+def matrix_table(mat: np.ndarray, *, max_devices: int = 32) -> str:
+    """One matrix as an HTML heatmap table (+ legend + raw-value fallback)."""
+    m, block = reporter.coarsen_matrix(np.asarray(mat, dtype=np.float64),
+                                       max_devices=max_devices)
+    d = m.shape[0]
+    labels = _labels(d, block)
+    vmax = float(m.max())
+    vmax_log = math.log10(vmax) if vmax > 1 else 1.0
+    rows = ["<table class='hm'>",
+            "<tr><th></th>" + "".join(f"<th>{l}</th>" for l in labels)
+            + "</tr>"]
+    for i in range(d):
+        cells = [f"<th>{labels[i]}</th>"]
+        for j in range(d):
+            b = _bucket(m[i, j], vmax_log)
+            cls = "z" if b < 0 else f"q{b}"
+            tip = (f"{labels[i]} → {labels[j]}: "
+                   f"{reporter.human_bytes(m[i, j])}")
+            cells.append(f"<td class='{cls}' title='{html.escape(tip)}'></td>")
+        rows.append("<tr>" + "".join(cells) + "</tr>")
+    rows.append("</table>")
+    swatches = "".join(f"<i style='background:{c}'></i>" for c in _RAMP)
+    rows.append(
+        "<div class='legend'><span>0</span><span class='bar'>"
+        f"{swatches}</span><span>{reporter.human_bytes(vmax)}</span>"
+        "<span>(log scale)</span></div>")
+    if block > 1:
+        rows.append(f"<div class='meta'>device blocks of {block}</div>")
+    rows.append("<details><summary>raw values (CSV)</summary><pre>"
+                + html.escape(reporter.matrix_to_csv(m)) + "</pre></details>")
+    return "\n".join(rows)
+
+
+def _summary_table(summary: dict) -> str:
+    rows = ["<table class='sum'><tr><th>primitive</th><th>calls</th>"
+            "<th>payload</th><th>wire bytes</th></tr>"]
+    for kind in sorted(summary, key=lambda k: -summary[k].get("wire_bytes", 0)):
+        r = summary[kind]
+        rows.append(
+            f"<tr><td>{html.escape(kind)}</td><td>{r.get('calls', 0):,}</td>"
+            f"<td>{reporter.human_bytes(r.get('payload_bytes', 0))}</td>"
+            f"<td>{reporter.human_bytes(r.get('wire_bytes', 0))}</td></tr>")
+    rows.append("</table>")
+    return "\n".join(rows)
+
+
+def report_section(report) -> str:
+    """One report: header, primitive summary, combined + per-primitive maps."""
+    algorithm = getattr(report, "algorithm", "ring")
+    total_wire = sum(r.get("wire_bytes", 0.0)
+                     for r in report.compiled_summary.values())
+    parts = [
+        f"<h2>{html.escape(report.name)}</h2>",
+        f"<div class='meta'>{report.num_devices} devices &middot; "
+        f"algorithm: {html.escape(algorithm)} &middot; wire bytes "
+        f"{reporter.human_bytes(total_wire)} &middot; compile "
+        f"{report.compile_seconds * 1e3:.0f} ms</div>",
+        _summary_table(report.compiled_summary),
+        "<div class='grid'>",
+        "<div><h3>all primitives</h3>" + matrix_table(report.matrix)
+        + "</div>",
+    ]
+    for kind, mat in sorted(report.per_primitive.items()):
+        parts.append(f"<div><h3>{html.escape(kind)}</h3>"
+                     + matrix_table(mat) + "</div>")
+    parts.append("</div>")
+    return "\n".join(parts)
+
+
+def render_dashboard(reports, title: str = "Communication matrices") -> str:
+    if not isinstance(reports, (list, tuple)):
+        reports = [reports]
+    body = "\n".join(report_section(r) for r in reports)
+    return (
+        "<!doctype html>\n<html lang='en'>\n<head>\n<meta charset='utf-8'>\n"
+        f"<title>{html.escape(title)}</title>\n"
+        "<meta name='viewport' content='width=device-width, initial-scale=1'>"
+        f"\n<style>{_CSS}</style>\n</head>\n<body>\n"
+        f"<h1>{html.escape(title)}</h1>\n"
+        "<div class='meta'>(d+1)&sup2; byte matrices, row/col 0 = host "
+        "(paper Figs. 2/3); hover a cell for the exact value.</div>\n"
+        f"{body}\n</body>\n</html>\n")
+
+
+def export_html(reports, path: str, title: str = "Communication matrices") -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(render_dashboard(reports, title))
+    return path

@@ -1,0 +1,98 @@
+"""Perfetto / Chrome trace-event timeline of the collective schedule.
+
+Renders each report's compiled collectives as a timeline loadable in
+https://ui.perfetto.dev or ``chrome://tracing``: one *process* per report,
+one *thread* (track) per collective primitive, one complete (``ph="X"``)
+event per collective op.  Events are laid out serially in HLO program order
+-- the same no-overlap assumption as :func:`repro.core.cost_models.total_time`
+-- with durations from the algorithm-aware bandwidth model, so the timeline
+*is* the roofline's collective term, made visible.
+
+Only the documented subset of the Chrome trace-event format is emitted
+(https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU):
+``X`` duration events and ``M`` metadata events, each with ``name``, ``ph``,
+``ts``/``dur`` in microseconds, ``pid``, ``tid``, ``cat`` and ``args``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .. import cost_models
+
+# floor so zero-cost ops (group size 1, no topology) stay visible in the UI
+_MIN_DUR_US = 0.05
+
+
+def _op_duration_us(op, topo, algorithm: str) -> float:
+    if topo is not None:
+        sec = cost_models.collective_time(op, topo, algorithm)
+    else:
+        # no topology: assume a generic 50 GB/s per-rank link
+        sec = op.wire_bytes_per_rank(algorithm) / 50e9
+    return max(_MIN_DUR_US, sec * 1e6)
+
+
+def trace_events(report, *, pid: int = 1) -> list[dict]:
+    """Trace events for one report (one process, one track per primitive)."""
+    algorithm = getattr(report, "algorithm", "ring")
+    label = f"{report.name} [{report.num_devices} devices, {algorithm}]"
+    events: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+        "args": {"name": label},
+    }]
+    kinds = sorted({op.kind for op in report.compiled_ops})
+    tid_of = {kind: i + 1 for i, kind in enumerate(kinds)}
+    for kind, tid in tid_of.items():
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+            "args": {"name": kind},
+        })
+    ts = 0.0
+    for op in report.compiled_ops:
+        # a weighted op (while-loop body) executes `weight` times; show the
+        # aggregate as one span so trip-count-64 loops don't emit 64 events
+        dur = _op_duration_us(op, report.topo, algorithm) * max(1.0, op.weight)
+        events.append({
+            "name": op.op_name or op.kind,
+            "cat": "collective",
+            "ph": "X",
+            "ts": round(ts, 3),
+            "dur": round(dur, 3),
+            "pid": pid,
+            "tid": tid_of[op.kind],
+            "args": {
+                "kind": op.kind,
+                "hlo_name": op.name,
+                "payload_bytes": int(op.payload_bytes),
+                "wire_bytes_total": float(op.wire_bytes_total(algorithm)),
+                "group_size": op.group_size,
+                "num_groups": op.num_groups,
+                "weight": op.weight,
+            },
+        })
+        ts += dur
+    return events
+
+
+def chrome_trace(reports) -> dict:
+    """Combined trace document for one or many reports (one process each)."""
+    if not isinstance(reports, (list, tuple)):
+        reports = [reports]
+    events: list[dict] = []
+    for i, rep in enumerate(reports):
+        events.extend(trace_events(rep, pid=i + 1))
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {"generator": "repro.core.export.perfetto",
+                      "schema": "chrome-trace-event/json"},
+    }
+
+
+def export_perfetto(reports, path: str) -> str:
+    """Write the Chrome-trace JSON for one or many reports."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(chrome_trace(reports), f, indent=1)
+    return path

@@ -1,0 +1,185 @@
+"""Lossless CommReport <-> plain-dict serialization (schema ``v1``).
+
+This is the substrate for everything under :mod:`repro.core.export`: the JSON
+exporter writes the dict verbatim, the on-disk report cache
+(:mod:`repro.core.report_cache`) round-trips reports through it, and
+``CommReport.save``/``CommReport.load`` are thin wrappers around it.
+
+The schema is a strict superset of the legacy ``reporter.dump_report`` layout,
+so files written by older code remain readable by external consumers:
+``name``, ``num_devices``, ``summary`` (compiled), ``traced_summary``, ``ops``
+and ``matrix`` keep their old spelling and meaning; the v1 additions
+(``per_primitive``, ``traced``, ``topo``, ``algorithm``, timings, ...) ride
+alongside under new keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from ..events import CollectiveOp, HostTransfer, Shape, TraceEvent
+from ..topology import HardwareSpec, MeshTopology
+
+SCHEMA = "repro.comm_report.v1"
+
+
+# ---------------------------------------------------------------------------
+# leaf types
+# ---------------------------------------------------------------------------
+def shape_to_dict(s: Shape) -> dict:
+    return {"dtype": s.dtype, "dims": list(s.dims)}
+
+
+def shape_from_dict(d: dict) -> Shape:
+    return Shape(dtype=d["dtype"], dims=tuple(d["dims"]))
+
+
+def op_to_dict(op: CollectiveOp) -> dict:
+    return {
+        "kind": op.kind,
+        "name": op.name,
+        "result_shapes": [shape_to_dict(s) for s in op.result_shapes],
+        # legacy spelling kept for external consumers of dump_report files
+        "shapes": [repr(s) for s in op.result_shapes],
+        "replica_groups": [list(g) for g in op.replica_groups],
+        "channel_id": op.channel_id,
+        "dimensions": list(op.dimensions),
+        "source_target_pairs": [list(p) for p in op.source_target_pairs],
+        "op_name": op.op_name,
+        "weight": op.weight,
+        "payload_bytes": op.payload_bytes,
+        "group_size": op.group_size,
+        "num_groups": op.num_groups,
+    }
+
+
+def op_from_dict(d: dict) -> CollectiveOp:
+    return CollectiveOp(
+        kind=d["kind"],
+        name=d["name"],
+        result_shapes=[shape_from_dict(s) for s in d["result_shapes"]],
+        replica_groups=[list(g) for g in d["replica_groups"]],
+        channel_id=d.get("channel_id"),
+        dimensions=tuple(d.get("dimensions", ())),
+        source_target_pairs=[tuple(p) for p in d.get("source_target_pairs", [])],
+        op_name=d.get("op_name", ""),
+        weight=float(d.get("weight", 1.0)),
+    )
+
+
+def event_to_dict(e: TraceEvent) -> dict:
+    return {
+        "primitive": e.primitive,
+        "axis_name": e.axis_name,
+        "arg_shapes": [shape_to_dict(s) for s in e.arg_shapes],
+        "axis_size": e.axis_size,
+        "call_site": e.call_site,
+    }
+
+
+def event_from_dict(d: dict) -> TraceEvent:
+    return TraceEvent(
+        primitive=d["primitive"],
+        axis_name=d["axis_name"],
+        arg_shapes=[shape_from_dict(s) for s in d["arg_shapes"]],
+        axis_size=d.get("axis_size"),
+        call_site=d.get("call_site", ""),
+    )
+
+
+def transfer_to_dict(t: HostTransfer) -> dict:
+    return {"direction": t.direction, "device": t.device,
+            "nbytes": t.nbytes, "label": t.label}
+
+
+def transfer_from_dict(d: dict) -> HostTransfer:
+    return HostTransfer(direction=d["direction"], device=d["device"],
+                        nbytes=d["nbytes"], label=d.get("label", ""))
+
+
+def topo_to_dict(t: Optional[MeshTopology]) -> Optional[dict]:
+    if t is None:
+        return None
+    return {
+        "axis_names": list(t.axis_names),
+        "axis_sizes": list(t.axis_sizes),
+        "dcn_axes": list(t.dcn_axes),
+        "hw": dataclasses.asdict(t.hw),
+    }
+
+
+def topo_from_dict(d: Optional[dict]) -> Optional[MeshTopology]:
+    if d is None:
+        return None
+    return MeshTopology(
+        axis_names=tuple(d["axis_names"]),
+        axis_sizes=tuple(d["axis_sizes"]),
+        hw=HardwareSpec(**d["hw"]),
+        dcn_axes=tuple(d["dcn_axes"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# whole-report round-trip
+# ---------------------------------------------------------------------------
+def _jsonable_cost(cost: dict) -> dict:
+    return {k: float(v) for k, v in (cost or {}).items()
+            if isinstance(v, (int, float))}
+
+
+def report_to_dict(report) -> dict:
+    """``CommReport`` -> JSON-serializable dict (schema ``v1``)."""
+    return {
+        "schema": SCHEMA,
+        "name": report.name,
+        "num_devices": report.num_devices,
+        "algorithm": getattr(report, "algorithm", "ring"),
+        "summary": report.compiled_summary,
+        "traced_summary": report.traced_summary,
+        "ops": [op_to_dict(op) for op in report.compiled_ops],
+        "traced": [event_to_dict(e) for e in report.traced],
+        "matrix": np.asarray(report.matrix).tolist(),
+        "per_primitive": {k: np.asarray(m).tolist()
+                          for k, m in report.per_primitive.items()},
+        "cost": _jsonable_cost(report.cost),
+        "memory_stats": report.memory_stats,
+        "trace_seconds": report.trace_seconds,
+        "compile_seconds": report.compile_seconds,
+        "topo": topo_to_dict(report.topo),
+        "host_transfers": [transfer_to_dict(t) for t in report.host_transfers],
+        "meta": dict(getattr(report, "meta", {}) or {}),
+    }
+
+
+def report_from_dict(d: dict):
+    """Dict (schema ``v1``) -> ``CommReport``.
+
+    The reverse of :func:`report_to_dict`.  Loaded reports carry everything
+    needed for matrices, tables, exports and cost models; only the live
+    compilation artifacts (``_compiled`` / ``_hlo_text``) are absent, so
+    :func:`repro.core.monitor.roofline_of` needs a freshly monitored report.
+    """
+    from ..monitor import CommReport  # deferred: monitor imports this module
+
+    return CommReport(
+        name=d["name"],
+        num_devices=int(d["num_devices"]),
+        traced=[event_from_dict(e) for e in d.get("traced", [])],
+        compiled_ops=[op_from_dict(o) for o in d.get("ops", [])],
+        traced_summary=d.get("traced_summary", {}),
+        compiled_summary=d.get("summary", {}),
+        matrix=np.asarray(d["matrix"], dtype=np.float64),
+        per_primitive={k: np.asarray(m, dtype=np.float64)
+                       for k, m in d.get("per_primitive", {}).items()},
+        cost=d.get("cost", {}),
+        memory_stats=d.get("memory_stats"),
+        trace_seconds=float(d.get("trace_seconds", 0.0)),
+        compile_seconds=float(d.get("compile_seconds", 0.0)),
+        topo=topo_from_dict(d.get("topo")),
+        host_transfers=[transfer_from_dict(t)
+                        for t in d.get("host_transfers", [])],
+        algorithm=d.get("algorithm", "ring"),
+        meta=dict(d.get("meta", {})),
+    )

@@ -11,8 +11,12 @@ execution -> post-process into matrices + statistics.  Ours:
    communication matrices (Figs. 2/3), logical-vs-physical diff, and the
    roofline terms used by the perf loop.
 
-``monitor_fn`` is the one-call entry point used by examples, benchmarks and
-the dry-run launcher.
+``monitor_fn`` is the one-call entry point used by examples, benchmarks, the
+dry-run launcher and the sweep CLI (``python -m repro sweep``).  Reports
+round-trip losslessly through :meth:`CommReport.save` / :meth:`CommReport.load`
+(schema v1, :mod:`repro.core.export.serialize`), which is also how the on-disk
+report cache (:mod:`repro.core.report_cache`) lets repeated sweeps skip
+recompilation entirely.
 """
 from __future__ import annotations
 
@@ -31,7 +35,24 @@ from .topology import MeshTopology, V5E
 
 @dataclasses.dataclass
 class CommReport:
-    """Everything ComScribe produces for one program, plus the TPU extras."""
+    """Everything ComScribe produces for one program, plus the TPU extras.
+
+    A report is a plain data object: it serializes losslessly to JSON via
+    :meth:`save` and comes back via :meth:`load`, so sweeps can cache it on
+    disk (:mod:`repro.core.report_cache`) keyed by ``(config, mesh,
+    algorithm, jax version)`` and re-render any export format without
+    recompiling.  ``algorithm`` records which collective algorithm the byte
+    accounting (``matrix``, ``per_primitive``, ``compiled_summary``) was
+    derived with; :meth:`with_algorithm` re-derives them for another
+    algorithm from the same compiled ops -- no recompilation.
+
+    Export beyond the terminal renderings below lives in
+    :mod:`repro.core.export` (JSON / CSV / HTML heatmap dashboard / Perfetto
+    timeline), or from the shell::
+
+        python -m repro report artifacts/quickstart_report.json \\
+            --formats html,perfetto --out artifacts/
+    """
 
     name: str
     num_devices: int
@@ -47,6 +68,8 @@ class CommReport:
     compile_seconds: float
     topo: Optional[MeshTopology] = None
     host_transfers: list[HostTransfer] = dataclasses.field(default_factory=list)
+    algorithm: str = "ring"                 # algorithm the matrices assume
+    meta: dict = dataclasses.field(default_factory=dict)  # sweep provenance
 
     # -- paper-style renderings -------------------------------------------
     def usage_table(self) -> str:
@@ -65,13 +88,15 @@ class CommReport:
     def diff(self) -> str:
         return reporter.diff_table(self.traced_summary, self.compiled_summary)
 
-    def total_wire_bytes(self, algorithm: str = "ring") -> float:
-        return hlo_parser.total_wire_bytes(self.compiled_ops, algorithm)
+    def total_wire_bytes(self, algorithm: Optional[str] = None) -> float:
+        return hlo_parser.total_wire_bytes(
+            self.compiled_ops, algorithm or self.algorithm)
 
-    def collective_seconds(self, algorithm: str = "ring") -> float:
+    def collective_seconds(self, algorithm: Optional[str] = None) -> float:
         if self.topo is None:
             return 0.0
-        return cost_models.total_time(self.compiled_ops, self.topo, algorithm)
+        return cost_models.total_time(
+            self.compiled_ops, self.topo, algorithm or self.algorithm)
 
     def render(self) -> str:
         parts = [
@@ -88,20 +113,55 @@ class CommReport:
             f"wire bytes (all devices) {reporter.human_bytes(self.total_wire_bytes())}")
         return "\n\n".join(parts)
 
-    def save(self, path: str):
-        reporter.dump_report(
-            path,
-            summary=self.compiled_summary,
-            ops=self.compiled_ops,
-            matrix=self.matrix,
-            extra={
-                "name": self.name,
-                "traced_summary": self.traced_summary,
-                "num_devices": self.num_devices,
-                "cost": {k: v for k, v in self.cost.items()
-                         if isinstance(v, (int, float))},
-            },
+    def with_algorithm(self, algorithm: str) -> "CommReport":
+        """Same compiled ops, byte accounting re-derived for ``algorithm``.
+
+        Compilation does not depend on the collective algorithm -- only the
+        wire-byte model and matrix edge placement do -- so this is the cheap
+        way to compare ring vs tree for one program (the sweep engine uses it
+        to fill cache entries for extra algorithms without recompiling).
+        """
+        if algorithm == self.algorithm:
+            return self
+        rep = dataclasses.replace(
+            self,
+            algorithm=algorithm,
+            compiled_summary=hlo_parser.summarize(self.compiled_ops, algorithm),
+            matrix=comm_matrix.matrix_for_ops(
+                self.compiled_ops, self.num_devices, algorithm),
+            per_primitive=comm_matrix.per_primitive_matrices(
+                self.compiled_ops, self.num_devices, algorithm),
+            meta=dict(self.meta, algorithm=algorithm),
         )
+        if self.host_transfers:
+            comm_matrix.add_host_transfers(rep.matrix, self.host_transfers)
+        for attr in ("_lowered", "_compiled", "_hlo_text"):
+            if hasattr(self, attr):
+                setattr(rep, attr, getattr(self, attr))
+        return rep
+
+    def save(self, path: str):
+        """Write the full report as schema-v1 JSON (see ``load``).
+
+        The file is a lossless round-trip: ops, traced events, matrices,
+        summaries, topology and timings all survive.  It is also a strict
+        superset of the legacy ``reporter.dump_report`` layout (``name``,
+        ``summary``, ``ops``, ``matrix`` keep their old meaning), so existing
+        consumers of those files keep working.
+        """
+        from .export import export_json
+        export_json(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "CommReport":
+        """Read a report written by :meth:`save` (or the report cache).
+
+        Loaded reports render, diff, export and feed the cost models exactly
+        like fresh ones; only ``roofline_of`` needs a live compilation (the
+        HLO text is not persisted).
+        """
+        from .export import load_json
+        return load_json(path)
 
 
 def _memory_stats(compiled) -> Optional[dict]:
@@ -147,6 +207,19 @@ def monitor_fn(
 
     ``args``/``kwargs`` may be concrete arrays or ``jax.ShapeDtypeStruct``
     stand-ins (the dry-run path: no device memory is allocated).
+
+    ``algorithm`` selects the collective algorithm assumed by the byte
+    accounting (``ring`` / ``tree`` / ``hierarchical``, paper Table 1); use
+    ``report.with_algorithm(...)`` to re-derive for another one without
+    recompiling.  Compilation dominates this call's cost -- for iterative
+    use, persist the result (``report.save``) or go through the sweep CLI,
+    which caches reports on disk keyed by ``(config, mesh, algorithm, jax
+    version)`` and logs ``[cache] hit`` instead of recompiling::
+
+        python -m repro sweep --configs paper,gnmt,resnet \\
+            --algorithms ring,tree          # first run compiles
+        python -m repro sweep --configs paper,gnmt,resnet \\
+            --algorithms ring,tree          # second run: all cache hits
     """
     jit_kw: dict[str, Any] = {}
     if in_shardings is not None:
@@ -192,6 +265,7 @@ def monitor_fn(
         compile_seconds=t2 - t1,
         topo=topo,
         host_transfers=list(host_transfers or []),
+        algorithm=algorithm,
     )
     # stash the artifacts for roofline / debugging without re-compiling
     report._lowered = lowered

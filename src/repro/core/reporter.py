@@ -70,6 +70,32 @@ def primitive_usage_table(summary: dict, title: str = "") -> str:
 _SHADES = " .:-=+*#%@"
 
 
+def coarsen_matrix(mat: np.ndarray, max_devices: int = 32) -> tuple[np.ndarray, int]:
+    """Block-sum the device block of a (d+1)x(d+1) matrix down to at most
+    ``max_devices`` rows/cols (host row/col 0 stays exact).
+
+    Returns ``(matrix, block)`` where ``block`` is the number of devices per
+    aggregated row (1 when no coarsening happened).  Shared by the ASCII and
+    HTML heatmap renderers so both stay screen-sized at production scale.
+    """
+    m = np.asarray(mat, dtype=np.float64)
+    d = m.shape[0]
+    if d <= max_devices + 1:
+        return m, 1
+    dev = m[1:, 1:]
+    k = math.ceil(dev.shape[0] / max_devices)
+    nb = math.ceil(dev.shape[0] / k)
+    pad = nb * k - dev.shape[0]
+    dev = np.pad(dev, ((0, pad), (0, pad)))
+    dev = dev.reshape(nb, k, nb, k).sum(axis=(1, 3))
+    hm = np.zeros((nb + 1, nb + 1))
+    hm[0, 0] = m[0, 0]
+    hm[1:, 1:] = dev
+    hm[0, 1:] = np.pad(m[0, 1:], (0, pad)).reshape(nb, k).sum(1)
+    hm[1:, 0] = np.pad(m[1:, 0], (0, pad)).reshape(nb, k).sum(1)
+    return hm, k
+
+
 def ascii_heatmap(mat: np.ndarray, title: str = "", log: bool = True,
                   max_devices: int = 32) -> str:
     """Render a (d+1)x(d+1) byte matrix as an ASCII heatmap.
@@ -77,24 +103,8 @@ def ascii_heatmap(mat: np.ndarray, title: str = "", log: bool = True,
     Row/col 0 is the host (paper convention).  For d > max_devices the matrix
     is coarsened by block-summing so the rendering stays terminal-sized.
     """
-    m = np.asarray(mat, dtype=np.float64)
-    d = m.shape[0]
-    if d > max_devices + 1:
-        # coarsen device block (keep host row/col exact)
-        dev = m[1:, 1:]
-        k = math.ceil(dev.shape[0] / max_devices)
-        nb = math.ceil(dev.shape[0] / k)
-        pad = nb * k - dev.shape[0]
-        dev = np.pad(dev, ((0, pad), (0, pad)))
-        dev = dev.reshape(nb, k, nb, k).sum(axis=(1, 3))
-        hm = np.zeros((nb + 1, nb + 1))
-        hm[1:, 1:] = dev
-        hm[0, 1:] = np.pad(m[0, 1:], (0, pad)).reshape(nb, k).sum(1)
-        hm[1:, 0] = np.pad(m[1:, 0], (0, pad)).reshape(nb, k).sum(1)
-        m = hm
-        blk = f" (device blocks of {k})"
-    else:
-        blk = ""
+    m, block = coarsen_matrix(mat, max_devices=max_devices)
+    blk = f" (device blocks of {block})" if block > 1 else ""
     v = m.copy()
     if log:
         with np.errstate(divide="ignore"):
@@ -163,7 +173,11 @@ def diff_table(traced_summary: dict, compiled_summary: dict) -> str:
 
 
 # ---------------------------------------------------------------------------
-# JSON dump of a full report
+# JSON dump of a full report (legacy layout)
+#
+# Kept for external consumers of the old flat files; new code should use the
+# lossless schema-v1 round-trip in repro.core.export (CommReport.save/load),
+# whose output is a strict superset of this layout.
 # ---------------------------------------------------------------------------
 def ops_to_json(ops: Iterable[CollectiveOp]) -> list[dict]:
     return [

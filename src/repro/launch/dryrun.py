@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run launcher.
 
 For every (architecture x input-shape x mesh) cell this lowers + compiles the
@@ -13,13 +10,18 @@ stand-ins — no device memory is allocated — and records:
   contribution makes this visible), and
 * the three-term roofline row (EXPERIMENTS.md §Roofline).
 
-Usage:
-  python -m repro.launch.dryrun --arch grok_1_314b --shape train_4k --mesh single
-  python -m repro.launch.dryrun --all --mesh both --skip-existing
+Usage (the CLI forwards `python -m repro dryrun ...` here):
+  python -m repro dryrun --arch grok_1_314b --shape train_4k --mesh single
+  python -m repro dryrun --all --mesh both --skip-existing
+
+The 512-host-device XLA flag is applied inside :func:`main` (not at import
+time) so importing this module for its cell builders -- as the sweep engine
+does -- never clobbers the caller's device configuration.
 """
 import argparse
 import gzip
 import json
+import os
 import time
 import traceback
 
@@ -151,8 +153,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, save_hlo=False,
     return result
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def main(argv=None) -> int:
+    from repro.compat import ensure_host_devices
+    ensure_host_devices(512)
+    ap = argparse.ArgumentParser(prog="python -m repro dryrun")
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="single",
@@ -163,7 +167,7 @@ def main():
     ap.add_argument("--sp", action="store_true", help="sequence parallelism")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default=ARTIFACT_DIR)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     todo = configs.cells() if args.all else [(args.arch, args.shape)]
     meshes = {"single": [False], "multi": [True],
@@ -198,9 +202,10 @@ def main():
         print(f"\n{len(failures)} FAILURES:")
         for f in failures:
             print(" ", f)
-        raise SystemExit(1)
+        return 1
     print("\nall dry-run cells passed")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -26,14 +26,15 @@ def make_production_mesh(*, multi_pod: bool = False):
             "any jax import")
     # slice explicitly: a 512-device process also builds the 256-chip mesh
     from jax.sharding import Mesh
+    from repro.compat import mesh_axis_types_kw
     return Mesh(np.array(devs[:n]).reshape(shape), axes,
-                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+                **mesh_axis_types_kw(len(axes)))
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small mesh for tests/examples on forced host devices."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from repro.compat import make_mesh
+    return make_mesh(shape, axes)
 
 
 def mesh_name(mesh) -> str:

@@ -1,0 +1,383 @@
+"""Config-sweep engine: monitor many (config x mesh x algorithm) cells.
+
+The paper renders one program's communication; comparing behavior *across*
+algorithms, topologies and workloads is where monitoring earns its keep
+("Demystifying NCCL", "The Landscape of GPU-Centric Communication").  This
+module runs :func:`repro.core.monitor.monitor_fn` over a registry of
+sweepable configs -- the paper's own applications (GNMT, ResNet-18, the DDP
+microbenchmark) plus every architecture in :mod:`repro.configs` at reduced
+scale -- crossed with mesh shapes and collective algorithms, and emits the
+comparative artifact set (JSON / CSV / HTML dashboard / Perfetto timeline)
+through :mod:`repro.core.export`.
+
+Three properties keep iteration fast:
+
+* **dry-run**: every cell lowers against ``jax.ShapeDtypeStruct`` stand-ins
+  (model ``.shapes()`` trees), so no device memory is ever allocated;
+* **cache**: finished reports land in the on-disk
+  :class:`~repro.core.report_cache.ReportCache` keyed by ``(config, mesh,
+  algorithm, jax version)`` -- a second sweep run recompiles nothing;
+* **algorithm derivation**: compilation is algorithm-independent, so extra
+  algorithms for an already-compiled cell are derived via
+  ``CommReport.with_algorithm`` in milliseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+from repro.core import monitor_fn
+from repro.core.report_cache import ReportCache, cache_key
+from repro.core.reporter import format_table, human_bytes
+
+ALGORITHMS = ("ring", "tree", "hierarchical")
+DEFAULT_MESHES = ("4x2",)
+
+
+# ---------------------------------------------------------------------------
+# mesh specs
+# ---------------------------------------------------------------------------
+_MESH_AXES = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}
+
+
+def parse_mesh(spec: str):
+    """``"8"`` -> (8,) data  |  ``"4x2"`` -> (4,2) data,model  |
+    ``"2x2x2"`` -> (2,2,2) pod,data,model."""
+    shape = tuple(int(p) for p in spec.lower().split("x"))
+    if len(shape) not in _MESH_AXES:
+        raise ValueError(f"mesh spec {spec!r}: want 1-3 'x'-separated ints")
+    return shape, _MESH_AXES[len(shape)]
+
+
+def mesh_id(spec: str) -> str:
+    shape, axes = parse_mesh(spec)
+    return "x".join(map(str, shape)) + ":" + ",".join(axes)
+
+
+def build_mesh(spec: str):
+    from repro.compat import make_mesh
+    shape, axes = parse_mesh(spec)
+    return make_mesh(shape, axes)
+
+
+# ---------------------------------------------------------------------------
+# sweepable-config registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One sweepable workload: a builder from mesh -> monitorable program."""
+
+    name: str
+    description: str
+    version: str                 # part of the cache key: bump to invalidate
+    build: Callable              # (mesh) -> dict(fn=, args=, kwargs=)
+
+    @property
+    def config_id(self) -> str:
+        return f"{self.name}/{self.version}"
+
+
+def _sds_like(tree):
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree)
+
+
+def _data_axis_size(mesh) -> int:
+    if "data" not in mesh.axis_names:
+        raise ValueError(
+            f"config needs a 'data' mesh axis; got {tuple(mesh.axis_names)}")
+    return dict(zip(mesh.axis_names, mesh.devices.shape))["data"]
+
+
+def _build_paper(mesh):
+    """Paper §4 microbenchmark: DDP 2-layer MLP, bucketed AllReduce."""
+    import jax
+    import jax.numpy as jnp
+    from repro.train import ddp
+
+    d = 256
+    n_data = _data_axis_size(mesh)
+    b = 4 * n_data
+
+    def loss_fn(params, batch):
+        h = jnp.tanh(batch["x"] @ params["w1"] + params["b1"])
+        pred = h @ params["w2"]
+        return ((pred - batch["y"]) ** 2).mean(), {}
+
+    step = ddp.make_ddp_train_step(loss_fn, mesh, mode="bucketed",
+                                   bucket_mb=1.0)
+    f32 = jnp.float32
+    params = {"w1": jax.ShapeDtypeStruct((d, 4 * d), f32),
+              "b1": jax.ShapeDtypeStruct((4 * d,), f32),
+              "w2": jax.ShapeDtypeStruct((4 * d, d), f32)}
+    batch = {"x": jax.ShapeDtypeStruct((b, d), f32),
+             "y": jax.ShapeDtypeStruct((b, d), f32)}
+    return {"fn": step, "args": (params, _sds_like(params), batch)}
+
+
+def _build_gnmt(mesh):
+    """Paper §4.1 app: data-parallel GNMT epoch (broadcast + DDP steps +
+    metrics AllGather), lowered against ShapeDtypeStructs."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.models.gnmt import GNMT
+    from repro.train import ddp
+
+    n_data = _data_axis_size(mesh)
+    steps, seq = 4, 16
+    b = 2 * n_data
+    model = GNMT(vocab=1024, d=64, layers=2)
+
+    def epoch(params, batches):
+        # startup Broadcast modeled as AllGather + take rank-0 (DESIGN.md §8)
+        params = jax.tree.map(
+            lambda p: jax.lax.all_gather(p, "data")[0], params)
+
+        def one(params, batch):
+            (loss, _), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+            grads, _ = ddp.allreduce_bucketed(grads, "data", bucket_mb=1.0)
+            params = jax.tree.map(
+                lambda p, g: p - 1e-2 * g.astype(p.dtype), params, grads)
+            return params, loss
+
+        params, losses = jax.lax.scan(one, params, batches)
+        metrics = jax.lax.all_gather(losses, "data")
+        return params, metrics
+
+    prog = shard_map(epoch, mesh=mesh,
+                     in_specs=(P(), P(None, "data")),
+                     out_specs=(P(), P()), check_vma=False)
+    i32 = jnp.int32
+    batches = {k: jax.ShapeDtypeStruct((steps, b, seq), i32)
+               for k in ("src", "tgt", "labels")}
+    return {"fn": prog, "args": (model.shapes(), batches)}
+
+
+def _build_resnet(mesh):
+    """Paper §4.2 app: ResNet-18 DDP step with PyTorch-style bucketing."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.resnet import ResNet18
+    from repro.train import ddp
+
+    n_data = _data_axis_size(mesh)
+    b = 2 * n_data
+    model = ResNet18(num_classes=100)
+    step = ddp.make_ddp_train_step(model.loss_fn, mesh, mode="bucketed",
+                                   bucket_mb=1.0)
+    params = model.shapes()
+    batch = {"images": jax.ShapeDtypeStruct((b, 32, 32, 3), jnp.float32),
+             "labels": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    return {"fn": step, "args": (params, _sds_like(params), batch)}
+
+
+def _arch_builder(arch: str):
+    """Reduced-scale train step for one :mod:`repro.configs` architecture,
+    sharded by the production Sharder over the given mesh (needs data+model
+    axes)."""
+
+    def build(mesh):
+        import dataclasses as dc
+
+        import jax
+        from repro import configs
+        from repro.models import build_model
+        from repro.models.common import ShapeConfig
+        from repro.optim import OptConfig
+        from repro.parallel import Sharder
+        from repro.train import TrainConfig
+        from repro.train.train import (batch_shardings, make_train_step,
+                                       train_state_shapes,
+                                       train_state_shardings)
+
+        n_data = _data_axis_size(mesh)
+        cfg = configs.config(arch, reduced=True)
+        shape = ShapeConfig("sweep_small", seq_len=64,
+                            global_batch=2 * n_data, kind="train")
+        model = build_model(cfg)
+        shd = Sharder(mesh)
+        ocfg = OptConfig(name=cfg.optimizer, state_dtype=cfg.opt_state_dtype)
+        tcfg = TrainConfig()
+        step = make_train_step(model, ocfg, tcfg, shd)
+        state_sh = train_state_shardings(model, ocfg, shd)
+        state_shapes = train_state_shapes(model, ocfg)
+        batch = configs.input_specs(cfg, shape)
+        b_sh = batch_shardings(batch, shd)
+        return {"fn": step, "args": (state_shapes, batch),
+                "kwargs": {"in_shardings": (state_sh, b_sh)}}
+
+    return build
+
+
+def _registry() -> dict[str, SweepSpec]:
+    from repro import configs as _configs
+
+    specs = [
+        SweepSpec("paper", "paper §4 DDP microbenchmark (2-layer MLP, "
+                  "bucketed AllReduce)", "v1:d=256,bucket=1", _build_paper),
+        SweepSpec("gnmt", "paper §4.1 GNMT machine translation, DDP epoch "
+                  "(broadcast + AllReduce + AllGather)",
+                  "v1:d=64,layers=2,steps=4", _build_gnmt),
+        SweepSpec("resnet", "paper §4.2 ResNet-18 image classification, DDP "
+                  "step (PyTorch-style bucketing)",
+                  "v1:classes=100,bucket=1", _build_resnet),
+    ]
+    for arch in _configs.ARCH_IDS:
+        specs.append(SweepSpec(
+            arch, f"reduced-scale {arch} train step (Sharder-sharded)",
+            "v1:reduced,seq=64", _arch_builder(arch)))
+    return {s.name: s for s in specs}
+
+
+def available_configs() -> dict[str, SweepSpec]:
+    """Name -> spec for every sweepable config (paper apps + architectures)."""
+    return _registry()
+
+
+# ---------------------------------------------------------------------------
+# the sweep itself
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepResult:
+    reports: list                        # CommReport, one per finished cell
+    failures: list[dict]                 # {config, mesh, error}
+    cache_hits: int
+    compiles: int
+    artifacts: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def summary_table(self) -> str:
+        rows = []
+        for rep in self.reports:
+            total_wire = sum(r.get("wire_bytes", 0.0)
+                             for r in rep.compiled_summary.values())
+            calls = sum(r.get("calls", 0)
+                        for r in rep.compiled_summary.values())
+            dominant = max(
+                rep.compiled_summary,
+                key=lambda k: rep.compiled_summary[k].get("wire_bytes", 0.0),
+            ) if rep.compiled_summary else "-"
+            rows.append([
+                rep.meta.get("config", rep.name),
+                rep.meta.get("mesh", f"{rep.num_devices}dev"),
+                rep.algorithm,
+                f"{rep.num_devices}",
+                f"{calls:,}",
+                human_bytes(total_wire),
+                f"{rep.collective_seconds(rep.algorithm) * 1e3:.3f}",
+                dominant,
+                rep.meta.get("source", "?"),
+            ])
+        return format_table(rows, [
+            "config", "mesh", "algorithm", "devices", "collective calls",
+            "wire bytes", "collective ms", "dominant primitive", "source"])
+
+
+def run_sweep(
+    config_names: list[str],
+    mesh_specs: list[str] = DEFAULT_MESHES,
+    algorithms: list[str] = ("ring",),
+    *,
+    cache: Optional[ReportCache] = None,
+    use_cache: bool = True,
+    log: Callable[[str], None] = print,
+) -> SweepResult:
+    """Monitor every (config, mesh) cell, derive every algorithm, cache all.
+
+    Per cell: try the cache for each requested algorithm; if at least one
+    entry exists, derive the missing algorithms from it (compile-free); only
+    a fully-cold cell compiles, once, regardless of algorithm count.
+    """
+    registry = _registry()
+    unknown = [c for c in config_names if c not in registry]
+    if unknown:
+        raise KeyError(
+            f"unknown config(s) {unknown}; known: {sorted(registry)}")
+    for alg in algorithms:
+        if alg not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {alg!r}; known: {ALGORITHMS}")
+    cache = cache or ReportCache()
+    result = SweepResult(reports=[], failures=[], cache_hits=0, compiles=0)
+
+    for cname in config_names:
+        spec = registry[cname]
+        for mspec in mesh_specs:
+            mid = mesh_id(mspec)
+            keys = {alg: cache_key(spec.config_id, mid, alg)
+                    for alg in algorithms}
+            cell: dict[str, object] = {}
+            if use_cache:
+                for alg, key in keys.items():
+                    rep = cache.get(key)
+                    if rep is not None:
+                        log(f"[cache] hit config={cname} mesh={mspec} "
+                            f"algorithm={alg} key={key}")
+                        rep.meta["source"] = "cache"
+                        cell[alg] = rep
+                        result.cache_hits += 1
+            missing = [a for a in algorithms if a not in cell]
+            sibling = None
+            if missing and not cell and use_cache:
+                # an entry for an UNrequested algorithm still spares the
+                # compile: everything derives from the same compiled ops
+                for alg in ALGORITHMS:
+                    if alg in keys:
+                        continue            # already probed above
+                    rep = cache.get(cache_key(spec.config_id, mid, alg))
+                    if rep is not None:
+                        log(f"[cache] sibling hit config={cname} "
+                            f"mesh={mspec} algorithm={alg} -- deriving "
+                            "requested algorithms without recompiling")
+                        rep.meta["source"] = "cache"
+                        sibling = rep
+                        break
+            if missing and not cell and sibling is None:
+                # fully cold: compile once for the first missing algorithm
+                alg0 = missing[0]
+                log(f"[sweep] compile config={cname} mesh={mspec} "
+                    f"algorithm={alg0} ...")
+                t0 = time.perf_counter()
+                try:
+                    mesh = build_mesh(mspec)
+                    built = spec.build(mesh)
+                    rep = monitor_fn(
+                        built["fn"], *built.get("args", ()),
+                        mesh=mesh, name=f"{cname}@{mspec}",
+                        algorithm=alg0, **built.get("kwargs", {}))
+                except Exception as e:  # noqa: BLE001 -- keep sweeping
+                    log(f"[sweep] FAIL config={cname} mesh={mspec}: {e!r}")
+                    result.failures.append(
+                        {"config": cname, "mesh": mspec, "error": repr(e)})
+                    continue
+                result.compiles += 1
+                log(f"[sweep] compiled config={cname} mesh={mspec} in "
+                    f"{time.perf_counter() - t0:.1f}s "
+                    f"({len(rep.compiled_ops)} collectives)")
+                rep.meta.update(config=cname, mesh=mspec, source="compiled")
+                cell[alg0] = rep
+                missing = [a for a in algorithms if a not in cell]
+            if missing and (cell or sibling):
+                # warm: derive remaining algorithms without recompiling
+                base = next(iter(cell.values())) if cell else sibling
+                for alg in missing:
+                    rep = base.with_algorithm(alg)
+                    rep.meta = dict(base.meta, source="derived",
+                                    algorithm=alg)
+                    log(f"[sweep] derive config={cname} mesh={mspec} "
+                        f"algorithm={alg} (no recompile)")
+                    cell[alg] = rep
+            for alg in algorithms:
+                if alg not in cell:
+                    continue
+                rep = cell[alg]
+                rep.meta.update(config=cname, mesh=mspec, algorithm=alg)
+                result.reports.append(rep)
+                if use_cache and rep.meta.get("source") != "cache":
+                    cache.put(keys[alg], rep, meta=rep.meta)
+    return result

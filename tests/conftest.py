@@ -12,14 +12,14 @@ import pytest  # noqa: E402
 
 @pytest.fixture(scope="session")
 def mesh8():
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    return make_mesh((4, 2), ("data", "model"))
 
 
 @pytest.fixture(scope="session")
 def mesh_dp():
-    return jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    return make_mesh((8,), ("data",))
 
 
 @pytest.fixture(scope="session")

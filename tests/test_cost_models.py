@@ -1,6 +1,12 @@
-"""Paper Table 1 values + algorithm-model properties (hypothesis)."""
-import hypothesis.strategies as st
+"""Paper Table 1 values + algorithm-model properties (hypothesis).
+
+``hypothesis`` is an optional [test] extra: without it this module degrades
+to a skip instead of a collection error.
+"""
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import cost_models

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import CollectiveInterceptor, intercept
+from repro.compat import shard_map
 
 
 def _traced_program(mesh):
@@ -13,7 +14,7 @@ def _traced_program(mesh):
         w = jax.lax.ppermute(x, "data", [(i, (i + 1) % 4) for i in range(4)])
         return y.sum() + z.sum() + w.sum()
 
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
                                  out_specs=P(), check_vma=False))
 
 
@@ -58,7 +59,7 @@ class TestInterceptor:
         prog = _traced_program(mesh8)
         expected = prog(x)
         with intercept(mesh8):
-            got = jax.jit(jax.shard_map(
+            got = jax.jit(shard_map(
                 lambda v: jax.lax.psum(v, "data").sum(), mesh=mesh8,
                 in_specs=P("data"), out_specs=P(), check_vma=False))(x)
         assert jnp.isfinite(got)

@@ -8,6 +8,7 @@ import pytest
 from repro import configs
 from repro.models import build_model
 from repro.parallel import Sharder
+from repro.compat import make_mesh
 
 ARCHS = list(configs.ARCH_IDS)
 
@@ -150,8 +151,7 @@ class TestXLSTMMath:
         from repro.models.common import init_params
         from repro.parallel import Sharder
         import jax
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
         shd1 = Sharder(mesh)
         cfg = ModelConfig(name="t", family="hybrid", n_layers=1, d_model=32,
                           n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64,

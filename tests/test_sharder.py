@@ -5,6 +5,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import Sharder
+from repro.compat import make_mesh
 
 
 class TestSpec:
@@ -28,14 +29,12 @@ class TestSpec:
         assert spec == P("data", None, None, "model")
 
     def test_multi_axis_batch(self):
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         shd = Sharder(mesh)
         assert shd.spec((8, 128), ("batch", None)) == P(("pod", "data"), None)
 
     def test_multi_axis_prefix_fallback(self):
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         shd = Sharder(mesh)
         # batch=2 divisible by pod(2) but not pod*data(4) -> prefix ("pod",)
         assert shd.spec((2, 16), ("batch", None)) == P("pod", None)

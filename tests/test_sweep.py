@@ -1,0 +1,82 @@
+"""Sweep engine: mesh parsing, registry, cache-backed no-recompile re-runs."""
+import pytest
+
+from repro import sweep
+from repro.core import ReportCache
+
+
+class TestMeshSpecs:
+    def test_parse(self):
+        assert sweep.parse_mesh("8") == ((8,), ("data",))
+        assert sweep.parse_mesh("4x2") == ((4, 2), ("data", "model"))
+        assert sweep.parse_mesh("2x2x2") == ((2, 2, 2),
+                                             ("pod", "data", "model"))
+
+    def test_mesh_id_canonical(self):
+        assert sweep.mesh_id("4x2") == "4x2:data,model"
+
+    def test_bad_spec(self):
+        with pytest.raises(ValueError):
+            sweep.parse_mesh("2x2x2x2")
+
+
+class TestRegistry:
+    def test_paper_apps_and_archs_present(self):
+        from repro import configs
+        names = set(sweep.available_configs())
+        assert {"paper", "gnmt", "resnet"} <= names
+        assert set(configs.ARCH_IDS) <= names
+
+    def test_unknown_config_rejected(self):
+        with pytest.raises(KeyError):
+            sweep.run_sweep(["nope"], ["4x2"], ["ring"])
+
+    def test_unknown_algorithm_rejected(self):
+        with pytest.raises(ValueError):
+            sweep.run_sweep(["paper"], ["4x2"], ["nccl"])
+
+
+class TestSweepRuns:
+    def test_cold_then_cached(self, tmp_path):
+        cache = ReportCache(root=str(tmp_path / "cache"))
+        logs: list[str] = []
+        res = sweep.run_sweep(["paper"], ["4x2"], ["ring", "tree"],
+                              cache=cache, log=logs.append)
+        assert not res.failures
+        assert res.compiles == 1              # tree derived, not recompiled
+        assert [r.algorithm for r in res.reports] == ["ring", "tree"]
+        assert any("derive" in l for l in logs)
+        assert "paper" in res.summary_table()
+
+        logs.clear()
+        cache2 = ReportCache(root=str(tmp_path / "cache"))
+        res2 = sweep.run_sweep(["paper"], ["4x2"], ["ring", "tree"],
+                               cache=cache2, log=logs.append)
+        assert res2.compiles == 0 and res2.cache_hits == 2
+        assert all("[cache] hit" in l for l in logs)
+        for a, b in zip(res.reports, res2.reports):
+            assert a.matrix.sum() == pytest.approx(b.matrix.sum())
+
+    def test_new_algorithm_derives_from_cached_sibling(self, tmp_path):
+        cache = ReportCache(root=str(tmp_path / "cache"))
+        sweep.run_sweep(["paper"], ["4x2"], ["ring"], cache=cache)
+        logs: list[str] = []
+        res = sweep.run_sweep(["paper"], ["4x2"], ["ring", "hierarchical"],
+                              cache=ReportCache(root=str(tmp_path / "cache")),
+                              log=logs.append)
+        # the sibling ring entry satisfies hierarchical without compiling
+        assert res.compiles == 0
+        assert any("derive" in l and "hierarchical" in l for l in logs)
+
+    def test_unrequested_sibling_spares_compile(self, tmp_path):
+        cache = ReportCache(root=str(tmp_path / "cache"))
+        sweep.run_sweep(["paper"], ["4x2"], ["ring"], cache=cache)
+        logs: list[str] = []
+        res = sweep.run_sweep(["paper"], ["4x2"], ["tree"],
+                              cache=ReportCache(root=str(tmp_path / "cache")),
+                              log=logs.append)
+        # ring wasn't requested this time, but its cache entry still spares
+        # the compile: tree derives from it
+        assert res.compiles == 0
+        assert any("sibling hit" in l for l in logs)
+        assert res.reports[0].algorithm == "tree"
