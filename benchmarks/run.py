@@ -15,7 +15,8 @@ import traceback
 
 from benchmarks import common
 
-BENCHES = ("table1", "table2", "table3", "fig3", "overhead", "roofline")
+BENCHES = ("table1", "table2", "table3", "fig3", "links", "overhead",
+           "roofline")
 
 
 def run_one(name: str) -> bool:
@@ -25,6 +26,7 @@ def run_one(name: str) -> bool:
         "table2": "benchmarks.table2_gnmt",
         "table3": "benchmarks.table3_resnet_bucketing",
         "fig3": "benchmarks.fig3_per_primitive",
+        "links": "benchmarks.link_utilization",
         "overhead": "benchmarks.overhead",
         "roofline": "benchmarks.roofline_table",
     }[name]

@@ -103,7 +103,7 @@ def _cmd_sweep(args) -> int:
             print(f"  {f}", file=sys.stderr)
         return 1
 
-    table = result.summary_table()
+    table = result.summary_table(by_link=args.by_link)
     print()
     print(f"== sweep summary: {len(result.reports)} cells "
           f"({result.compiles} compiled, {result.cache_hits} cache hits) ==")
@@ -236,6 +236,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="comma list of mesh specs, e.g. 8,4x2,2x2x2")
     p.add_argument("--algorithms", default="ring",
                    help="comma list of ring,tree,hierarchical")
+    p.add_argument("--by-link", action="store_true", dest="by_link",
+                   help="add per-link utilization columns (busiest physical "
+                        "ICI/DCN link and its contention-aware bottleneck "
+                        "ms) to the summary table")
     p.add_argument("--formats", default="json,csv,html,perfetto")
     p.add_argument("--out", default=os.path.join("artifacts", "sweep"))
     p.add_argument("--devices", type=int, default=8)
@@ -260,7 +264,7 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("bench", help="paper-table benchmark suite")
     p.add_argument("names", nargs="*",
-                   help="table1 table2 table3 fig3 overhead roofline "
+                   help="table1 table2 table3 fig3 links overhead roofline "
                         "(default: all)")
     p.add_argument("--devices", type=int, default=8)
     p.set_defaults(func=_cmd_bench)

@@ -39,6 +39,43 @@ def make_mesh(axis_shapes, axis_names):
                          **mesh_axis_types_kw(len(axis_names)))
 
 
+_HAS_COMBINER: bool | None = None
+
+
+def has_allreduce_combiner() -> bool:
+    """Does this jaxlib's compiler combine independent all-reduces?
+
+    XLA's all-reduce combiner pass performs DDP-style gradient bucketing
+    automatically (paper Table 3's optimization, done by the compiler).
+    Old CPU jaxlibs (0.4.x) never run it, so per-parameter psums stay
+    1-per-tensor in the compiled module.  This probes the actual behavior
+    -- compile a two-psum program and count the surviving all-reduce ops --
+    rather than guessing from version strings.  The result is cached for
+    the process (one small compile, first call only).
+    """
+    global _HAS_COMBINER
+    if _HAS_COMBINER is not None:
+        return _HAS_COMBINER
+
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((jax.device_count(),), ("_probe",))
+
+    def two_psums(a, b):
+        return (jax.lax.psum(a, "_probe"), jax.lax.psum(b, "_probe"))
+
+    fn = jax.jit(shard_map(two_psums, mesh=mesh,
+                           in_specs=(P("_probe"), P("_probe")),
+                           out_specs=(P("_probe"), P("_probe"))))
+    import jax.numpy as jnp
+    args = [jax.ShapeDtypeStruct((jax.device_count(), 8), jnp.float32)] * 2
+    hlo = fn.lower(*args).compile().as_text()
+    n_ar = len([l for l in hlo.splitlines()
+                if " all-reduce(" in l or " all-reduce-start(" in l])
+    _HAS_COMBINER = n_ar <= 1
+    return _HAS_COMBINER
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
     """``jax.shard_map``, falling back to the pre-promotion experimental API
     (where ``check_vma`` was spelled ``check_rep``)."""

@@ -3,9 +3,12 @@
 from .events import CollectiveOp, HostTransfer, Shape, TraceEvent, jax_shape
 from .interceptor import CollectiveInterceptor, intercept
 from .hlo_parser import parse_hlo_collectives, summarize, total_wire_bytes
-from .comm_matrix import matrix_for_ops, per_primitive_matrices, add_host_transfers
-from .cost_models import wire_bytes_per_rank, collective_time, table1_allreduce_bytes
-from .topology import HardwareSpec, MeshTopology, V5E
+from .comm_matrix import (LinkUtilization, add_host_transfers,
+                          link_utilization_for_ops, matrix_for_ops,
+                          per_primitive_matrices, project_links)
+from .cost_models import (collective_time, contention_time, device_send_bytes,
+                          table1_allreduce_bytes, wire_bytes_per_rank)
+from .topology import HardwareSpec, Link, MeshTopology, V5E
 from .monitor import CommReport, monitor_fn, roofline_of
 from .roofline import RooflineReport, analyze as roofline_analyze
 from .report_cache import ReportCache, cache_key
@@ -17,8 +20,10 @@ __all__ = [
     "CollectiveInterceptor", "intercept",
     "parse_hlo_collectives", "summarize", "total_wire_bytes",
     "matrix_for_ops", "per_primitive_matrices", "add_host_transfers",
+    "LinkUtilization", "project_links", "link_utilization_for_ops",
     "wire_bytes_per_rank", "collective_time", "table1_allreduce_bytes",
-    "HardwareSpec", "MeshTopology", "V5E",
+    "contention_time", "device_send_bytes",
+    "HardwareSpec", "Link", "MeshTopology", "V5E",
     "CommReport", "monitor_fn", "roofline_of",
     "RooflineReport", "roofline_analyze",
     "ReportCache", "cache_key",

@@ -3,21 +3,35 @@
 A ``(d+1) x (d+1)`` matrix where entry ``(i+1, j+1)`` is the number of bytes
 device ``i`` sends to device ``j``; row/column 0 is reserved for the host
 (paper Fig. 2).  Matrices are built from compiled :class:`CollectiveOp` lists
-with an algorithm-aware edge model:
+with an algorithm- and topology-faithful edge model:
 
 * ring collectives place traffic on consecutive group neighbours,
-* tree collectives place traffic on binary-tree edges,
+* tree collectives place traffic on binary-tree edges with per-role amounts
+  (root sends S per child, leaves send up only) for all-reduce, all-gather,
+  reduce-scatter and broadcast,
+* hierarchical all-reduce decomposes a cross-pod group into intra-pod ring
+  edges plus a cross-pod DCN exchange of the reduce-scattered shard -- the
+  placement that matches ``wire_bytes_per_rank(..., "hierarchical")``,
 * collective-permute uses its explicit source-target pairs,
 * all-to-all places uniform pairwise traffic.
+
+Every matrix row sum equals ``cost_models.device_send_bytes`` times the op
+weight (the matrix/model consistency contract, enforced by tests), and any
+matrix can be **projected onto physical links** (:func:`project_links`):
+each logical edge is routed over the ICI torus / DCN uplinks of a
+:class:`~repro.core.topology.MeshTopology`, yielding per-link byte counts,
+the bottleneck link, and a contention-aware time bound.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Iterable, Optional
 
 import numpy as np
 
 from .events import CollectiveOp, HostTransfer
 from . import cost_models
+from .topology import DCN_FABRIC, Link, MeshTopology
 
 
 def _ring_edges(group: list[int]) -> list[tuple[int, int]]:
@@ -25,15 +39,111 @@ def _ring_edges(group: list[int]) -> list[tuple[int, int]]:
     return [(group[i], group[(i + 1) % n]) for i in range(n)]
 
 
-def _tree_edges(group: list[int]) -> list[tuple[int, int]]:
-    """Binary-tree edges (both directions: reduce up, broadcast down)."""
-    edges = []
+_TREE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+               "collective-broadcast")
+
+
+def _tree_placement(group: list[int], kind: str,
+                    s: float) -> list[tuple[int, int, float]]:
+    """Per-edge bytes on the implicit binary tree (heap layout).
+
+    Uses the same structure as :func:`cost_models.tree_subtree_sizes` so
+    row sums reproduce :func:`cost_models.device_send_bytes` exactly:
+
+    * all-reduce: S up (reduce) and S down (broadcast) every edge,
+    * broadcast: S down only,
+    * all-gather: a child sends its subtree's shards up, a parent sends
+      everything the child's subtree lacks down,
+    * reduce-scatter: the time-reversed all-gather.
+    """
     n = len(group)
+    sizes = cost_models.tree_subtree_sizes(n)
+    edges: list[tuple[int, int, float]] = []
     for i in range(1, n):
         parent = group[(i - 1) // 2]
         child = group[i]
-        edges.append((child, parent))
-        edges.append((parent, child))
+        if kind == "all-reduce":
+            up, down = s, s
+        elif kind == "collective-broadcast":
+            up, down = 0.0, s
+        elif kind == "all-gather":
+            up, down = sizes[i] * s / n, (n - sizes[i]) * s / n
+        else:  # reduce-scatter
+            up, down = (n - sizes[i]) * s / n, sizes[i] * s / n
+        if up:
+            edges.append((child, parent, up))
+        if down:
+            edges.append((parent, child, down))
+    return edges
+
+
+def _hierarchical_placement(group: list[int], s: float,
+                            topo: MeshTopology) -> Optional[
+                                list[tuple[int, int, float]]]:
+    """Intra-pod ring edges + cross-pod DCN exchange for one all-reduce.
+
+    Phase placement matching ``wire_bytes_per_rank(..., "hierarchical",
+    pods=p)``: reduce-scatter + all-gather rings inside each pod subgroup
+    (``2*(m-1)/m*S`` per member) and a ring all-reduce of each member's
+    ``S/m`` shard across the ``p`` same-index members of the other pods
+    (``2*(p-1)/p * S/m`` -- the only bytes that cross DCN).  Returns None
+    when the group does not split evenly across pods (degenerate case: the
+    caller falls back to the plain ring placement, exactly like
+    ``_hier_split``).
+    """
+    subs = topo.pod_partition(group)
+    p = len(subs)
+    n = len(group)
+    if p <= 1 or n % p != 0 or any(len(sub) != n // p for sub in subs):
+        return None
+    m = n // p
+    edges: list[tuple[int, int, float]] = []
+    if m > 1:
+        per_phase = (m - 1) * s / m          # RS ring; AG ring is identical
+        for sub in subs:
+            for i in range(m):
+                edges.append((sub[i], sub[(i + 1) % m], 2.0 * per_phase))
+    cross_per_rank = 2.0 * (p - 1) * (s / m) / p
+    for j in range(m):
+        ring = [subs[k][j] for k in range(p)]
+        for k in range(p):
+            edges.append((ring[k], ring[(k + 1) % p], cross_per_rank))
+    return edges
+
+
+def op_edges(op: CollectiveOp, algorithm: str = "ring",
+             topo: Optional[MeshTopology] = None) -> list[tuple[int, int, float]]:
+    """``(src, dst, bytes)`` edges for ONE execution of ``op`` (weight not
+    applied).  The single source of truth for edge placement: matrices,
+    link projections and the consistency tests all go through here.
+    """
+    edges: list[tuple[int, int, float]] = []
+    if op.kind == "collective-permute":
+        nbytes = float(op.result_bytes)
+        return [(src, dst, nbytes) for src, dst in op.source_target_pairs]
+    for group in op.replica_groups or [[]]:
+        n = len(group)
+        if n <= 1:
+            continue
+        s = float(op.payload_bytes)
+        if op.kind in ("all-to-all", "ragged-all-to-all"):
+            block = s / (n * n)
+            edges.extend((a, b, block)
+                         for a in group for b in group if a != b)
+            continue
+        if algorithm == "tree" and op.kind in _TREE_KINDS:
+            edges.extend(_tree_placement(group, op.kind, s))
+            continue
+        if algorithm == "hierarchical" and op.kind == "all-reduce" \
+                and topo is not None and topo.group_crosses_dcn(group):
+            placed = _hierarchical_placement(group, s, topo)
+            if placed is not None:
+                edges.extend(placed)
+                continue
+        pods = len(topo.pod_partition(group)) if topo is not None else 1
+        per_rank = cost_models.wire_bytes_per_rank(
+            op.kind, s, n, algorithm, pods=pods)
+        edges.extend((src, dst, per_rank) for src, dst in _ring_edges(group))
     return edges
 
 
@@ -42,41 +152,22 @@ def matrix_for_ops(
     num_devices: int,
     algorithm: str = "ring",
     kinds: Optional[set[str]] = None,
+    topo: Optional[MeshTopology] = None,
 ) -> np.ndarray:
-    """Bytes-sent matrix, shape ``(d+1, d+1)``; row/col 0 = host."""
+    """Bytes-sent matrix, shape ``(d+1, d+1)``; row/col 0 = host.
+
+    ``topo`` enables topology-faithful placement (the hierarchical
+    algorithm's pod decomposition); without it hierarchical degenerates to
+    ring, matching ``wire_bytes_per_rank(..., pods=1)``.
+    """
     mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
     for op in ops:
         if kinds is not None and op.kind not in kinds:
             continue
         w = getattr(op, "weight", 1.0)   # execution count (loop trip counts)
-        if op.kind == "collective-permute":
-            nbytes = op.result_bytes * w
-            for src, dst in op.source_target_pairs:
-                if src < num_devices and dst < num_devices:
-                    mat[src + 1, dst + 1] += nbytes
-            continue
-        for group in op.replica_groups or [[]]:
-            if len(group) <= 1:
-                continue
-            n = len(group)
-            s = op.payload_bytes
-            if op.kind in ("all-to-all", "ragged-all-to-all"):
-                block = s / (n * n) * w
-                for a in group:
-                    for b in group:
-                        if a != b and a < num_devices and b < num_devices:
-                            mat[a + 1, b + 1] += block
-                continue
-            per_rank = cost_models.wire_bytes_per_rank(op.kind, s, n, algorithm)
-            if algorithm == "tree" and op.kind == "all-reduce":
-                edges = _tree_edges(group)
-                per_edge = per_rank * n / max(1, len(edges)) * w
-            else:
-                edges = _ring_edges(group)
-                per_edge = per_rank * w  # per_rank to the next hop, per exec
-            for src, dst in edges:
-                if src < num_devices and dst < num_devices:
-                    mat[src + 1, dst + 1] += per_edge
+        for src, dst, nbytes in op_edges(op, algorithm, topo):
+            if src < num_devices and dst < num_devices:
+                mat[src + 1, dst + 1] += nbytes * w
     return mat
 
 
@@ -90,10 +181,136 @@ def add_host_transfers(mat: np.ndarray, transfers: Iterable[HostTransfer]) -> np
 
 
 def per_primitive_matrices(
-    ops: list[CollectiveOp], num_devices: int, algorithm: str = "ring"
+    ops: list[CollectiveOp], num_devices: int, algorithm: str = "ring",
+    topo: Optional[MeshTopology] = None,
 ) -> dict[str, np.ndarray]:
     """Paper Fig. 3: one matrix per collective primitive."""
     kinds = sorted({op.kind for op in ops})
     return {
-        k: matrix_for_ops(ops, num_devices, algorithm, kinds={k}) for k in kinds
+        k: matrix_for_ops(ops, num_devices, algorithm, kinds={k}, topo=topo)
+        for k in kinds
     }
+
+
+# ---------------------------------------------------------------------------
+# Physical-link projection: where the bytes actually travel.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LinkUtilization:
+    """Per-physical-link byte counts for one communication matrix.
+
+    ``bytes_by_link`` covers every link of the topology (zero-traffic links
+    included, so utilization denominators are meaningful).  Multi-hop
+    logical edges charge every link on their route, so the sum over links
+    can exceed the matrix total -- that is the point: it exposes transit
+    traffic a logical matrix hides.
+    """
+
+    topo: MeshTopology
+    bytes_by_link: dict[Link, float]
+
+    def seconds(self, link: Link) -> float:
+        return self.bytes_by_link.get(link, 0.0) / self.topo.link_bandwidth(link)
+
+    def total_bytes(self, kind: Optional[str] = None) -> float:
+        return float(sum(b for l, b in self.bytes_by_link.items()
+                         if kind is None or l.kind == kind))
+
+    def bottleneck(self) -> Optional[tuple[Link, float]]:
+        """(busiest link, seconds on it), by time -- None when no link
+        carries any traffic (every link is pre-seeded at 0 bytes, so an
+        emptiness check alone would name an arbitrary idle link)."""
+        if not self.bytes_by_link or not any(self.bytes_by_link.values()):
+            return None
+        link = max(self.bytes_by_link, key=self.seconds)
+        return link, self.seconds(link)
+
+    def bottleneck_seconds(self) -> float:
+        """Contention-aware time bound: max over links of bytes/bandwidth."""
+        bn = self.bottleneck()
+        return bn[1] if bn else 0.0
+
+    def matrix(self) -> np.ndarray:
+        """The per-link utilization matrix, shape ``(d+1, d+1)``.
+
+        Entry ``(i+1, j+1)`` is the bytes carried by the *physical* ICI
+        link ``i -> j`` (only torus-neighbour entries can be nonzero).
+        Row/col 0 is the **DCN tier**: ``(i+1, 0)`` is device ``i``'s DCN
+        uplink, ``(0, j+1)`` device ``j``'s downlink -- the slot the
+        logical matrix uses for the host plays the off-fabric role here.
+        """
+        d = self.topo.num_devices
+        mat = np.zeros((d + 1, d + 1), dtype=np.float64)
+        for link, nbytes in self.bytes_by_link.items():
+            if link.kind == "ici":
+                mat[link.src + 1, link.dst + 1] += nbytes
+            elif link.dst == DCN_FABRIC:
+                mat[link.src + 1, 0] += nbytes
+            else:
+                mat[0, link.dst + 1] += nbytes
+        return mat
+
+    def summary(self) -> dict:
+        """Per link-kind aggregates for tables and serialization."""
+        out: dict[str, dict] = {}
+        for link, nbytes in self.bytes_by_link.items():
+            row = out.setdefault(link.kind, {
+                "links": 0, "bytes": 0.0, "busiest_link": "",
+                "busiest_bytes": 0.0, "bottleneck_seconds": 0.0})
+            row["links"] += 1
+            row["bytes"] += nbytes
+            secs = self.seconds(link)
+            if secs > row["bottleneck_seconds"]:
+                row.update(busiest_link=link.name, busiest_bytes=nbytes,
+                           bottleneck_seconds=secs)
+        return out
+
+    def rows(self) -> list[dict]:
+        """One serializable row per link (schema-v2 ``links`` section)."""
+        return [{"kind": l.kind, "src": l.src, "dst": l.dst, "axis": l.axis,
+                 "bytes": float(b),
+                 "bandwidth": self.topo.link_bandwidth(l),
+                 "seconds": self.seconds(l)}
+                for l, b in sorted(self.bytes_by_link.items(),
+                                   key=lambda kv: -kv[1])]
+
+    def table(self) -> str:
+        """Terminal rendering of the per-kind aggregates."""
+        from . import reporter
+        rows = []
+        summary = self.summary()
+        for kind in sorted(summary):
+            r = summary[kind]
+            rows.append([kind, f"{r['links']}",
+                         reporter.human_bytes(r["bytes"]),
+                         r["busiest_link"],
+                         reporter.human_bytes(r["busiest_bytes"]),
+                         f"{r['bottleneck_seconds'] * 1e3:.3f}"])
+        return reporter.format_table(rows, [
+            "link kind", "links", "total bytes", "busiest link",
+            "busiest bytes", "bottleneck ms"])
+
+
+def project_links(mat: np.ndarray, topo: MeshTopology) -> LinkUtilization:
+    """Route a logical ``(d+1)^2`` matrix onto physical links.
+
+    The host row/col (index 0) is skipped -- host transfers ride PCIe, not
+    the ICI/DCN fabric.  Each device-to-device entry is routed by
+    :meth:`MeshTopology.route` (dimension-ordered on the torus, DCN
+    uplink+downlink across pods) and its bytes charged to every hop.
+    """
+    bytes_by_link: dict[Link, float] = {l: 0.0 for l in topo.links()}
+    dev = np.asarray(mat, dtype=np.float64)[1:, 1:]
+    for i, j in np.argwhere(dev > 0):
+        for link in topo.route(int(i), int(j)):
+            bytes_by_link[link] = bytes_by_link.get(link, 0.0) + dev[i, j]
+    return LinkUtilization(topo=topo, bytes_by_link=bytes_by_link)
+
+
+def link_utilization_for_ops(
+    ops: list[CollectiveOp], topo: MeshTopology, algorithm: str = "ring",
+    kinds: Optional[set[str]] = None,
+) -> LinkUtilization:
+    """Place ``ops`` (algorithm-faithfully) and project onto physical links."""
+    mat = matrix_for_ops(ops, topo.num_devices, algorithm, kinds, topo=topo)
+    return project_links(mat, topo)

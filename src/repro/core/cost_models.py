@@ -7,20 +7,28 @@ same structure; the TPU-native algorithm menu is:
 
 * ``ring``         -- bandwidth-optimal ring per torus axis (XLA default for
                       large payloads; NCCL-ring analogue).
-* ``tree``         -- recursive doubling/halving, logarithmic latency (small
+* ``tree``         -- binary reduce/broadcast tree, logarithmic latency (small
                       payloads; NCCL-tree analogue).
 * ``hierarchical`` -- reduce-scatter inside the pod over ICI, cross-pod
-                      exchange over DCN, all-gather inside the pod (the
-                      collnet/SHARP analogue: only S/N_pod crosses the slow
-                      tier).
+                      ring exchange of the scattered shards over DCN,
+                      all-gather inside the pod (the collnet/SHARP analogue:
+                      only S/N_in_pod crosses the slow tier).  With ``pods=1``
+                      (no DCN tier) it degenerates exactly to ``ring``.
 
 ``wire_bytes_per_rank`` reproduces the Table-1 entries; ``collective_time``
-turns them into seconds on a :class:`~repro.core.topology.MeshTopology`.
+turns them into seconds on a :class:`~repro.core.topology.MeshTopology`,
+honouring the *requested* algorithm even when the group spans DCN (a ring
+all-reduce across pods pays its full per-rank payload at the per-chip DCN
+share -- it is never silently rebilled as hierarchical).
+``device_send_bytes`` resolves the per-rank entries down to each device's
+role (tree roots/leaves send different amounts), and is the contract the
+communication-matrix row sums are tested against.  ``contention_time``
+projects the matrix onto physical links and takes the bottleneck link.
 """
 from __future__ import annotations
 
 import math
-from typing import Iterable
+from typing import Iterable, Optional
 
 from .events import CollectiveOp
 from .topology import MeshTopology
@@ -28,12 +36,30 @@ from .topology import MeshTopology
 ALGORITHMS = ("ring", "tree", "hierarchical")
 
 
-def wire_bytes_per_rank(kind: str, payload: float, n: int, algorithm: str = "ring") -> float:
+def _hier_split(n: int, pods: int) -> tuple[int, int]:
+    """(pods, in_pod) for a hierarchical decomposition of an ``n``-rank group.
+
+    Degenerates to ``(1, n)`` when the group does not split evenly across
+    pods (or there is no DCN tier), which makes hierarchical == ring.
+    """
+    p = max(1, int(pods))
+    if p <= 1 or n % p != 0 or n // p < 1:
+        return 1, n
+    return p, n // p
+
+
+def wire_bytes_per_rank(kind: str, payload: float, n: int,
+                        algorithm: str = "ring", *, pods: int = 1) -> float:
     """Bytes *sent* by one rank for one collective (paper Table 1 analogue).
 
     ``payload`` is S (the full logical payload per group), ``n`` the group
-    size.  Receives mirror sends for all entries below (symmetric algorithms),
-    matching the paper's "sent and received" accounting.
+    size.  ``pods`` is the number of DCN tiers the group spans -- only the
+    hierarchical all-reduce entry depends on it (reduce-scatter over the
+    ``n/pods`` in-pod ranks, cross-pod ring over ``pods``, all-gather in
+    pod).  Receives mirror sends for all entries below (symmetric
+    algorithms), matching the paper's "sent and received" accounting.  Tree
+    entries report the non-root (dominant) cost; ``device_send_bytes``
+    resolves per-role amounts.
     """
     if n <= 1:
         return 0.0
@@ -49,8 +75,12 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int, algorithm: str = "rin
             # double binary tree: non-root sends S up + S down (pipelined);
             # paper: root S, others 2S.  Report the non-root (dominant) cost.
             return 2.0 * s
-        # hierarchical: RS in pod (n-1)/n*S + DCN exchange S/n + AG in pod
-        return 2.0 * (n - 1) * s / n + s / n
+        # hierarchical: RS ring over the in-pod ranks (2*(m-1)/m * S total
+        # for RS+AG) + cross-pod ring all-reduce of the S/m shard over pods
+        p, m = _hier_split(n, pods)
+        intra = 2.0 * (m - 1) * s / m if m > 1 else 0.0
+        cross = 2.0 * (p - 1) * (s / m) / p if p > 1 else 0.0
+        return intra + cross
     if kind in ("all-gather", "collective-broadcast"):
         # each rank forwards (n-1) shards of size S/n around the ring
         return (n - 1) * s / n
@@ -64,39 +94,154 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int, algorithm: str = "rin
     return s
 
 
-def wire_bytes_received_per_rank(kind: str, payload: float, n: int, algorithm: str = "ring") -> float:
-    return wire_bytes_per_rank(kind, payload, n, algorithm)
+def wire_bytes_received_per_rank(kind: str, payload: float, n: int,
+                                 algorithm: str = "ring", *,
+                                 pods: int = 1) -> float:
+    return wire_bytes_per_rank(kind, payload, n, algorithm, pods=pods)
 
 
-def collective_time(op: CollectiveOp, topo: MeshTopology, algorithm: str = "ring") -> float:
+def wire_bytes_group_total(kind: str, payload: float, n: int,
+                           algorithm: str = "ring", *, pods: int = 1) -> float:
+    """Bytes on the wire summed over every rank of ONE group.
+
+    For the symmetric (ring, hierarchical) entries this is
+    ``n * wire_bytes_per_rank``; tree entries sum the true per-role amounts
+    (a binary tree all-reduce moves ``2*(n-1)*S`` total: S up and S down
+    each of its ``n-1`` edges), so matrices, summaries and cost models all
+    agree on the same totals.
+    """
+    if n <= 1:
+        return 0.0
+    s = float(payload)
+    if algorithm == "tree":
+        if kind == "all-reduce":
+            return 2.0 * (n - 1) * s
+        if kind in ("all-gather", "reduce-scatter", "collective-broadcast"):
+            # up + down phases move (n-1)*S in aggregate, same as the ring
+            return (n - 1) * s
+    return n * wire_bytes_per_rank(kind, s, n, algorithm, pods=pods)
+
+
+# ----------------------------------------------------------------------------
+# Binary-tree structure (heap layout over group positions) -- shared contract
+# between the per-device byte model below and the matrix edge placement in
+# comm_matrix.py.
+# ----------------------------------------------------------------------------
+def tree_children(i: int, n: int) -> list[int]:
+    """Children of position ``i`` in the implicit binary tree over ``n``."""
+    return [c for c in (2 * i + 1, 2 * i + 2) if c < n]
+
+
+def tree_subtree_sizes(n: int) -> list[int]:
+    """Subtree size per position of the implicit binary tree over ``n``."""
+    sizes = [1] * n
+    for i in range(n - 1, 0, -1):
+        sizes[(i - 1) // 2] += sizes[i]
+    return sizes
+
+
+def device_send_bytes(kind: str, payload: float, group: list[int],
+                      algorithm: str = "ring",
+                      topo: Optional[MeshTopology] = None) -> dict[int, float]:
+    """Bytes each device of ``group`` sends for one collective execution.
+
+    This is the per-role resolution of :func:`wire_bytes_per_rank` -- the
+    matrix/model consistency contract: ``matrix_for_ops`` row sums must
+    equal these values (times the op weight).  Ring and hierarchical
+    placements are symmetric (every rank sends the Table-1 per-rank
+    amount); tree placements depend on the device's position (root sends S
+    per child, a leaf sends S up and nothing down).
+    """
+    n = len(group)
+    if n <= 1:
+        return {d: 0.0 for d in group}
+    s = float(payload)
+    if algorithm == "tree" and kind in ("all-reduce", "all-gather",
+                                        "reduce-scatter",
+                                        "collective-broadcast"):
+        sizes = tree_subtree_sizes(n)
+        out: dict[int, float] = {}
+        for i, d in enumerate(group):
+            kids = tree_children(i, n)
+            up = s if i > 0 else 0.0                      # reduce phase
+            down = s * len(kids)                          # broadcast phase
+            if kind == "all-reduce":
+                sent = up + down
+            elif kind == "collective-broadcast":
+                sent = down
+            elif kind == "all-gather":
+                # up: my subtree's shards; down: everything a child lacks
+                sent = (sizes[i] * s / n if i > 0 else 0.0) \
+                    + sum((n - sizes[c]) * s / n for c in kids)
+            else:  # reduce-scatter == time-reversed all-gather
+                sent = ((n - sizes[i]) * s / n if i > 0 else 0.0) \
+                    + sum(sizes[c] * s / n for c in kids)
+            out[d] = sent
+        return out
+    pods = len(topo.pod_partition(group)) if topo is not None else 1
+    per_rank = wire_bytes_per_rank(kind, s, n, algorithm, pods=pods)
+    return {d: per_rank for d in group}
+
+
+def collective_time(op: CollectiveOp, topo: MeshTopology,
+                    algorithm: str = "ring") -> float:
     """Seconds for one collective on the torus (bandwidth term only).
 
-    Ring collectives stream at the per-chip ring bandwidth (both directions of
-    the axis links); hierarchical ops across DCN are bottlenecked by the
-    per-chip DCN share for the cross-pod fraction.
+    The *requested* algorithm is honoured:
+
+    * intra-pod groups stream the per-rank bytes at the per-chip ring
+      bandwidth (both directions of the axis links);
+    * a **hierarchical** all-reduce across pods pays its intra-pod phases
+      over ICI and only the ``S/m`` shard exchange over DCN;
+    * a **ring or tree** collective whose group spans pods has ring/tree
+      edges crossing DCN, so its full per-rank payload streams at the
+      per-chip DCN share -- it is NOT silently rebilled as hierarchical
+      (that would contradict the matrix's edge placement).
     """
     n = op.group_size
     if n <= 1:
         return 0.0
     group = op.replica_groups[0] if op.replica_groups else []
     crosses = topo.group_crosses_dcn(group)
-    per_rank = wire_bytes_per_rank(op.kind, op.payload_bytes, n, algorithm)
+    s = float(op.payload_bytes)
 
     if not crosses:
+        per_rank = wire_bytes_per_rank(op.kind, s, n, algorithm)
         return per_rank / topo.ring_bw_per_chip(False)
 
-    # hierarchical decomposition: intra-pod part over ICI + cross-pod over DCN
-    pods = topo.num_pods
-    in_pod = max(1, n // pods)
-    s = float(op.payload_bytes)
-    intra = wire_bytes_per_rank(op.kind, s, in_pod, "ring") / topo.ring_bw_per_chip(False)
-    cross = (s / max(1, in_pod)) * (pods - 1) / pods / topo.ring_bw_per_chip(True)
-    return intra + cross
+    if algorithm == "hierarchical" and op.kind == "all-reduce":
+        p, m = _hier_split(n, len(topo.pod_partition(group)))
+        intra = (2.0 * (m - 1) * s / m) / topo.ring_bw_per_chip(False) \
+            if m > 1 else 0.0
+        cross = (2.0 * (p - 1) * (s / m) / p) / topo.ring_bw_per_chip(True) \
+            if p > 1 else 0.0
+        return intra + cross
+
+    per_rank = wire_bytes_per_rank(op.kind, s, n, algorithm)
+    return per_rank / topo.ring_bw_per_chip(True)
 
 
-def total_time(ops: Iterable[CollectiveOp], topo: MeshTopology, algorithm: str = "ring") -> float:
-    """Serialized collective time (no overlap) -- upper bound / roofline term."""
-    return float(sum(collective_time(op, topo, algorithm) for op in ops))
+def total_time(ops: Iterable[CollectiveOp], topo: MeshTopology,
+               algorithm: str = "ring") -> float:
+    """Serialized collective time (no overlap) -- upper bound / roofline term.
+
+    Execution-weighted: an op inside a while body contributes once per trip.
+    """
+    return float(sum(collective_time(op, topo, algorithm)
+                     * max(1.0, getattr(op, "weight", 1.0)) for op in ops))
+
+
+def contention_time(ops: Iterable[CollectiveOp], topo: MeshTopology,
+                    algorithm: str = "ring") -> float:
+    """Bottleneck seconds: project every op onto physical links and take the
+    busiest link (bytes / link bandwidth), instead of a flat per-chip
+    bandwidth.  This is the contention-aware lower bound on communication
+    time -- two logical edges sharing one ICI cable serialize on it.
+    """
+    from . import comm_matrix  # deferred: comm_matrix imports this module
+
+    lu = comm_matrix.link_utilization_for_ops(list(ops), topo, algorithm)
+    return lu.bottleneck_seconds()
 
 
 # ----------------------------------------------------------------------------

@@ -113,21 +113,34 @@ class CollectiveOp:
             return self.result_bytes
         return self.result_bytes
 
-    def wire_bytes_per_rank(self, algorithm: str = "ring") -> float:
-        """Bytes *sent* by one participating rank (paper Table 1 analogue)."""
+    def wire_bytes_per_rank(self, algorithm: str = "ring",
+                            pods: int = 1) -> float:
+        """Bytes *sent* by one participating rank (paper Table 1 analogue).
+
+        ``pods`` is the number of DCN tiers the group spans (only the
+        hierarchical all-reduce entry depends on it).
+        """
         from . import cost_models
 
         return cost_models.wire_bytes_per_rank(
-            self.kind, self.payload_bytes, self.group_size, algorithm
+            self.kind, self.payload_bytes, self.group_size, algorithm,
+            pods=pods,
         )
 
-    def wire_bytes_total(self, algorithm: str = "ring") -> float:
+    def wire_bytes_total(self, algorithm: str = "ring",
+                         pods: int = 1) -> float:
         """Bytes on the wire summed over every rank in every group,
-        weighted by execution count (while-loop trip counts)."""
+        weighted by execution count (while-loop trip counts).  Tree
+        entries sum true per-role amounts (see
+        ``cost_models.wire_bytes_group_total``)."""
+        from . import cost_models
+
         if self.kind == "collective-permute":
             return float(self.result_bytes
                          * max(1, len(self.source_target_pairs))) * self.weight
-        return (self.wire_bytes_per_rank(algorithm) * self.group_size
+        return (cost_models.wire_bytes_group_total(
+                    self.kind, self.payload_bytes, self.group_size,
+                    algorithm, pods=pods)
                 * self.num_groups * self.weight)
 
 

@@ -133,8 +133,44 @@ def _summary_table(summary: dict) -> str:
     return "\n".join(rows)
 
 
+def _link_summary_table(lu) -> str:
+    """Per link-kind aggregates (ICI vs DCN) under the link heatmap."""
+    rows = ["<table class='sum'><tr><th>link kind</th><th>links</th>"
+            "<th>total bytes</th><th>busiest link</th>"
+            "<th>bottleneck ms</th></tr>"]
+    summary = lu.summary()
+    for kind in sorted(summary):
+        r = summary[kind]
+        rows.append(
+            f"<tr><td>{html.escape(kind)}</td><td>{r['links']}</td>"
+            f"<td>{reporter.human_bytes(r['bytes'])}</td>"
+            f"<td>{html.escape(r['busiest_link'])}</td>"
+            f"<td>{r['bottleneck_seconds'] * 1e3:.3f}</td></tr>")
+    rows.append("</table>")
+    return "\n".join(rows)
+
+
+def link_section(report) -> str:
+    """The physical-link panel: per-link byte heatmap + per-kind summary.
+
+    Entry ``(i+1, j+1)`` of the heatmap is the physical ICI link ``i -> j``
+    (only torus neighbours light up); row/col 0 is the DCN tier (uplinks /
+    downlinks).  Empty string for reports without a topology.
+    """
+    lu = report.link_utilization() \
+        if hasattr(report, "link_utilization") else None
+    if lu is None:
+        return ""
+    return ("<div><h3>physical links</h3>"
+            "<div class='meta'>row/col 0 = DCN uplink/downlink; "
+            "other cells = ICI neighbour links</div>"
+            + matrix_table(lu.matrix()) + _link_summary_table(lu)
+            + "</div>")
+
+
 def report_section(report) -> str:
-    """One report: header, primitive summary, combined + per-primitive maps."""
+    """One report: header, primitive summary, combined + per-primitive +
+    physical-link maps."""
     algorithm = getattr(report, "algorithm", "ring")
     total_wire = sum(r.get("wire_bytes", 0.0)
                      for r in report.compiled_summary.values())
@@ -152,6 +188,7 @@ def report_section(report) -> str:
     for kind, mat in sorted(report.per_primitive.items()):
         parts.append(f"<div><h3>{html.escape(kind)}</h3>"
                      + matrix_table(mat) + "</div>")
+    parts.append(link_section(report))
     parts.append("</div>")
     return "\n".join(parts)
 

@@ -1,4 +1,4 @@
-"""Lossless CommReport <-> plain-dict serialization (schema ``v1``).
+"""Lossless CommReport <-> plain-dict serialization (schema ``v2``).
 
 This is the substrate for everything under :mod:`repro.core.export`: the JSON
 exporter writes the dict verbatim, the on-disk report cache
@@ -11,6 +11,13 @@ so files written by older code remain readable by external consumers:
 and ``matrix`` keep their old spelling and meaning; the v1 additions
 (``per_primitive``, ``traced``, ``topo``, ``algorithm``, timings, ...) ride
 alongside under new keys.
+
+Schema **v2** adds the physical-link view for reports that carry a topology:
+``link_matrix`` (the ``(d+1)^2`` per-link byte matrix, row/col 0 = DCN tier)
+and ``links`` (one row per physical link: kind/src/dst/axis/bytes/bandwidth/
+seconds).  Both are *derived* from ``ops`` + ``topo``, so v1 files load
+unchanged (:func:`report_from_dict` accepts either schema; loaded reports
+recompute link views on demand via ``CommReport.link_utilization``).
 """
 from __future__ import annotations
 
@@ -22,7 +29,9 @@ import numpy as np
 from ..events import CollectiveOp, HostTransfer, Shape, TraceEvent
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v1"
+SCHEMA = "repro.comm_report.v2"
+SCHEMA_V1 = "repro.comm_report.v1"
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -129,10 +138,26 @@ def _jsonable_cost(cost: dict) -> dict:
             if isinstance(v, (int, float))}
 
 
+def _link_section(report) -> dict:
+    """Schema-v2 physical-link view (empty when the report has no topo)."""
+    lu = None
+    if getattr(report, "topo", None) is not None \
+            and hasattr(report, "link_utilization"):
+        lu = report.link_utilization()
+    if lu is None:
+        return {}
+    return {
+        "link_matrix": lu.matrix().tolist(),
+        "links": lu.rows(),
+        "link_summary": lu.summary(),
+    }
+
+
 def report_to_dict(report) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v1``)."""
+    """``CommReport`` -> JSON-serializable dict (schema ``v2``)."""
     return {
         "schema": SCHEMA,
+        **_link_section(report),
         "name": report.name,
         "num_devices": report.num_devices,
         "algorithm": getattr(report, "algorithm", "ring"),
@@ -154,14 +179,22 @@ def report_to_dict(report) -> dict:
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1``) -> ``CommReport``.
+    """Dict (schema ``v1`` or ``v2``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
     needed for matrices, tables, exports and cost models; only the live
     compilation artifacts (``_compiled`` / ``_hlo_text``) are absent, so
     :func:`repro.core.monitor.roofline_of` needs a freshly monitored report.
+    The v2 ``links``/``link_matrix`` sections are derived data and are not
+    restored -- ``CommReport.link_utilization`` recomputes them from
+    ``ops`` + ``topo``, which is how v1 files stay fully usable.
     """
     from ..monitor import CommReport  # deferred: monitor imports this module
+
+    schema = d.get("schema")
+    if schema is not None and schema not in ACCEPTED_SCHEMAS:
+        raise ValueError(
+            f"unknown report schema {schema!r}; accepted: {ACCEPTED_SCHEMAS}")
 
     return CommReport(
         name=d["name"],

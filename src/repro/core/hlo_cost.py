@@ -30,14 +30,15 @@ from .hlo_parser import _SHAPE_RE, parse_hlo_collectives
 
 _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# Tolerates both operand spellings: `while(%tuple)` (new jax) and the typed
+# `while((s32[], f32[4]{0}) %tuple)` form older jaxlibs print.
 _WHILE_RE = re.compile(
-    r"while\((?:%[\w.\-]+(?:,\s*)?)+\),\s*condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+    r"\bwhile\(.*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply|branch_computations)="
                        r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
 _FUSION_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
 _NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
 _OPCODE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+([\w\-]+)\(")
-_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
 _DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _DIM_LABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
 _PARAM_RE = re.compile(r"^\s*%?([\w.\-]+)\s*=\s*(.*?)\s+parameter\((\d+)\)")
@@ -68,6 +69,56 @@ def _first_shape_dims(type_text: str) -> Optional[list[int]]:
     return [int(d) for d in m.group(2).split(",") if d]
 
 
+# ----------------------------------------------------------------------------
+# Operand parsing that survives both HLO spellings.  New jax prints
+# ``dot(%a, %b)``; jax 0.4.x prints typed operands ``dot(f32[8,8]{1,0} %a,
+# (s32[], f32[4]) %b)`` whose layouts/tuple types contain commas and parens,
+# so naive ``split(",")`` / ``[^)]*`` parsing silently yields garbage names.
+# ----------------------------------------------------------------------------
+def _split_top_level(text: str) -> list[str]:
+    """Split on commas at bracket depth 0 (wrt ``()[]{}``)."""
+    parts: list[str] = []
+    cur: list[str] = []
+    depth = 0
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _operand_names(args_text: str) -> list[str]:
+    """Operand names from a call's argument text (last token per operand,
+    ``%`` stripped -- drops any inline type annotation)."""
+    return [p.split()[-1].lstrip("%") for p in _split_top_level(args_text)]
+
+
+def _call_args(line: str, opcode: str) -> str:
+    """Balanced-paren argument text of ``opcode(...)`` in ``line``
+    ('' when absent)."""
+    idx = line.find(opcode + "(")
+    if idx < 0:
+        return ""
+    start = idx + len(opcode) + 1
+    depth = 1
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:i]
+    return line[start:]
+
+
 def split_computations(hlo: str):
     """-> (dict comp_name -> list[str] instruction lines, entry_name)."""
     comps: dict[str, list[str]] = {}
@@ -91,8 +142,147 @@ def split_computations(hlo: str):
     return comps, entry
 
 
+# ----------------------------------------------------------------------------
+# Static trip-count inference.  XLA usually annotates counted loops with
+# ``backend_config={"known_trip_count":{"n":...}}``, but not every jaxlib /
+# pass pipeline does.  The scan-lowered loops it may omit follow a rigid
+# shape we can read directly: the condition computation compares a tuple
+# element against a constant (``compare(iter, N), direction=LT``), the body
+# increments that element by a constant, and the parent initializes it from
+# a constant.
+# ----------------------------------------------------------------------------
+_DIRECTION_RE = re.compile(r"direction=(\w+)")
+_CONST_INT_RE = re.compile(r"constant\((-?\d+)\)")
+_GTE_INDEX_RE = re.compile(r"index=(\d+)")
+_FLIP_DIRECTION = {"LT": "GT", "LE": "GE", "GT": "LT", "GE": "LE",
+                   "EQ": "EQ", "NE": "NE"}
+
+
+def _line_defs(lines) -> dict[str, tuple[str, str]]:
+    """name -> (opcode, full line) for one computation's instructions."""
+    out: dict[str, tuple[str, str]] = {}
+    for line in lines:
+        nm = _NAME_RE.match(line)
+        om = _OPCODE_RE.match(line)
+        if nm and om:
+            out[nm.group(1)] = (om.group(2), line)
+    return out
+
+
+def _const_value(name: str, defs: dict) -> Optional[int]:
+    """Integer constant behind ``name``, traced through copy/convert."""
+    for _ in range(8):
+        if name not in defs:
+            return None
+        opcode, line = defs[name]
+        if opcode == "constant":
+            m = _CONST_INT_RE.search(line)
+            return int(m.group(1)) if m else None
+        if opcode in ("copy", "convert", "bitcast"):
+            args = _operand_names(_call_args(line, opcode))
+            if not args:
+                return None
+            name = args[0]
+            continue
+        return None
+    return None
+
+
+def _gte_index(name: str, defs: dict) -> Optional[int]:
+    """Tuple index if ``name`` is a get-tuple-element of the loop carry."""
+    if name in defs and defs[name][0] == "get-tuple-element":
+        m = _GTE_INDEX_RE.search(defs[name][1])
+        return int(m.group(1)) if m else None
+    return None
+
+
+def infer_trip_count(while_line: str, cond: str, body: str,
+                     parent_lines: list, comps: dict) -> Optional[float]:
+    """Trip count of a while loop with no ``known_trip_count`` annotation.
+
+    Reads the ``compare(iter, constant)`` condition, the body's constant
+    increment of the same tuple element, and the constant initializer in
+    the parent's operand tuple.  Returns None when the loop does not match
+    the counted-loop shape (data-dependent bound, missing increment, ...)
+    -- the caller then falls back to counting the body once.
+    """
+    cdefs = _line_defs(comps.get(cond, []))
+    # the compare must BE the condition root: a compare feeding an and/or
+    # root means extra exit conditions (early exit, data-dependent), and
+    # its bound is an upper limit, not the trip count -- don't guess.
+    root = None
+    for line in comps.get(cond, []):
+        if line.lstrip().startswith("ROOT"):
+            root = line
+            break
+    if root is None or not _OPCODE_RE.match(root) \
+            or _OPCODE_RE.match(root).group(2) != "compare":
+        return None
+    names = _operand_names(_call_args(root, "compare"))
+    if len(names) != 2:
+        return None
+    dm = _DIRECTION_RE.search(root)
+    direction = dm.group(1) if dm else "LT"
+    lhs_idx, rhs_idx = (_gte_index(n, cdefs) for n in names)
+    lhs_const, rhs_const = (_const_value(n, cdefs) for n in names)
+    if lhs_idx is not None and rhs_const is not None:
+        idx, bound = lhs_idx, rhs_const
+    elif rhs_idx is not None and lhs_const is not None:
+        idx, bound = rhs_idx, lhs_const
+        direction = _FLIP_DIRECTION.get(direction, direction)
+    else:
+        return None
+
+    # increment: add(gte(idx), constant) at the body's top level.  If the
+    # increment is not visible (folded into a fusion, non-constant step),
+    # refuse to guess -- a wrong step silently scales every weighted metric.
+    bdefs = _line_defs(comps.get(body, []))
+    step = None
+    for opcode, line in bdefs.values():
+        if opcode != "add":
+            continue
+        args = _operand_names(_call_args(line, "add"))
+        if len(args) != 2:
+            continue
+        consts = [c for c in (_const_value(a, bdefs) for a in args)
+                  if c is not None]
+        if consts and any(_gte_index(a, bdefs) == idx for a in args):
+            step = consts[0]
+            break
+    if step is None:
+        return None
+
+    # initializer: the while operand tuple's element ``idx`` in the parent
+    init = 0
+    pdefs = _line_defs(parent_lines)
+    wargs = _operand_names(_call_args(while_line, "while"))
+    if wargs and wargs[0] in pdefs and pdefs[wargs[0]][0] == "tuple":
+        targs = _operand_names(_call_args(pdefs[wargs[0]][1], "tuple"))
+        if idx < len(targs):
+            v = _const_value(targs[idx], pdefs)
+            if v is not None:
+                init = v
+
+    if direction in ("LT", "LE"):
+        if step <= 0:
+            return None
+        span = bound - init + (1 if direction == "LE" else 0)
+        return float(max(0, -(-span // step)))
+    if direction in ("GT", "GE"):
+        if step >= 0:
+            return None
+        span = init - bound + (1 if direction == "GE" else 0)
+        return float(max(0, -(-span // -step)))
+    return None
+
+
 def computation_multipliers(comps: dict, entry: str) -> dict[str, float]:
-    """Execution count per computation, propagated through while/call/fusion."""
+    """Execution count per computation, propagated through while/call/fusion.
+
+    Trip counts come from XLA's ``known_trip_count`` annotation when
+    present, else from static inference over the condition/body/parent
+    (:func:`infer_trip_count`), else default to 1.
+    """
     mult = {name: 0.0 for name in comps}
     if entry not in comps:
         return {name: 1.0 for name in comps}
@@ -108,7 +298,12 @@ def computation_multipliers(comps: dict, entry: str) -> dict[str, float]:
                 if wm:
                     cond, body = wm.group(1), wm.group(2)
                     tm = _TRIP_RE.search(line)
-                    trips = float(tm.group(1)) if tm else 1.0
+                    if tm:
+                        trips = float(tm.group(1))
+                    else:
+                        trips = infer_trip_count(line, cond, body, lines,
+                                                 comps)
+                        trips = trips if trips is not None else 1.0
                     for target, k in ((body, trips), (cond, trips + 1)):
                         new = m * k
                         if target in mult and new > mult[target]:
@@ -139,6 +334,14 @@ class HloCost:
         return summarize(self.collectives, algorithm)
 
 
+def _operand_dims(piece: str, symtab: dict[str, str]) -> Optional[list[int]]:
+    """Shape dims of one operand: from the symbol table, else from the
+    inline type annotation old jaxlibs print next to the operand name."""
+    name = piece.split()[-1].lstrip("%")
+    return _first_shape_dims(symtab.get(name, "")) \
+        or _first_shape_dims(piece.rsplit("%", 1)[0] if "%" in piece else "")
+
+
 def _dot_flops(line: str, symtab: dict[str, str]) -> float:
     """2 * prod(result) * prod(contracting dims of lhs)."""
     res = _first_shape_dims(line.split(" dot(")[0])
@@ -147,12 +350,11 @@ def _dot_flops(line: str, symtab: dict[str, str]) -> float:
     n = 1
     for d in res:
         n *= d
-    ops = _OPERANDS_RE.search(line[line.index(" dot(") + 1:])
+    operands = _split_top_level(_call_args(line, "dot"))
     contract = 1
     cm = _DOT_CONTRACT_RE.search(line)
-    if ops and cm is not None:
-        names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-        lhs_dims = _first_shape_dims(symtab.get(names[0], "")) or []
+    if operands and cm is not None:
+        lhs_dims = _operand_dims(operands[0], symtab) or []
         for idx in (int(x) for x in cm.group(1).split(",") if x):
             if idx < len(lhs_dims):
                 contract *= lhs_dims[idx]
@@ -166,13 +368,10 @@ def _conv_flops(line: str, symtab: dict[str, str]) -> float:
     n = 1
     for d in res:
         n *= d
-    ops = _OPERANDS_RE.search(line[line.index(" convolution(") + 1:])
-    if not ops:
+    operands = _split_top_level(_call_args(line, "convolution"))
+    if len(operands) < 2:
         return 0.0
-    names = [o.strip().lstrip("%") for o in ops.group(1).split(",")]
-    if len(names) < 2:
-        return 0.0
-    k_dims = _first_shape_dims(symtab.get(names[1], "")) or []
+    k_dims = _operand_dims(operands[1], symtab) or []
     kn = 1
     for d in k_dims:
         kn *= d
@@ -221,9 +420,8 @@ class HloAnalyzer:
             om = _OPCODE_RE.match(line)
             if om:
                 nm = _NAME_RE.match(line)
-                opm = _OPERANDS_RE.search(line[line.index(om.group(2) + "("):])
-                ops = [o.strip().lstrip("%") for o in opm.group(1).split(",")] \
-                    if opm and opm.group(1).strip() else []
+                args = _call_args(line, om.group(2))
+                ops = _operand_names(args) if args.strip() else []
                 defs[nm.group(1)] = (om.group(2), ops, om.group(1))
 
         def origin(name: str) -> str:
@@ -270,9 +468,8 @@ class HloAnalyzer:
                     type_text: str) -> int:
         """Effective HBM bytes for one top-level instruction."""
         st = self.symtab[comp]
-        opm = _OPERANDS_RE.search(line[line.index(opcode + "("):])
-        operands = [o.strip().lstrip("%") for o in opm.group(1).split(",")] \
-            if opm and opm.group(1).strip() else []
+        args = _call_args(line, opcode)
+        operands = _operand_names(args) if args.strip() else []
 
         if opcode == "fusion":
             fm = _FUSION_CALLS_RE.search(line)

@@ -146,11 +146,21 @@ def parse_hlo_collectives(hlo_text: str) -> list[CollectiveOp]:
 # ----------------------------------------------------------------------------
 # Summaries
 # ----------------------------------------------------------------------------
-def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring") -> dict:
+def _op_pods(op: CollectiveOp, topo) -> int:
+    """DCN tiers spanned by the op's groups (1 without topology info)."""
+    if topo is None or not op.replica_groups:
+        return 1
+    return len(topo.pod_partition(op.replica_groups[0]))
+
+
+def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring",
+              topo=None) -> dict:
     """Paper Table-2/3-style summary: per-kind call counts and byte totals.
 
     Counts are execution-weighted: an op inside a while body with trip count
-    64 contributes 64 calls (loop-aware, see hlo_cost.py).
+    64 contributes 64 calls (loop-aware, see hlo_cost.py).  ``topo`` (a
+    :class:`~repro.core.topology.MeshTopology`) makes the hierarchical
+    algorithm's byte totals pod-aware.
     """
     table: dict[str, dict] = {}
     for op in ops:
@@ -160,13 +170,16 @@ def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring") -> dict:
         )
         row["calls"] += int(op.weight)
         row["payload_bytes"] += int(op.payload_bytes * op.num_groups * op.weight)
-        row["wire_bytes"] += op.wire_bytes_total(algorithm)
+        row["wire_bytes"] += op.wire_bytes_total(algorithm,
+                                                 pods=_op_pods(op, topo))
     return table
 
 
-def total_wire_bytes(ops: Iterable[CollectiveOp], algorithm: str = "ring") -> float:
+def total_wire_bytes(ops: Iterable[CollectiveOp], algorithm: str = "ring",
+                     topo=None) -> float:
     """Global bytes-on-the-wire across all devices (roofline numerator)."""
-    return float(sum(op.wire_bytes_total(algorithm) for op in ops))
+    return float(sum(op.wire_bytes_total(algorithm, pods=_op_pods(op, topo))
+                     for op in ops))
 
 
 def count_by_opname(ops: Iterable[CollectiveOp]) -> dict[str, int]:

@@ -90,13 +90,47 @@ class CommReport:
 
     def total_wire_bytes(self, algorithm: Optional[str] = None) -> float:
         return hlo_parser.total_wire_bytes(
-            self.compiled_ops, algorithm or self.algorithm)
+            self.compiled_ops, algorithm or self.algorithm, topo=self.topo)
 
     def collective_seconds(self, algorithm: Optional[str] = None) -> float:
         if self.topo is None:
             return 0.0
         return cost_models.total_time(
             self.compiled_ops, self.topo, algorithm or self.algorithm)
+
+    # -- physical-link view ------------------------------------------------
+    def link_utilization(self, algorithm: Optional[str] = None):
+        """Project the matrix onto physical links (ICI hops, DCN uplinks).
+
+        Returns a :class:`~repro.core.comm_matrix.LinkUtilization` (bytes
+        per link, bottleneck link, contention-aware seconds), or ``None``
+        when the report carries no topology (``monitor_fn`` without
+        ``mesh=``).  Derived from the compiled ops, so it works on loaded
+        and cached reports too.
+        """
+        if self.topo is None:
+            return None
+        return comm_matrix.link_utilization_for_ops(
+            self.compiled_ops, self.topo, algorithm or self.algorithm)
+
+    def link_matrix(self, algorithm: Optional[str] = None):
+        """The ``(d+1)^2`` per-link byte matrix: entry ``(i+1, j+1)`` is the
+        physical ICI link ``i -> j``; row/col 0 is the DCN tier (uplinks/
+        downlinks).  ``None`` without a topology."""
+        lu = self.link_utilization(algorithm)
+        return None if lu is None else lu.matrix()
+
+    def link_seconds(self, algorithm: Optional[str] = None) -> float:
+        """Contention-aware communication time: the bottleneck link's
+        bytes/bandwidth (max over links, not flat per-chip bandwidth)."""
+        lu = self.link_utilization(algorithm)
+        return 0.0 if lu is None else lu.bottleneck_seconds()
+
+    def link_table(self) -> str:
+        lu = self.link_utilization()
+        if lu is None:
+            return "(no topology: pass mesh= to monitor_fn for link stats)"
+        return lu.table()
 
     def render(self) -> str:
         parts = [
@@ -107,6 +141,8 @@ class CommReport:
             self.diff(),
             self.heatmap(),
         ]
+        if self.topo is not None:
+            parts.append("-- physical links --\n" + self.link_table())
         parts.append(
             f"trace {self.trace_seconds * 1e3:.1f} ms | "
             f"compile {self.compile_seconds * 1e3:.1f} ms | "
@@ -126,11 +162,14 @@ class CommReport:
         rep = dataclasses.replace(
             self,
             algorithm=algorithm,
-            compiled_summary=hlo_parser.summarize(self.compiled_ops, algorithm),
+            compiled_summary=hlo_parser.summarize(
+                self.compiled_ops, algorithm, topo=self.topo),
             matrix=comm_matrix.matrix_for_ops(
-                self.compiled_ops, self.num_devices, algorithm),
+                self.compiled_ops, self.num_devices, algorithm,
+                topo=self.topo),
             per_primitive=comm_matrix.per_primitive_matrices(
-                self.compiled_ops, self.num_devices, algorithm),
+                self.compiled_ops, self.num_devices, algorithm,
+                topo=self.topo),
             meta=dict(self.meta, algorithm=algorithm),
         )
         if self.host_transfers:
@@ -247,7 +286,7 @@ def monitor_fn(
     num_devices = int(np.prod(mesh.devices.shape)) if mesh is not None else jax.device_count()
     topo = MeshTopology.from_mesh(mesh) if mesh is not None else None
 
-    mat = comm_matrix.matrix_for_ops(ops, num_devices, algorithm)
+    mat = comm_matrix.matrix_for_ops(ops, num_devices, algorithm, topo=topo)
     if host_transfers:
         comm_matrix.add_host_transfers(mat, host_transfers)
     report = CommReport(
@@ -256,9 +295,10 @@ def monitor_fn(
         traced=list(icpt.events),
         compiled_ops=ops,
         traced_summary=icpt.summary(),
-        compiled_summary=hlo_parser.summarize(ops, algorithm),
+        compiled_summary=hlo_parser.summarize(ops, algorithm, topo=topo),
         matrix=mat,
-        per_primitive=comm_matrix.per_primitive_matrices(ops, num_devices, algorithm),
+        per_primitive=comm_matrix.per_primitive_matrices(ops, num_devices,
+                                                         algorithm, topo=topo),
         cost=_cost_analysis(compiled),
         memory_stats=_memory_stats(compiled),
         trace_seconds=t1 - t0,

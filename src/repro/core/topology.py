@@ -1,12 +1,17 @@
-"""TPU interconnect topology model.
+"""TPU interconnect topology model, down to individual physical links.
 
 The paper models NCCL traffic on NVSwitch/NVLink/PCIe; the TPU analogue is the
 ICI torus inside a pod plus DCN between pods.  We model:
 
-* a pod as a 2-D torus of chips (v5e: 16x16 = 256), each chip with 2 ICI links
+* a pod as a torus of chips (v5e: 16x16 = 256), each chip with 2 ICI links
   per torus axis (bidirectional ring per row/column),
 * multi-pod meshes as torus pods joined by DCN (per-chip share of pod-level
   DCN bandwidth),
+* the **physical links themselves**: every directed ICI neighbour link per
+  torus axis and every per-chip DCN uplink/downlink is enumerable
+  (:meth:`MeshTopology.links`) and routable (:meth:`MeshTopology.route`), so
+  a logical communication matrix can be projected onto the links that
+  actually carry the bytes (:func:`repro.core.comm_matrix.project_links`),
 * hardware constants used by the roofline (given for TPU v5e-class chips).
 """
 from __future__ import annotations
@@ -27,6 +32,36 @@ class HardwareSpec:
 
 
 V5E = HardwareSpec()
+
+# sentinel device id for the inter-pod DCN fabric endpoint of a link
+DCN_FABRIC = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One directed physical link.
+
+    * ``kind == "ici"``: a torus neighbour link ``src -> dst`` along mesh
+      axis ``axis`` (each chip has one per direction per axis).
+    * ``kind == "dcn"``: a chip's share of the pod DCN connectivity.  The
+      uplink is ``src=device, dst=DCN_FABRIC``; the downlink is
+      ``src=DCN_FABRIC, dst=device``.  Cross-pod traffic is charged to the
+      sender's uplink and the receiver's downlink (the fabric core is
+      assumed non-blocking, so the chip shares are the contended resource).
+    """
+
+    kind: str                    # "ici" | "dcn"
+    src: int                     # sending device, or DCN_FABRIC
+    dst: int                     # receiving device, or DCN_FABRIC
+    axis: str                    # torus axis name for ici; "dcn" otherwise
+
+    @property
+    def name(self) -> str:
+        if self.kind == "dcn":
+            if self.dst == DCN_FABRIC:
+                return f"dcn:d{self.src}^"      # uplink
+            return f"dcn:vd{self.dst}"          # downlink
+        return f"ici:{self.axis}:d{self.src}>d{self.dst}"
 
 
 @dataclasses.dataclass
@@ -94,6 +129,18 @@ class MeshTopology:
         pod_of = [self._pod_index(d) for d in group]
         return len(set(pod_of)) > 1
 
+    def pod_partition(self, group: list[int]) -> list[list[int]]:
+        """Split a replica group into per-pod subgroups (member order kept).
+
+        The hierarchical all-reduce placement and cost model both decompose
+        a cross-DCN group this way: ring phases inside each subgroup, a
+        cross-pod exchange between same-index members of the subgroups.
+        """
+        by_pod: dict[int, list[int]] = {}
+        for d in group:
+            by_pod.setdefault(self._pod_index(d), []).append(d)
+        return [by_pod[k] for k in sorted(by_pod)]
+
     def _pod_index(self, device: int) -> int:
         coords = []
         rem = device
@@ -114,3 +161,91 @@ class MeshTopology:
             coords.append(rem % size)
             rem //= size
         return tuple(reversed(coords))
+
+    # ------------------------------------------------------------------
+    # Physical links: enumeration and routing.
+    # ------------------------------------------------------------------
+    @property
+    def ici_axes(self) -> tuple[str, ...]:
+        """Torus axes (size > 1) that ride ICI, in mesh-axis order."""
+        return tuple(n for n, s in zip(self.axis_names, self.axis_sizes)
+                     if n not in self.dcn_axes and s > 1)
+
+    def device_at(self, coords) -> int:
+        device = 0
+        for size, c in zip(self.axis_sizes, coords):
+            device = device * size + (c % size)
+        return device
+
+    def neighbor(self, device: int, axis: str, step: int = 1) -> int:
+        """Torus neighbour of ``device`` ``step`` hops along ``axis``."""
+        i = self.axis_names.index(axis)
+        coords = list(self.coords(device))
+        coords[i] = (coords[i] + step) % self.axis_sizes[i]
+        return self.device_at(coords)
+
+    def pod_index(self, device: int) -> int:
+        """Which pod (DCN tier) a device belongs to."""
+        return self._pod_index(device)
+
+    def links(self) -> list[Link]:
+        """Every physical link: directed ICI neighbour links per torus axis
+        plus, on multi-pod meshes, each chip's DCN uplink and downlink.
+
+        A size-2 torus axis wraps both directions onto the same neighbour;
+        the two physical cables collapse into one directed link per
+        (src, dst) pair here, matching how traffic is charged in
+        :meth:`route` (``ici_links_per_axis`` still credits the bandwidth
+        of both in :meth:`ring_bw_per_chip`).
+        """
+        out: list[Link] = []
+        seen: set[tuple] = set()
+        for d in range(self.num_devices):
+            for axis in self.ici_axes:
+                for step in (1, -1):
+                    nb = self.neighbor(d, axis, step)
+                    key = ("ici", d, nb, axis)
+                    if nb != d and key not in seen:
+                        seen.add(key)
+                        out.append(Link("ici", d, nb, axis))
+        if self.num_pods > 1:
+            for d in range(self.num_devices):
+                out.append(Link("dcn", d, DCN_FABRIC, "dcn"))
+                out.append(Link("dcn", DCN_FABRIC, d, "dcn"))
+        return out
+
+    def link_bandwidth(self, link: Link) -> float:
+        """Bytes/s one direction of this physical link sustains."""
+        if link.kind == "dcn":
+            return self.hw.dcn_bw_per_chip
+        return self.hw.ici_bw
+
+    def route(self, src: int, dst: int) -> list[Link]:
+        """Physical links a ``src -> dst`` transfer traverses.
+
+        Within a pod: dimension-ordered torus routing, taking the shorter
+        way around each ring.  Across pods: the sender's DCN uplink plus
+        the receiver's DCN downlink (inter-pod traffic does not detour over
+        ICI in this model).
+        """
+        if src == dst:
+            return []
+        if self._pod_index(src) != self._pod_index(dst):
+            return [Link("dcn", src, DCN_FABRIC, "dcn"),
+                    Link("dcn", DCN_FABRIC, dst, "dcn")]
+        hops: list[Link] = []
+        cur = src
+        cur_coords = list(self.coords(src))
+        dst_coords = self.coords(dst)
+        for i, axis in enumerate(self.axis_names):
+            size = self.axis_sizes[i]
+            if axis in self.dcn_axes or size <= 1:
+                continue
+            delta = (dst_coords[i] - cur_coords[i]) % size
+            step = 1 if delta <= size - delta else -1
+            while cur_coords[i] != dst_coords[i]:
+                nxt = self.neighbor(cur, axis, step)
+                hops.append(Link("ici", cur, nxt, axis))
+                cur = nxt
+                cur_coords[i] = (cur_coords[i] + step) % size
+        return hops

@@ -251,7 +251,10 @@ class SweepResult:
     compiles: int
     artifacts: dict[str, str] = dataclasses.field(default_factory=dict)
 
-    def summary_table(self) -> str:
+    def summary_table(self, by_link: bool = False) -> str:
+        """One row per cell; ``by_link=True`` adds the physical-link view
+        (busiest link and its contention-aware bottleneck ms -- the
+        ``--by-link`` CLI column)."""
         rows = []
         for rep in self.reports:
             total_wire = sum(r.get("wire_bytes", 0.0)
@@ -262,7 +265,7 @@ class SweepResult:
                 rep.compiled_summary,
                 key=lambda k: rep.compiled_summary[k].get("wire_bytes", 0.0),
             ) if rep.compiled_summary else "-"
-            rows.append([
+            row = [
                 rep.meta.get("config", rep.name),
                 rep.meta.get("mesh", f"{rep.num_devices}dev"),
                 rep.algorithm,
@@ -272,10 +275,19 @@ class SweepResult:
                 f"{rep.collective_seconds(rep.algorithm) * 1e3:.3f}",
                 dominant,
                 rep.meta.get("source", "?"),
-            ])
-        return format_table(rows, [
-            "config", "mesh", "algorithm", "devices", "collective calls",
-            "wire bytes", "collective ms", "dominant primitive", "source"])
+            ]
+            if by_link:
+                lu = rep.link_utilization()
+                bn = lu.bottleneck() if lu is not None else None
+                row[8:8] = ([bn[0].name, f"{bn[1] * 1e3:.3f}"]
+                            if bn else ["-", "-"])
+            rows.append(row)
+        header = ["config", "mesh", "algorithm", "devices",
+                  "collective calls", "wire bytes", "collective ms",
+                  "dominant primitive", "source"]
+        if by_link:
+            header[8:8] = ["busiest link", "link ms"]
+        return format_table(rows, header)
 
 
 def run_sweep(

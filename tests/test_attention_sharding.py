@@ -15,6 +15,8 @@ from repro.models.attention import _expand_kv, chunked_attention, pad_heads
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.parallel import Sharder
 
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 
 class TestExpandKV:
     def test_expand_matches_grouped(self):

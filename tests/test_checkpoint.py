@@ -9,6 +9,8 @@ import pytest
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               restore_checkpoint, save_checkpoint)
 
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 
 def make_state(seed=0):
     k = jax.random.PRNGKey(seed)

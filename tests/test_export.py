@@ -45,6 +45,8 @@ def hand_report() -> CommReport:
 
 
 class TestRoundTrip:
+    pytestmark = pytest.mark.compile  # module fixture compiles
+
     def test_save_load_lossless(self, report, tmp_path):
         p = str(tmp_path / "r.json")
         report.save(p)
@@ -92,6 +94,66 @@ class TestRoundTrip:
             sum(r["payload_bytes"] for r in report.compiled_summary.values())
 
 
+class TestSchemaV2:
+    """Physical-link sections (schema v2) + v1 backward-compat load."""
+
+    pytestmark = pytest.mark.compile  # module fixture compiles
+
+    def test_v2_writes_link_sections(self, report, tmp_path):
+        p = str(tmp_path / "v2.json")
+        report.save(p)
+        d = json.loads(open(p).read())
+        assert d["schema"] == "repro.comm_report.v2"
+        assert len(d["link_matrix"]) == report.num_devices + 1
+        assert d["links"], "per-link rows missing"
+        for row in d["links"]:
+            assert {"kind", "src", "dst", "axis", "bytes", "bandwidth",
+                    "seconds"} <= set(row)
+            assert row["kind"] in ("ici", "dcn")
+        assert "ici" in d["link_summary"]
+
+    def test_v1_file_loads_and_rederives_links(self, report, tmp_path):
+        """A file written by the previous schema (no link sections, v1
+        schema string) loads fine; link views recompute from ops+topo."""
+        p = str(tmp_path / "v1.json")
+        report.save(p)
+        d = json.loads(open(p).read())
+        for key in ("links", "link_matrix", "link_summary"):
+            d.pop(key, None)
+        d["schema"] = "repro.comm_report.v1"
+        with open(p, "w") as f:
+            json.dump(d, f)
+        back = CommReport.load(p)
+        lu = back.link_utilization()
+        assert lu is not None and lu.total_bytes() > 0
+        np.testing.assert_allclose(back.link_matrix(), report.link_matrix())
+
+    def test_unknown_schema_rejected(self, report, tmp_path):
+        p = str(tmp_path / "bad.json")
+        report.save(p)
+        d = json.loads(open(p).read())
+        d["schema"] = "repro.comm_report.v99"
+        with open(p, "w") as f:
+            json.dump(d, f)
+        with pytest.raises(ValueError):
+            CommReport.load(p)
+
+    def test_topoless_report_has_no_link_view(self, tmp_path):
+        rep = hand_report()          # built without a topology
+        p = str(tmp_path / "t.json")
+        rep.save(p)
+        d = json.loads(open(p).read())
+        assert "links" not in d
+        assert CommReport.load(p).link_utilization() is None
+
+    def test_html_link_panel(self, report, tmp_path):
+        p = str(tmp_path / "links.html")
+        export.export_html(report, p)
+        text = open(p).read()
+        assert "physical links" in text
+        assert "link kind" in text
+
+
 class TestGolden:
     """Exact expected artifacts for a hand-built 4-device all-reduce."""
 
@@ -134,6 +196,8 @@ class TestGolden:
 
 
 class TestPerfetto:
+    pytestmark = pytest.mark.compile  # module fixture compiles
+
     def test_chrome_trace_schema(self, report):
         doc = export.chrome_trace([report, report.with_algorithm("tree")])
         assert set(doc) >= {"traceEvents", "displayTimeUnit"}
@@ -161,6 +225,8 @@ class TestPerfetto:
 
 
 class TestHtml:
+    pytestmark = pytest.mark.compile  # module fixture compiles
+
     def test_dashboard_structure(self, report, tmp_path):
         p = str(tmp_path / "d.html")
         export.export_html([report, report.with_algorithm("tree")], p)

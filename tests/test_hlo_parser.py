@@ -64,6 +64,8 @@ class TestSyntheticLines:
 
 
 class TestRealModule:
+    pytestmark = pytest.mark.compile
+
     def test_shard_map_collectives_roundtrip(self, mesh8):
         def f(x):
             y = jax.lax.psum(x, "data")

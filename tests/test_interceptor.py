@@ -6,6 +6,10 @@ from jax.sharding import PartitionSpec as P
 from repro.core import CollectiveInterceptor, intercept
 from repro.compat import shard_map
 
+import pytest
+
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 
 def _traced_program(mesh):
     def f(x):

@@ -10,6 +10,8 @@ from repro.kernels.rglru.ref import rglru_ref
 from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 RNG = jax.random.PRNGKey(0)
 
 

@@ -1,0 +1,331 @@
+"""Matrix/model/link consistency -- the physical-link subsystem contract.
+
+Property-style (grid-parametrized, no compilation, no optional deps):
+
+* for every (kind, algorithm, topology) cell, ``matrix_for_ops`` row sums
+  equal ``cost_models.device_send_bytes`` times the op weight -- and for the
+  symmetric algorithms that equals ``wire_bytes_per_rank`` per participating
+  device;
+* hierarchical matrices place cross-pod bytes ONLY on DCN edges (and
+  intra-pod bytes only inside pods);
+* link projection conserves bytes (single-hop edges), charges transit hops,
+  and the host row never leaks onto the fabric.
+"""
+import numpy as np
+import pytest
+
+from repro.core import comm_matrix, cost_models
+from repro.core.events import CollectiveOp, HostTransfer, Shape
+from repro.core.topology import DCN_FABRIC, MeshTopology
+
+KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+         "collective-broadcast", "all-to-all")
+ALGORITHMS = ("ring", "tree", "hierarchical")
+
+ONE_POD = MeshTopology(axis_names=("data",), axis_sizes=(8,))
+TWO_POD = MeshTopology(axis_names=("pod", "data", "model"),
+                       axis_sizes=(2, 2, 2))
+FOUR_POD = MeshTopology(axis_names=("pod", "data"), axis_sizes=(4, 2))
+TOPOLOGIES = {"one_pod": ONE_POD, "two_pod": TWO_POD, "four_pod": FOUR_POD}
+
+
+def mk_op(kind, elems=256, group=None, weight=1.0):
+    op = CollectiveOp(kind=kind, name="t",
+                      result_shapes=[Shape("f32", (elems,))],
+                      replica_groups=[group or list(range(8))])
+    op.weight = weight
+    return op
+
+
+class TestRowSumConsistency:
+    """matrix_for_ops row sums == device_send_bytes * weight, every cell."""
+
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("algorithm", ALGORITHMS)
+    @pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+    def test_row_sums_match_device_model(self, kind, algorithm, topo_name):
+        topo = TOPOLOGIES[topo_name]
+        op = mk_op(kind, weight=3.0)
+        group = op.replica_groups[0]
+        mat = comm_matrix.matrix_for_ops([op], topo.num_devices, algorithm,
+                                         topo=topo)
+        expected = cost_models.device_send_bytes(
+            kind, op.payload_bytes, group, algorithm, topo=topo)
+        rows = mat[1:, 1:].sum(axis=1)
+        for d in group:
+            assert rows[d] == pytest.approx(expected[d] * op.weight), \
+                f"device {d}: row {rows[d]} != model {expected[d] * op.weight}"
+
+    @pytest.mark.parametrize("kind", KINDS)
+    @pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+    def test_ring_rows_equal_table1_per_rank(self, kind, topo_name):
+        """For the symmetric ring placement the per-device model IS the
+        paper-Table-1 per-rank entry."""
+        topo = TOPOLOGIES[topo_name]
+        op = mk_op(kind)
+        mat = comm_matrix.matrix_for_ops([op], topo.num_devices, "ring",
+                                         topo=topo)
+        per_rank = cost_models.wire_bytes_per_rank(
+            kind, op.payload_bytes, 8, "ring")
+        for d in range(8):
+            assert mat[d + 1, 1:].sum() == pytest.approx(per_rank)
+
+    def test_hierarchical_rows_equal_pods_aware_per_rank(self):
+        op = mk_op("all-reduce")
+        mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                         topo=TWO_POD)
+        per_rank = cost_models.wire_bytes_per_rank(
+            "all-reduce", op.payload_bytes, 8, "hierarchical", pods=2)
+        for d in range(8):
+            assert mat[d + 1, 1:].sum() == pytest.approx(per_rank)
+
+    @pytest.mark.parametrize("algorithm", ALGORITHMS)
+    def test_disjoint_groups_stay_disjoint(self, algorithm):
+        op = mk_op("all-reduce", group=[0, 1, 2, 3])
+        op.replica_groups = [[0, 1, 2, 3], [4, 5, 6, 7]]
+        mat = comm_matrix.matrix_for_ops([op], 8, algorithm,
+                                         topo=TWO_POD)[1:, 1:]
+        assert mat[:4, 4:].sum() == 0 and mat[4:, :4].sum() == 0
+
+    @pytest.mark.parametrize("algorithm", ALGORITHMS)
+    def test_matrix_total_matches_group_total(self, algorithm):
+        for kind in KINDS:
+            op = mk_op(kind)
+            pods = len(TWO_POD.pod_partition(op.replica_groups[0]))
+            mat = comm_matrix.matrix_for_ops([op], 8, algorithm,
+                                             topo=TWO_POD)
+            total = cost_models.wire_bytes_group_total(
+                kind, op.payload_bytes, 8, algorithm, pods=pods)
+            assert mat.sum() == pytest.approx(total), (kind, algorithm)
+
+    @pytest.mark.parametrize("algorithm", ALGORITHMS)
+    def test_host_row_untouched_by_collectives(self, algorithm):
+        """The DCN/host row of the logical matrix belongs to host transfers
+        alone; collective placement never writes it."""
+        op = mk_op("all-reduce")
+        mat = comm_matrix.matrix_for_ops([op], 8, algorithm, topo=TWO_POD)
+        assert mat[0].sum() == 0 and mat[:, 0].sum() == 0
+        comm_matrix.add_host_transfers(mat, [HostTransfer("h2d", 1, 512),
+                                             HostTransfer("d2h", 2, 128)])
+        assert mat[0, 2] == 512 and mat[3, 0] == 128
+
+
+class TestHierarchicalPlacement:
+    def test_cross_pod_bytes_only_on_dcn_edges(self):
+        """Acceptance criterion: every cross-pod entry of a hierarchical
+        matrix routes exclusively over DCN links, every intra-pod entry
+        over ICI."""
+        op = mk_op("all-reduce")
+        mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                         topo=TWO_POD)[1:, 1:]
+        for i in range(8):
+            for j in range(8):
+                if mat[i, j] <= 0:
+                    continue
+                links = TWO_POD.route(i, j)
+                cross = TWO_POD.pod_index(i) != TWO_POD.pod_index(j)
+                kinds = {l.kind for l in links}
+                assert kinds == ({"dcn"} if cross else {"ici"}), (i, j)
+
+    def test_cross_pod_share_is_shard_sized(self):
+        """Only the reduce-scattered S/m shard exchange crosses DCN."""
+        op = mk_op("all-reduce")
+        s = op.payload_bytes
+        mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                         topo=TWO_POD)[1:, 1:]
+        cross = sum(mat[i, j] for i in range(8) for j in range(8)
+                    if TWO_POD.pod_index(i) != TWO_POD.pod_index(j))
+        p, m = 2, 4
+        expected = 8 * 2.0 * (p - 1) * (s / m) / p
+        assert cross == pytest.approx(expected)
+        # and it is strictly less than what a ring would push across
+        ring = comm_matrix.matrix_for_ops([op], 8, "ring",
+                                          topo=TWO_POD)[1:, 1:]
+        ring_cross = sum(ring[i, j] for i in range(8) for j in range(8)
+                         if TWO_POD.pod_index(i) != TWO_POD.pod_index(j))
+        assert cross < ring_cross
+
+    def test_uneven_split_falls_back_to_ring(self):
+        """A group that does not split evenly across pods degenerates to
+        ring placement, exactly like wire_bytes_per_rank's _hier_split."""
+        group = [0, 1, 2, 4, 5]        # 3 in pod 0, 2 in pod 1
+        op = mk_op("all-reduce", group=group)
+        hier = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                          topo=TWO_POD)
+        ring = comm_matrix.matrix_for_ops([op], 8, "ring", topo=TWO_POD)
+        np.testing.assert_allclose(hier, ring)
+
+    def test_without_topo_hierarchical_degenerates_to_ring(self):
+        op = mk_op("all-reduce")
+        hier = comm_matrix.matrix_for_ops([op], 8, "hierarchical")
+        ring = comm_matrix.matrix_for_ops([op], 8, "ring")
+        np.testing.assert_allclose(hier, ring)
+
+
+class TestTreePlacement:
+    @pytest.mark.parametrize("kind", ("all-reduce", "all-gather",
+                                      "reduce-scatter",
+                                      "collective-broadcast"))
+    def test_tree_traffic_only_on_tree_edges(self, kind):
+        op = mk_op(kind)
+        mat = comm_matrix.matrix_for_ops([op], 8, "tree")[1:, 1:]
+        tree_pairs = set()
+        for i in range(1, 8):
+            tree_pairs |= {(i, (i - 1) // 2), ((i - 1) // 2, i)}
+        for i in range(8):
+            for j in range(8):
+                if (i, j) not in tree_pairs:
+                    assert mat[i, j] == 0, (i, j)
+
+    def test_tree_roles_differ(self):
+        """Root (2 children, no parent) and a leaf send different amounts."""
+        op = mk_op("all-reduce")
+        s = op.payload_bytes
+        mat = comm_matrix.matrix_for_ops([op], 8, "tree")[1:, 1:]
+        assert mat[0].sum() == pytest.approx(2 * s)      # root: S per child
+        assert mat[7].sum() == pytest.approx(s)          # leaf: S up only
+
+    def test_broadcast_tree_is_downward_only(self):
+        op = mk_op("collective-broadcast")
+        mat = comm_matrix.matrix_for_ops([op], 8, "tree")[1:, 1:]
+        assert mat[7].sum() == 0                         # leaves send nothing
+        assert mat[0].sum() > 0
+
+
+class TestLinkProjection:
+    def test_link_enumeration(self):
+        # 8-device 1-axis ring: 8 devices x 2 directions
+        assert len(ONE_POD.links()) == 16
+        assert all(l.kind == "ici" for l in ONE_POD.links())
+        # two-pod mesh: 2 ici axes x 8 devices x 2 dirs collapse on size-2
+        # rings to 1 directed link per (src,dst,axis) pair + 16 dcn links
+        kinds = {l.kind for l in TWO_POD.links()}
+        assert kinds == {"ici", "dcn"}
+        assert sum(1 for l in TWO_POD.links() if l.kind == "dcn") == 16
+
+    def test_route_intra_pod_is_ici_only(self):
+        for dst in range(1, 4):
+            links = TWO_POD.route(0, dst)
+            assert links and all(l.kind == "ici" for l in links)
+            assert links[0].src == 0 and links[-1].dst == dst
+            for a, b in zip(links, links[1:]):
+                assert a.dst == b.src                     # contiguous path
+
+    def test_route_cross_pod_is_uplink_plus_downlink(self):
+        links = TWO_POD.route(0, 7)
+        assert [l.kind for l in links] == ["dcn", "dcn"]
+        assert links[0].src == 0 and links[0].dst == DCN_FABRIC
+        assert links[1].src == DCN_FABRIC and links[1].dst == 7
+
+    def test_projection_conserves_single_hop_bytes(self):
+        """A matrix whose edges are all physical neighbours projects with
+        no inflation; the host row never reaches the fabric."""
+        topo = ONE_POD
+        mat = np.zeros((9, 9))
+        mat[1, 2] = 100.0           # 0 -> 1: one hop on the data ring
+        mat[0, 3] = 999.0           # host -> device: must be ignored
+        lu = comm_matrix.project_links(mat, topo)
+        assert lu.total_bytes() == pytest.approx(100.0)
+        assert lu.total_bytes("ici") == pytest.approx(100.0)
+
+    def test_projection_charges_transit_hops(self):
+        topo = ONE_POD
+        mat = np.zeros((9, 9))
+        mat[1, 4] = 10.0            # 0 -> 3: three hops on an 8-ring
+        lu = comm_matrix.project_links(mat, topo)
+        assert lu.total_bytes() == pytest.approx(30.0)
+
+    def test_shorter_way_around_the_ring(self):
+        links = ONE_POD.route(0, 7)  # one hop backwards, not 7 forwards
+        assert len(links) == 1 and links[0].dst == 7
+
+    def test_link_matrix_layout(self):
+        op = mk_op("all-reduce")
+        lu = comm_matrix.link_utilization_for_ops([op], TWO_POD,
+                                                  "hierarchical")
+        lm = lu.matrix()
+        assert lm.shape == (9, 9)
+        # DCN tier lives in row/col 0 of the *link* matrix
+        assert lm[1:, 0].sum() > 0 and lm[0, 1:].sum() > 0
+        assert lm[1:, 0].sum() == pytest.approx(lm[0, 1:].sum())
+        # ici entries only on physical neighbours
+        for i in range(8):
+            for j in range(8):
+                if lm[i + 1, j + 1] > 0:
+                    assert any(l.src == i and l.dst == j
+                               for l in TWO_POD.links() if l.kind == "ici")
+
+    def test_contention_time_is_bottleneck_link(self):
+        op = mk_op("all-reduce")
+        lu = comm_matrix.link_utilization_for_ops([op], TWO_POD, "ring")
+        t = cost_models.contention_time([op], TWO_POD, "ring")
+        assert t == pytest.approx(lu.bottleneck_seconds())
+        link, secs = lu.bottleneck()
+        assert secs == pytest.approx(
+            lu.bytes_by_link[link] / TWO_POD.link_bandwidth(link))
+
+    def test_zero_traffic_has_no_bottleneck(self):
+        """Links are pre-seeded at 0 bytes; an idle fabric must report no
+        bottleneck link rather than an arbitrary zero-byte one."""
+        lu = comm_matrix.project_links(np.zeros((9, 9)), ONE_POD)
+        assert lu.bottleneck() is None
+        assert lu.bottleneck_seconds() == 0.0
+        for row in lu.summary().values():
+            assert row["busiest_link"] == ""
+
+    def test_weight_scales_links(self):
+        op1, op16 = mk_op("all-reduce"), mk_op("all-reduce", weight=16.0)
+        lu1 = comm_matrix.link_utilization_for_ops([op1], ONE_POD, "ring")
+        lu16 = comm_matrix.link_utilization_for_ops([op16], ONE_POD, "ring")
+        assert lu16.total_bytes() == pytest.approx(16 * lu1.total_bytes())
+
+
+class TestCollectiveTimeFaithful:
+    """The requested algorithm is billed, even across DCN (satellite fix)."""
+
+    def _op(self, group):
+        return mk_op("all-reduce", group=group)
+
+    def test_intra_pod_uses_ici(self):
+        op = self._op([0, 1, 2, 3])    # pod 0 only
+        t = cost_models.collective_time(op, TWO_POD, "ring")
+        per_rank = cost_models.wire_bytes_per_rank(
+            "all-reduce", op.payload_bytes, 4, "ring")
+        assert t == pytest.approx(per_rank / TWO_POD.ring_bw_per_chip(False))
+
+    def test_ring_across_dcn_pays_full_payload_on_dcn(self):
+        op = self._op(list(range(8)))
+        t = cost_models.collective_time(op, TWO_POD, "ring")
+        per_rank = cost_models.wire_bytes_per_rank(
+            "all-reduce", op.payload_bytes, 8, "ring")
+        assert t == pytest.approx(per_rank / TWO_POD.ring_bw_per_chip(True))
+
+    def test_tree_across_dcn_pays_full_payload_on_dcn(self):
+        op = self._op(list(range(8)))
+        t = cost_models.collective_time(op, TWO_POD, "tree")
+        assert t == pytest.approx(
+            2.0 * op.payload_bytes / TWO_POD.ring_bw_per_chip(True))
+
+    def test_hierarchical_across_dcn_splits_tiers(self):
+        op = self._op(list(range(8)))
+        s = op.payload_bytes
+        t = cost_models.collective_time(op, TWO_POD, "hierarchical")
+        p, m = 2, 4
+        intra = 2.0 * (m - 1) * s / m / TWO_POD.ring_bw_per_chip(False)
+        cross = 2.0 * (p - 1) * (s / m) / p / TWO_POD.ring_bw_per_chip(True)
+        assert t == pytest.approx(intra + cross)
+        # the point of hierarchy: strictly faster than ring across DCN
+        assert t < cost_models.collective_time(op, TWO_POD, "ring")
+
+    def test_algorithms_differ_across_dcn(self):
+        op = self._op(list(range(8)))
+        times = {a: cost_models.collective_time(op, TWO_POD, a)
+                 for a in ALGORITHMS}
+        assert len({round(v, 15) for v in times.values()}) == 3
+
+    def test_total_time_is_execution_weighted(self):
+        op1, op16 = self._op(list(range(8))), self._op(list(range(8)))
+        op16.weight = 16.0
+        t1 = cost_models.total_time([op1], TWO_POD, "ring")
+        t16 = cost_models.total_time([op16], TWO_POD, "ring")
+        assert t16 == pytest.approx(16 * t1)

@@ -10,6 +10,8 @@ from repro.models import build_model
 from repro.parallel import Sharder
 from repro.compat import make_mesh
 
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 ARCHS = list(configs.ARCH_IDS)
 
 

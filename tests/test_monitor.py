@@ -8,6 +8,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import monitor_fn, roofline_of
 
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 
 @pytest.fixture(scope="module")
 def report(mesh8):

@@ -7,6 +7,8 @@ from jax.sharding import PartitionSpec as P
 from repro.parallel import Sharder
 from repro.compat import make_mesh
 
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 
 class TestSpec:
     def test_basic_tp(self, sharder):

@@ -37,6 +37,8 @@ class TestRegistry:
 
 
 class TestSweepRuns:
+    pytestmark = pytest.mark.compile
+
     def test_cold_then_cached(self, tmp_path):
         cache = ReportCache(root=str(tmp_path / "cache"))
         logs: list[str] = []

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.compile   # whole module drives XLA compiles
+
 
 class TestTrainDriver:
     def test_train_resume_identical(self, tmp_path):
