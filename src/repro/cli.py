@@ -238,7 +238,8 @@ def build_parser() -> argparse.ArgumentParser:
                    help="comma list of ring,tree,hierarchical")
     p.add_argument("--by-link", action="store_true", dest="by_link",
                    help="add per-link utilization columns (busiest physical "
-                        "ICI/DCN link and its contention-aware bottleneck "
+                        "ICI/DCN link, the tier-overlapped communication "
+                        "time, and its contention-aware bottleneck "
                         "ms) to the summary table")
     p.add_argument("--formats", default="json,csv,html,perfetto")
     p.add_argument("--out", default=os.path.join("artifacts", "sweep"))

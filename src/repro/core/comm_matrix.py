@@ -5,13 +5,21 @@ device ``i`` sends to device ``j``; row/column 0 is reserved for the host
 (paper Fig. 2).  Matrices are built from compiled :class:`CollectiveOp` lists
 with an algorithm- and topology-faithful edge model:
 
-* ring collectives place traffic on consecutive group neighbours,
+* ring collectives stream **both directions** of the ring (half the per-rank
+  bytes to each neighbour -- the bidirectional torus ring whose bandwidth
+  ``ring_bw_per_chip`` already credits, so the link projection no longer
+  piles 2x the bytes onto the +1 links),
 * tree collectives place traffic on binary-tree edges with per-role amounts
   (root sends S per child, leaves send up only) for all-reduce, all-gather,
   reduce-scatter and broadcast,
-* hierarchical all-reduce decomposes a cross-pod group into intra-pod ring
-  edges plus a cross-pod DCN exchange of the reduce-scattered shard -- the
-  placement that matches ``wire_bytes_per_rank(..., "hierarchical")``,
+* hierarchical all-reduce / all-gather / reduce-scatter / broadcast
+  decompose a cross-pod group into intra-pod ring edges plus a cross-pod
+  DCN shard exchange -- the per-kind placements that match
+  ``wire_bytes_per_rank(..., "hierarchical")``; a group the shared
+  predicate (``cost_models.hierarchical_decomposition``) refuses falls
+  back to flat ring **with a** :class:`HierarchicalFallbackWarning` (and
+  ``collective_time`` refuses to bill the decomposition in exactly the
+  same case),
 * collective-permute uses its explicit source-target pairs,
 * all-to-all places uniform pairwise traffic.
 
@@ -25,6 +33,7 @@ the bottleneck link, and a contention-aware time bound.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterable, Optional
 
 import numpy as np
@@ -34,9 +43,26 @@ from . import cost_models
 from .topology import DCN_FABRIC, Link, MeshTopology
 
 
-def _ring_edges(group: list[int]) -> list[tuple[int, int]]:
+class HierarchicalFallbackWarning(UserWarning):
+    """``algorithm="hierarchical"`` was requested for a cross-pod group the
+    shared predicate cannot decompose (uneven pod split, or a kind outside
+    ``cost_models.HIERARCHICAL_KINDS``); the placement fell back to flat
+    ring edges and ``collective_time`` bills that same fallback."""
+
+
+def _ring_edges(group: list[int],
+                per_rank: float) -> list[tuple[int, int, float]]:
+    """Bidirectional ring: each member streams half its per-rank bytes to
+    each ring neighbour (the torus ring algorithm uses both directions of
+    the axis links -- the bandwidth ``ring_bw_per_chip`` credits).  On a
+    2-member ring both halves reach the same peer and accumulate."""
     n = len(group)
-    return [(group[i], group[(i + 1) % n]) for i in range(n)]
+    half = 0.5 * per_rank
+    out: list[tuple[int, int, float]] = []
+    for i in range(n):
+        out.append((group[i], group[(i + 1) % n], half))
+        out.append((group[i], group[(i - 1) % n], half))
+    return out
 
 
 _TREE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
@@ -77,37 +103,37 @@ def _tree_placement(group: list[int], kind: str,
     return edges
 
 
-def _hierarchical_placement(group: list[int], s: float,
+def _hierarchical_placement(group: list[int], kind: str, s: float,
                             topo: MeshTopology) -> Optional[
                                 list[tuple[int, int, float]]]:
-    """Intra-pod ring edges + cross-pod DCN exchange for one all-reduce.
+    """Intra-pod ring edges + cross-pod DCN shard exchange, per kind.
 
     Phase placement matching ``wire_bytes_per_rank(..., "hierarchical",
-    pods=p)``: reduce-scatter + all-gather rings inside each pod subgroup
-    (``2*(m-1)/m*S`` per member) and a ring all-reduce of each member's
-    ``S/m`` shard across the ``p`` same-index members of the other pods
-    (``2*(p-1)/p * S/m`` -- the only bytes that cross DCN).  Returns None
-    when the group does not split evenly across pods (degenerate case: the
-    caller falls back to the plain ring placement, exactly like
-    ``_hier_split``).
+    pods=p)`` for every kind in ``cost_models.HIERARCHICAL_KINDS``:
+    bidirectional ring phases inside each pod subgroup (``2*(m-1)/m*S`` per
+    member for all-reduce's RS+AG pair, ``(m-1)/m*S`` for the one-phase
+    kinds) and a ring exchange across the ``p`` same-index members of the
+    other pods (``2*(p-1)/n*S`` resp. ``(p-1)/n*S`` per member -- the only
+    bytes that cross DCN).  Returns None when
+    ``cost_models.hierarchical_decomposition`` refuses the triple (uneven
+    pod split / unsupported kind): the caller falls back to the plain ring
+    placement, and ``collective_time_split`` refuses the decomposition in
+    exactly the same case -- one shared predicate, no divergence.
     """
-    subs = topo.pod_partition(group)
-    p = len(subs)
-    n = len(group)
-    if p <= 1 or n % p != 0 or any(len(sub) != n // p for sub in subs):
+    dec = cost_models.hierarchical_decomposition(kind, group, topo)
+    if dec is None:
         return None
-    m = n // p
+    p, m, subs = dec
+    phases = cost_models.hier_phases(kind)
     edges: list[tuple[int, int, float]] = []
     if m > 1:
-        per_phase = (m - 1) * s / m          # RS ring; AG ring is identical
+        intra_per_rank = phases * (m - 1) * s / m
         for sub in subs:
-            for i in range(m):
-                edges.append((sub[i], sub[(i + 1) % m], 2.0 * per_phase))
-    cross_per_rank = 2.0 * (p - 1) * (s / m) / p
+            edges.extend(_ring_edges(sub, intra_per_rank))
+    cross_per_rank = phases * (p - 1) * s / len(group)
     for j in range(m):
         ring = [subs[k][j] for k in range(p)]
-        for k in range(p):
-            edges.append((ring[k], ring[(k + 1) % p], cross_per_rank))
+        edges.extend(_ring_edges(ring, cross_per_rank))
     return edges
 
 
@@ -116,6 +142,11 @@ def op_edges(op: CollectiveOp, algorithm: str = "ring",
     """``(src, dst, bytes)`` edges for ONE execution of ``op`` (weight not
     applied).  The single source of truth for edge placement: matrices,
     link projections and the consistency tests all go through here.
+
+    A hierarchical request for a cross-pod group the shared predicate
+    cannot decompose emits a :class:`HierarchicalFallbackWarning` and
+    places flat ring edges instead (silently degenerating is exactly the
+    matrix/model mismatch this module exists to expose).
     """
     edges: list[tuple[int, int, float]] = []
     if op.kind == "collective-permute":
@@ -134,16 +165,24 @@ def op_edges(op: CollectiveOp, algorithm: str = "ring",
         if algorithm == "tree" and op.kind in _TREE_KINDS:
             edges.extend(_tree_placement(group, op.kind, s))
             continue
-        if algorithm == "hierarchical" and op.kind == "all-reduce" \
-                and topo is not None and topo.group_crosses_dcn(group):
-            placed = _hierarchical_placement(group, s, topo)
+        if algorithm == "hierarchical" and topo is not None:
+            placed = _hierarchical_placement(group, op.kind, s, topo)
             if placed is not None:
                 edges.extend(placed)
                 continue
-        pods = len(topo.pod_partition(group)) if topo is not None else 1
+            if op.kind in cost_models.HIERARCHICAL_KINDS \
+                    and topo.group_crosses_dcn(group):
+                warnings.warn(HierarchicalFallbackWarning(
+                    f"hierarchical {op.kind} over cross-pod group of {n} "
+                    "cannot decompose (uneven pod split); placing flat "
+                    "ring edges and billing the same fallback"),
+                    stacklevel=2)
+        # pods=1 is exact here: a decomposable hierarchical triple already
+        # placed above, and the ring/tree Table-1 entries ignore pods --
+        # so the degenerate value spares a pod-partition walk per group.
         per_rank = cost_models.wire_bytes_per_rank(
-            op.kind, s, n, algorithm, pods=pods)
-        edges.extend((src, dst, per_rank) for src, dst in _ring_edges(group))
+            op.kind, s, n, algorithm, pods=1)
+        edges.extend(_ring_edges(group, per_rank))
     return edges
 
 
@@ -230,6 +269,22 @@ class LinkUtilization:
         bn = self.bottleneck()
         return bn[1] if bn else 0.0
 
+    def busy_seconds(self, kind: Optional[str] = None) -> float:
+        """Per-tier busy time: max over links (of ``kind``, or all) of
+        bytes/bandwidth -- how long that fabric tier is occupied if every
+        link streams its traffic back-to-back.  Feeds the link-overlap
+        roofline (``compute ∥ ICI ∥ DCN``): tiers are independent fabrics,
+        so ``max(busy_seconds("ici"), busy_seconds("dcn"))`` bounds the
+        overlapped communication time from below."""
+        return max((self.seconds(l) for l in self.bytes_by_link
+                    if kind is None or l.kind == kind), default=0.0)
+
+    def tier_summary(self) -> dict:
+        """Per-tier ``{kind: {bytes, busy_seconds}}`` (schema-v3 section)."""
+        return {kind: {"bytes": self.total_bytes(kind),
+                       "busy_seconds": self.busy_seconds(kind)}
+                for kind in sorted({l.kind for l in self.bytes_by_link})}
+
     def matrix(self) -> np.ndarray:
         """The per-link utilization matrix, shape ``(d+1, d+1)``.
 
@@ -296,14 +351,23 @@ def project_links(mat: np.ndarray, topo: MeshTopology) -> LinkUtilization:
 
     The host row/col (index 0) is skipped -- host transfers ride PCIe, not
     the ICI/DCN fabric.  Each device-to-device entry is routed by
-    :meth:`MeshTopology.route` (dimension-ordered on the torus, DCN
-    uplink+downlink across pods) and its bytes charged to every hop.
+    :meth:`MeshTopology.route` (dimension-ordered wrap-aware torus routing,
+    DCN uplink+downlink across pods) and its bytes charged to every hop.
+
+    Every routed hop must be one of the enumerated physical links -- in
+    particular, both directions around a size-2 torus axis are the SAME
+    single collapsed link (``MeshTopology.links`` docstring); a hop outside
+    the enumeration would silently invent fabric, so it raises.
     """
     bytes_by_link: dict[Link, float] = {l: 0.0 for l in topo.links()}
     dev = np.asarray(mat, dtype=np.float64)[1:, 1:]
     for i, j in np.argwhere(dev > 0):
         for link in topo.route(int(i), int(j)):
-            bytes_by_link[link] = bytes_by_link.get(link, 0.0) + dev[i, j]
+            if link not in bytes_by_link:
+                raise ValueError(
+                    f"route({i}, {j}) emitted {link.name}, which is not an "
+                    "enumerated physical link of the topology")
+            bytes_by_link[link] += dev[i, j]
     return LinkUtilization(topo=topo, bytes_by_link=bytes_by_link)
 
 

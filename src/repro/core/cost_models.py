@@ -9,17 +9,26 @@ same structure; the TPU-native algorithm menu is:
                       large payloads; NCCL-ring analogue).
 * ``tree``         -- binary reduce/broadcast tree, logarithmic latency (small
                       payloads; NCCL-tree analogue).
-* ``hierarchical`` -- reduce-scatter inside the pod over ICI, cross-pod
-                      ring exchange of the scattered shards over DCN,
-                      all-gather inside the pod (the collnet/SHARP analogue:
-                      only S/N_in_pod crosses the slow tier).  With ``pods=1``
-                      (no DCN tier) it degenerates exactly to ``ring``.
+* ``hierarchical`` -- phase decomposition across the pod boundary (the
+                      collnet/SHARP analogue), per kind: all-reduce does
+                      reduce-scatter + all-gather rings inside the pod over
+                      ICI with a cross-pod ring all-reduce of the ``S/m``
+                      shard over DCN; all-gather / reduce-scatter / broadcast
+                      do their shard exchange across the ``p`` same-index
+                      members over DCN and the full-payload ring phase inside
+                      the pod over ICI (only ``(p-1)/n`` of S per rank ever
+                      crosses the slow tier).  With ``pods=1`` (no DCN tier)
+                      every entry degenerates exactly to ``ring``.
 
 ``wire_bytes_per_rank`` reproduces the Table-1 entries; ``collective_time``
-turns them into seconds on a :class:`~repro.core.topology.MeshTopology`,
-honouring the *requested* algorithm even when the group spans DCN (a ring
-all-reduce across pods pays its full per-rank payload at the per-chip DCN
-share -- it is never silently rebilled as hierarchical).
+(= the sum of ``collective_time_split``'s per-tier terms) turns them into
+seconds on a :class:`~repro.core.topology.MeshTopology`, honouring the
+*requested* algorithm even when the group spans DCN (a ring all-reduce
+across pods pays its full per-rank payload at the per-chip DCN share -- it
+is never silently rebilled as hierarchical).
+:func:`hierarchical_decomposition` is the ONE predicate deciding whether a
+(kind, group, topology) triple decomposes hierarchically -- matrix placement
+and billing both go through it, so they cannot diverge.
 ``device_send_bytes`` resolves the per-rank entries down to each device's
 role (tree roots/leaves send different amounts), and is the contract the
 communication-matrix row sums are tested against.  ``contention_time``
@@ -35,6 +44,10 @@ from .topology import MeshTopology
 
 ALGORITHMS = ("ring", "tree", "hierarchical")
 
+# Kinds the hierarchical algorithm knows how to decompose across pods.
+HIERARCHICAL_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                      "collective-broadcast")
+
 
 def _hier_split(n: int, pods: int) -> tuple[int, int]:
     """(pods, in_pod) for a hierarchical decomposition of an ``n``-rank group.
@@ -48,18 +61,79 @@ def _hier_split(n: int, pods: int) -> tuple[int, int]:
     return p, n // p
 
 
+def hierarchical_decomposition(
+        kind: str, group: list[int],
+        topo: Optional[MeshTopology]) -> Optional[
+            tuple[int, int, list[list[int]]]]:
+    """``(p, m, subgroups)`` when ``kind`` over ``group`` decomposes
+    hierarchically.
+
+    The single shared predicate between matrix placement
+    (:func:`repro.core.comm_matrix.op_edges`) and billing
+    (:func:`collective_time_split`): a group decomposes iff the kind is one
+    of :data:`HIERARCHICAL_KINDS`, the group spans more than one pod, and
+    the pods partition it into equal-size subgroups.  ``None`` otherwise --
+    both callers then fall back to the flat ring model together.  The
+    per-pod subgroups ride along so callers never recompute the partition.
+    """
+    if topo is None or kind not in HIERARCHICAL_KINDS or not group:
+        return None
+    if not topo.group_crosses_dcn(group):
+        return None
+    subs = topo.pod_partition(group)
+    p, n = len(subs), len(group)
+    if p <= 1 or n % p != 0 or any(len(sub) != n // p for sub in subs):
+        return None
+    return p, n // p, subs
+
+
+def effective_pods(kind: str, group: list[int],
+                   topo: Optional[MeshTopology]) -> int:
+    """``pods`` argument for the Table-1 entries: the decomposition's ``p``
+    when :func:`hierarchical_decomposition` accepts the triple, else 1 (so
+    hierarchical degenerates to ring exactly where the placement does)."""
+    dec = hierarchical_decomposition(kind, group, topo)
+    return dec[0] if dec is not None else 1
+
+
+def hier_phases(kind: str) -> float:
+    """Ring phases per tier: all-reduce = RS + AG (2), the one-phase kinds
+    (all-gather / reduce-scatter / scatter-allgather broadcast) = 1.
+    Part of the shared placement/billing contract alongside
+    :data:`HIERARCHICAL_KINDS` and :func:`hierarchical_decomposition`."""
+    return 2.0 if kind == "all-reduce" else 1.0
+
+
 def wire_bytes_per_rank(kind: str, payload: float, n: int,
                         algorithm: str = "ring", *, pods: int = 1) -> float:
     """Bytes *sent* by one rank for one collective (paper Table 1 analogue).
 
     ``payload`` is S (the full logical payload per group), ``n`` the group
-    size.  ``pods`` is the number of DCN tiers the group spans -- only the
-    hierarchical all-reduce entry depends on it (reduce-scatter over the
-    ``n/pods`` in-pod ranks, cross-pod ring over ``pods``, all-gather in
-    pod).  Receives mirror sends for all entries below (symmetric
-    algorithms), matching the paper's "sent and received" accounting.  Tree
-    entries report the non-root (dominant) cost; ``device_send_bytes``
-    resolves per-role amounts.
+    size.  ``pods`` is the number of DCN tiers the group spans -- every
+    hierarchical entry in :data:`HIERARCHICAL_KINDS` depends on it.  Pass
+    :func:`effective_pods` for ``pods`` so a group the placement cannot
+    decompose degenerates here too.  Receives mirror sends for all entries
+    below (symmetric algorithms), matching the paper's "sent and received"
+    accounting.  Tree entries report the non-root (dominant) cost;
+    ``device_send_bytes`` resolves per-role amounts.
+
+    Hierarchical per-rank entries (``m = n/pods`` in-pod ranks, ``p = pods``):
+
+    ========================  =====================  ====================
+    kind                      intra-pod (ICI)        cross-pod (DCN)
+    ========================  =====================  ====================
+    all-reduce                ``2(m-1)/m * S``       ``2(p-1)/n * S``
+    all-gather                ``(m-1)/m * S``        ``(p-1)/n * S``
+    reduce-scatter            ``(m-1)/m * S``        ``(p-1)/n * S``
+    collective-broadcast      ``(m-1)/m * S``        ``(p-1)/n * S``
+    ========================  =====================  ====================
+
+    All-reduce is RS+AG rings in pod plus a cross-pod ring all-reduce of
+    the ``S/m`` shard; the one-phase kinds exchange their ``S/n`` shards
+    across the ``p`` same-index members over DCN and run the full-payload
+    ring phase inside the pod (broadcast is the scatter-allgather form, the
+    same convention the ring entry already uses).  Each entry degenerates
+    exactly to its ring value at ``p = 1``.
     """
     if n <= 1:
         return 0.0
@@ -79,12 +153,18 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int,
         # for RS+AG) + cross-pod ring all-reduce of the S/m shard over pods
         p, m = _hier_split(n, pods)
         intra = 2.0 * (m - 1) * s / m if m > 1 else 0.0
-        cross = 2.0 * (p - 1) * (s / m) / p if p > 1 else 0.0
+        cross = 2.0 * (p - 1) * s / n if p > 1 else 0.0
         return intra + cross
-    if kind in ("all-gather", "collective-broadcast"):
-        # each rank forwards (n-1) shards of size S/n around the ring
-        return (n - 1) * s / n
-    if kind == "reduce-scatter":
+    if kind in ("all-gather", "reduce-scatter", "collective-broadcast"):
+        # ring: each rank forwards (n-1) shards of size S/n around the ring.
+        # hierarchical: cross-pod shard exchange among the p same-index
+        # members ((p-1)/n * S over DCN) + full-payload ring phase inside
+        # the pod ((m-1)/m * S over ICI); total bytes stay minimal.
+        if algorithm == "hierarchical":
+            p, m = _hier_split(n, pods)
+            intra = (m - 1) * s / m if m > 1 else 0.0
+            cross = (p - 1) * s / n if p > 1 else 0.0
+            return intra + cross
         return (n - 1) * s / n
     if kind in ("all-to-all", "ragged-all-to-all"):
         # each rank sends (n-1) of its n blocks; block = S/n^2 of global S
@@ -178,47 +258,87 @@ def device_send_bytes(kind: str, payload: float, group: list[int],
                     + sum(sizes[c] * s / n for c in kids)
             out[d] = sent
         return out
-    pods = len(topo.pod_partition(group)) if topo is not None else 1
-    per_rank = wire_bytes_per_rank(kind, s, n, algorithm, pods=pods)
+    per_rank = wire_bytes_per_rank(kind, s, n, algorithm,
+                                   pods=effective_pods(kind, group, topo))
     return {d: per_rank for d in group}
+
+
+def _group_time_split(kind: str, s: float, group: list[int], n: int,
+                      topo: MeshTopology,
+                      algorithm: str) -> tuple[float, float]:
+    """``(ici_seconds, dcn_seconds)`` for ONE replica group."""
+    if n <= 1:
+        return 0.0, 0.0
+    crosses = topo.group_crosses_dcn(group)
+
+    if not crosses:
+        per_rank = wire_bytes_per_rank(kind, s, n, algorithm)
+        return per_rank / topo.ring_bw_per_chip(False), 0.0
+
+    if algorithm == "hierarchical":
+        dec = hierarchical_decomposition(kind, group, topo)
+        if dec is not None:
+            p, m, _ = dec
+            phases = hier_phases(kind)
+            intra = (phases * (m - 1) * s / m) / topo.ring_bw_per_chip(False) \
+                if m > 1 else 0.0
+            cross = (phases * (p - 1) * s / n) / topo.ring_bw_per_chip(True) \
+                if p > 1 else 0.0
+            return intra, cross
+        # refusal: bill the flat ring fallback the placement also uses
+        # (pods=1 degenerates every hierarchical Table-1 entry to ring)
+        per_rank = wire_bytes_per_rank(kind, s, n, algorithm, pods=1)
+        return 0.0, per_rank / topo.ring_bw_per_chip(True)
+
+    per_rank = wire_bytes_per_rank(kind, s, n, algorithm)
+    return 0.0, per_rank / topo.ring_bw_per_chip(True)
+
+
+def collective_time_split(op: CollectiveOp, topo: MeshTopology,
+                          algorithm: str = "ring") -> tuple[float, float]:
+    """``(ici_seconds, dcn_seconds)`` for one collective (bandwidth terms).
+
+    The per-tier resolution of :func:`collective_time`, decided **per
+    replica group** with the same shared predicate the matrix placement
+    uses (groups occupy disjoint devices and run concurrently, so each
+    tier's time is the max over groups).  The *requested* algorithm is
+    honoured:
+
+    * intra-pod groups stream the per-rank bytes at the per-chip ring
+      bandwidth (both directions of the axis links) -- pure ICI time;
+    * a **hierarchical** group across pods that
+      :func:`hierarchical_decomposition` accepts pays its intra-pod ring
+      phases over ICI and only the shard exchange over DCN (per-kind
+      entries in the :func:`wire_bytes_per_rank` table);
+    * a hierarchical request the predicate *refuses* (uneven pod split,
+      or a kind outside :data:`HIERARCHICAL_KINDS`) is billed exactly like
+      the placement's fallback -- flat ring edges crossing DCN at the
+      per-chip DCN share -- never as a phantom decomposition;
+    * a **ring or tree** group spanning pods has ring/tree edges crossing
+      DCN, so its full per-rank payload streams at the per-chip DCN share
+      -- it is NOT silently rebilled as hierarchical (that would
+      contradict the matrix's edge placement).
+    """
+    s = float(op.payload_bytes)
+    groups = [g for g in (op.replica_groups or []) if len(g) > 1]
+    if not groups:
+        # pair-form ops (collective-permute) carry no replica groups
+        return _group_time_split(op.kind, s, [], op.group_size, topo,
+                                 algorithm)
+    ici = dcn = 0.0
+    for g in groups:
+        i, d = _group_time_split(op.kind, s, g, len(g), topo, algorithm)
+        ici = max(ici, i)
+        dcn = max(dcn, d)
+    return ici, dcn
 
 
 def collective_time(op: CollectiveOp, topo: MeshTopology,
                     algorithm: str = "ring") -> float:
-    """Seconds for one collective on the torus (bandwidth term only).
-
-    The *requested* algorithm is honoured:
-
-    * intra-pod groups stream the per-rank bytes at the per-chip ring
-      bandwidth (both directions of the axis links);
-    * a **hierarchical** all-reduce across pods pays its intra-pod phases
-      over ICI and only the ``S/m`` shard exchange over DCN;
-    * a **ring or tree** collective whose group spans pods has ring/tree
-      edges crossing DCN, so its full per-rank payload streams at the
-      per-chip DCN share -- it is NOT silently rebilled as hierarchical
-      (that would contradict the matrix's edge placement).
-    """
-    n = op.group_size
-    if n <= 1:
-        return 0.0
-    group = op.replica_groups[0] if op.replica_groups else []
-    crosses = topo.group_crosses_dcn(group)
-    s = float(op.payload_bytes)
-
-    if not crosses:
-        per_rank = wire_bytes_per_rank(op.kind, s, n, algorithm)
-        return per_rank / topo.ring_bw_per_chip(False)
-
-    if algorithm == "hierarchical" and op.kind == "all-reduce":
-        p, m = _hier_split(n, len(topo.pod_partition(group)))
-        intra = (2.0 * (m - 1) * s / m) / topo.ring_bw_per_chip(False) \
-            if m > 1 else 0.0
-        cross = (2.0 * (p - 1) * (s / m) / p) / topo.ring_bw_per_chip(True) \
-            if p > 1 else 0.0
-        return intra + cross
-
-    per_rank = wire_bytes_per_rank(op.kind, s, n, algorithm)
-    return per_rank / topo.ring_bw_per_chip(True)
+    """Seconds for one collective on the torus: the serialized sum of the
+    per-tier terms of :func:`collective_time_split`."""
+    ici, dcn = collective_time_split(op, topo, algorithm)
+    return ici + dcn
 
 
 def total_time(ops: Iterable[CollectiveOp], topo: MeshTopology,
@@ -229,6 +349,23 @@ def total_time(ops: Iterable[CollectiveOp], topo: MeshTopology,
     """
     return float(sum(collective_time(op, topo, algorithm)
                      * max(1.0, getattr(op, "weight", 1.0)) for op in ops))
+
+
+def total_time_split(ops: Iterable[CollectiveOp], topo: MeshTopology,
+                     algorithm: str = "ring") -> tuple[float, float]:
+    """Execution-weighted per-tier serialized sums ``(ici_s, dcn_s)``.
+
+    ``total_time == sum(total_time_split)`` by construction; the overlap
+    roofline bound takes ``max`` of these instead of their sum (ICI and DCN
+    are independent fabrics, so their busy times can fully overlap).
+    """
+    ici = dcn = 0.0
+    for op in ops:
+        i, d = collective_time_split(op, topo, algorithm)
+        w = max(1.0, getattr(op, "weight", 1.0))
+        ici += i * w
+        dcn += d * w
+    return ici, dcn
 
 
 def contention_time(ops: Iterable[CollectiveOp], topo: MeshTopology,

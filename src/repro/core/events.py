@@ -118,7 +118,9 @@ class CollectiveOp:
         """Bytes *sent* by one participating rank (paper Table 1 analogue).
 
         ``pods`` is the number of DCN tiers the group spans (only the
-        hierarchical all-reduce entry depends on it).
+        hierarchical entries depend on it; pass
+        ``cost_models.effective_pods`` so non-decomposable groups
+        degenerate to ring exactly like the placement).
         """
         from . import cost_models
 

@@ -150,8 +150,29 @@ def _link_summary_table(lu) -> str:
     return "\n".join(rows)
 
 
+def _overlap_table(report, lu) -> str:
+    """Tier-overlap view: serialized per-tier seconds next to each tier's
+    busiest-link time, plus the overlapped vs serialized bound."""
+    if not hasattr(report, "collective_seconds_split"):
+        return ""
+    ici_s, dcn_s = report.collective_seconds_split()
+    rows = ["<table class='sum'><tr><th>tier</th><th>serialized ms</th>"
+            "<th>busiest-link ms</th></tr>"]
+    for tier, serial in (("ici", ici_s), ("dcn", dcn_s)):
+        rows.append(
+            f"<tr><td>{tier}</td><td>{serial * 1e3:.3f}</td>"
+            f"<td>{lu.busy_seconds(tier) * 1e3:.3f}</td></tr>")
+    rows.append("</table>")
+    rows.append(
+        f"<div class='meta'>overlapped (ici ∥ dcn): "
+        f"{max(ici_s, dcn_s) * 1e3:.3f} ms &middot; serialized: "
+        f"{(ici_s + dcn_s) * 1e3:.3f} ms</div>")
+    return "\n".join(rows)
+
+
 def link_section(report) -> str:
-    """The physical-link panel: per-link byte heatmap + per-kind summary.
+    """The physical-link panel: per-link byte heatmap + per-kind summary +
+    the tier-overlap table.
 
     Entry ``(i+1, j+1)`` of the heatmap is the physical ICI link ``i -> j``
     (only torus neighbours light up); row/col 0 is the DCN tier (uplinks /
@@ -165,6 +186,7 @@ def link_section(report) -> str:
             "<div class='meta'>row/col 0 = DCN uplink/downlink; "
             "other cells = ICI neighbour links</div>"
             + matrix_table(lu.matrix()) + _link_summary_table(lu)
+            + _overlap_table(report, lu)
             + "</div>")
 
 

@@ -1,4 +1,4 @@
-"""Lossless CommReport <-> plain-dict serialization (schema ``v2``).
+"""Lossless CommReport <-> plain-dict serialization (schema ``v3``).
 
 This is the substrate for everything under :mod:`repro.core.export`: the JSON
 exporter writes the dict verbatim, the on-disk report cache
@@ -12,12 +12,16 @@ and ``matrix`` keep their old spelling and meaning; the v1 additions
 (``per_primitive``, ``traced``, ``topo``, ``algorithm``, timings, ...) ride
 alongside under new keys.
 
-Schema **v2** adds the physical-link view for reports that carry a topology:
+Schema **v2** added the physical-link view for reports that carry a topology:
 ``link_matrix`` (the ``(d+1)^2`` per-link byte matrix, row/col 0 = DCN tier)
 and ``links`` (one row per physical link: kind/src/dst/axis/bytes/bandwidth/
-seconds).  Both are *derived* from ``ops`` + ``topo``, so v1 files load
-unchanged (:func:`report_from_dict` accepts either schema; loaded reports
-recompute link views on demand via ``CommReport.link_utilization``).
+seconds).  Schema **v3** adds the link-overlap view on top: ``link_tiers``
+(per-tier bytes + busy seconds from ``LinkUtilization.tier_summary``) and
+``overlap`` (per-tier serialized collective seconds, their overlapped max
+and serialized sum).  All link/overlap sections are *derived* from ``ops``
++ ``topo``, so v1 and v2 files load unchanged (:func:`report_from_dict`
+accepts any accepted schema; loaded reports recompute the views on demand
+via ``CommReport.link_utilization`` / ``collective_seconds_split``).
 """
 from __future__ import annotations
 
@@ -29,9 +33,10 @@ import numpy as np
 from ..events import CollectiveOp, HostTransfer, Shape, TraceEvent
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v2"
+SCHEMA = "repro.comm_report.v3"
+SCHEMA_V2 = "repro.comm_report.v2"
 SCHEMA_V1 = "repro.comm_report.v1"
-ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V1)
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V2, SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -139,22 +144,32 @@ def _jsonable_cost(cost: dict) -> dict:
 
 
 def _link_section(report) -> dict:
-    """Schema-v2 physical-link view (empty when the report has no topo)."""
+    """Schema v2+v3 physical-link view (empty when the report has no topo)."""
     lu = None
     if getattr(report, "topo", None) is not None \
             and hasattr(report, "link_utilization"):
         lu = report.link_utilization()
     if lu is None:
         return {}
-    return {
+    out = {
         "link_matrix": lu.matrix().tolist(),
         "links": lu.rows(),
         "link_summary": lu.summary(),
+        "link_tiers": lu.tier_summary(),
     }
+    if hasattr(report, "collective_seconds_split"):
+        ici_s, dcn_s = report.collective_seconds_split()
+        out["overlap"] = {
+            "collective_ici_s": ici_s,
+            "collective_dcn_s": dcn_s,
+            "collective_overlap_s": max(ici_s, dcn_s),
+            "collective_serial_s": ici_s + dcn_s,
+        }
+    return out
 
 
 def report_to_dict(report) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v2``)."""
+    """``CommReport`` -> JSON-serializable dict (schema ``v3``)."""
     return {
         "schema": SCHEMA,
         **_link_section(report),
@@ -179,15 +194,16 @@ def report_to_dict(report) -> dict:
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1`` or ``v2``) -> ``CommReport``.
+    """Dict (schema ``v1`` / ``v2`` / ``v3``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
     needed for matrices, tables, exports and cost models; only the live
     compilation artifacts (``_compiled`` / ``_hlo_text``) are absent, so
     :func:`repro.core.monitor.roofline_of` needs a freshly monitored report.
-    The v2 ``links``/``link_matrix`` sections are derived data and are not
-    restored -- ``CommReport.link_utilization`` recomputes them from
-    ``ops`` + ``topo``, which is how v1 files stay fully usable.
+    The v2/v3 ``links``/``link_matrix``/``link_tiers``/``overlap`` sections
+    are derived data and are not restored -- ``CommReport.
+    link_utilization`` / ``collective_seconds_split`` recompute them from
+    ``ops`` + ``topo``, which is how older files stay fully usable.
     """
     from ..monitor import CommReport  # deferred: monitor imports this module
 

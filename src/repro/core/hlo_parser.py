@@ -146,11 +146,23 @@ def parse_hlo_collectives(hlo_text: str) -> list[CollectiveOp]:
 # ----------------------------------------------------------------------------
 # Summaries
 # ----------------------------------------------------------------------------
-def _op_pods(op: CollectiveOp, topo) -> int:
-    """DCN tiers spanned by the op's groups (1 without topology info)."""
-    if topo is None or not op.replica_groups:
-        return 1
-    return len(topo.pod_partition(op.replica_groups[0]))
+def _op_wire_bytes(op: CollectiveOp, algorithm: str, topo) -> float:
+    """Execution-weighted wire bytes for one op, decided **per replica
+    group** with the shared hierarchical predicate -- so summaries
+    degenerate to ring exactly where the placement and the cost model do
+    (one predicate, no divergence), even when groups differ in how they
+    straddle pods."""
+    from . import cost_models
+
+    if topo is None or not op.replica_groups \
+            or op.kind == "collective-permute":
+        return op.wire_bytes_total(algorithm)
+    total = 0.0
+    for g in op.replica_groups:
+        total += cost_models.wire_bytes_group_total(
+            op.kind, op.payload_bytes, len(g), algorithm,
+            pods=cost_models.effective_pods(op.kind, g, topo))
+    return total * op.weight
 
 
 def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring",
@@ -170,16 +182,14 @@ def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring",
         )
         row["calls"] += int(op.weight)
         row["payload_bytes"] += int(op.payload_bytes * op.num_groups * op.weight)
-        row["wire_bytes"] += op.wire_bytes_total(algorithm,
-                                                 pods=_op_pods(op, topo))
+        row["wire_bytes"] += _op_wire_bytes(op, algorithm, topo)
     return table
 
 
 def total_wire_bytes(ops: Iterable[CollectiveOp], algorithm: str = "ring",
                      topo=None) -> float:
     """Global bytes-on-the-wire across all devices (roofline numerator)."""
-    return float(sum(op.wire_bytes_total(algorithm, pods=_op_pods(op, topo))
-                     for op in ops))
+    return float(sum(_op_wire_bytes(op, algorithm, topo) for op in ops))
 
 
 def count_by_opname(ops: Iterable[CollectiveOp]) -> dict[str, int]:

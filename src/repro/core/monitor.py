@@ -98,6 +98,23 @@ class CommReport:
         return cost_models.total_time(
             self.compiled_ops, self.topo, algorithm or self.algorithm)
 
+    def collective_seconds_split(
+            self, algorithm: Optional[str] = None) -> tuple[float, float]:
+        """Per-tier serialized collective time ``(ici_s, dcn_s)``; sums to
+        :meth:`collective_seconds`.  ``(0, 0)`` without a topology."""
+        if self.topo is None:
+            return 0.0, 0.0
+        return cost_models.total_time_split(
+            self.compiled_ops, self.topo, algorithm or self.algorithm)
+
+    def collective_overlap_seconds(
+            self, algorithm: Optional[str] = None) -> float:
+        """Overlap-aware communication time: ICI and DCN are independent
+        fabrics, so the slower tier bounds the overlapped schedule --
+        ``max`` of the per-tier serialized sums, always <=
+        :meth:`collective_seconds` (equal when one tier has it all)."""
+        return max(self.collective_seconds_split(algorithm))
+
     # -- physical-link view ------------------------------------------------
     def link_utilization(self, algorithm: Optional[str] = None):
         """Project the matrix onto physical links (ICI hops, DCN uplinks).
@@ -130,7 +147,12 @@ class CommReport:
         lu = self.link_utilization()
         if lu is None:
             return "(no topology: pass mesh= to monitor_fn for link stats)"
-        return lu.table()
+        ici_s, dcn_s = self.collective_seconds_split()
+        overlap = (f"tier overlap: ici {ici_s * 1e3:.3f} ms ∥ dcn "
+                   f"{dcn_s * 1e3:.3f} ms -> overlapped "
+                   f"{max(ici_s, dcn_s) * 1e3:.3f} ms "
+                   f"(serialized {(ici_s + dcn_s) * 1e3:.3f} ms)")
+        return lu.table() + "\n" + overlap
 
     def render(self) -> str:
         parts = [
@@ -328,4 +350,5 @@ def roofline_of(report: CommReport, *, arch: str = "", mesh_name: str = "",
         model_flops=model_flops,
         memory_stats=report.memory_stats,
         algorithm=algorithm,
+        link_utilization=report.link_utilization(algorithm),
     )

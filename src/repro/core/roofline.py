@@ -13,6 +13,21 @@ by per-chip peaks yields the same seconds as the global formulation
 ``wire_bytes_per_device`` is NOT in cost_analysis — it is summed from the
 collective ops parsed out of the compiled HLO (the paper's contribution makes
 exactly this visible).
+
+**Link-level overlap model.**  ``collective_s_topo`` serializes every
+collective; real schedules overlap compute with communication and the ICI
+torus with the DCN fabric (independent wires).  The overlap-aware bound is
+
+    bound_overlap_s = max(compute_s, memory_s,
+                          collective_ici_s, collective_dcn_s)
+
+where ``collective_ici_s`` / ``collective_dcn_s`` are the per-tier
+serialized sums from ``cost_models.total_time_split`` (so
+``collective_overlap_s = max(ici, dcn) <= collective_s_topo``, with
+equality exactly when a single tier carries all the traffic).  The
+per-link busy times from ``LinkUtilization.busy_seconds`` ride along as
+the contention-aware refinement per tier (``ici_busy_s`` / ``dcn_busy_s``:
+the busiest physical link of each fabric, including multi-hop transit).
 """
 from __future__ import annotations
 
@@ -37,7 +52,12 @@ class RooflineReport:
     compute_s: float
     memory_s: float
     collective_s: float
-    collective_s_topo: float        # topology-aware refinement
+    collective_s_topo: float        # topology-aware refinement (serialized)
+    # link-level overlap terms (tiers are independent fabrics)
+    collective_ici_s: float = 0.0   # serialized ICI share of collective_s_topo
+    collective_dcn_s: float = 0.0   # serialized DCN share of collective_s_topo
+    ici_busy_s: float = 0.0         # busiest physical ICI link (w/ transit)
+    dcn_busy_s: float = 0.0         # busiest DCN up/downlink
     # analysis
     model_flops: float = 0.0        # 6*N*D (dense) / 6*N_active*D (MoE), global
     useful_flops_ratio: float = 0.0 # MODEL_FLOPS / (flops_per_device*chips)
@@ -49,6 +69,21 @@ class RooflineReport:
     @property
     def bound_time_s(self) -> float:
         return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def collective_overlap_s(self) -> float:
+        """Overlapped communication time: ICI and DCN are independent
+        fabrics, so their serialized per-tier sums run concurrently.
+        Always <= ``collective_s_topo`` (their sum); equal exactly when a
+        single tier carries all the traffic."""
+        return max(self.collective_ici_s, self.collective_dcn_s)
+
+    @property
+    def bound_overlap_s(self) -> float:
+        """Overlap-aware roofline bound: compute ∥ ICI ∥ DCN (and the HBM
+        stream), instead of summing serialized collective times."""
+        return max(self.compute_s, self.memory_s,
+                   self.collective_ici_s, self.collective_dcn_s)
 
     def one_liner(self) -> str:
         hints = {
@@ -86,12 +121,18 @@ def analyze(
     model_flops: float = 0.0,
     memory_stats: Optional[dict] = None,
     algorithm: str = "ring",
+    link_utilization=None,
 ) -> RooflineReport:
     """Build the roofline report for one (arch x mesh) dry-run cell.
 
     FLOPs/bytes/collectives come from the loop-aware HLO walk
     (:mod:`repro.core.hlo_cost`) — ``cost_analysis`` counts while bodies once
     and is kept only as the ``cost_analysis_*`` reference fields.
+
+    ``link_utilization`` lets a caller that already projected the program
+    onto physical links (e.g. ``CommReport.link_utilization()``) reuse it
+    for the per-tier busy diagnostics instead of re-routing the placed
+    edges here (cost is proportional to placed edges x route hops).
     """
     from . import hlo_cost as hc_mod
     hc = hc_mod.analyze_hlo(hlo_text)
@@ -106,7 +147,12 @@ def analyze(
     # over one link's bandwidth (conservative: a ring uses 2 links per axis,
     # captured in the topology-aware estimate below).
     collective_s = wire / hw.ici_bw
-    collective_s_topo = cost_models.total_time(ops, topo, algorithm)
+    ici_s, dcn_s = cost_models.total_time_split(ops, topo, algorithm)
+    collective_s_topo = ici_s + dcn_s
+    lu = link_utilization
+    if lu is None and ops:
+        from . import comm_matrix
+        lu = comm_matrix.link_utilization_for_ops(ops, topo, algorithm)
 
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     dominant = max(terms, key=terms.get)
@@ -127,6 +173,10 @@ def analyze(
         memory_s=memory_s,
         collective_s=collective_s,
         collective_s_topo=collective_s_topo,
+        collective_ici_s=ici_s,
+        collective_dcn_s=dcn_s,
+        ici_busy_s=lu.busy_seconds("ici") if lu is not None else 0.0,
+        dcn_busy_s=lu.busy_seconds("dcn") if lu is not None else 0.0,
         model_flops=model_flops,
         useful_flops_ratio=(model_flops / total_flops) if total_flops else 0.0,
         peak_fraction=(compute_s / max(terms.values())) if max(terms.values()) else 0.0,
@@ -159,6 +209,12 @@ def to_row(r: RooflineReport) -> dict:
         "memory_s": r.memory_s,
         "collective_s": r.collective_s,
         "collective_s_topo": r.collective_s_topo,
+        "collective_ici_s": r.collective_ici_s,
+        "collective_dcn_s": r.collective_dcn_s,
+        "collective_overlap_s": r.collective_overlap_s,
+        "bound_overlap_s": r.bound_overlap_s,
+        "ici_busy_s": r.ici_busy_s,
+        "dcn_busy_s": r.dcn_busy_s,
         "dominant": r.dominant,
         "model_flops": r.model_flops,
         "useful_flops_ratio": r.useful_flops_ratio,

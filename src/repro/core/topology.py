@@ -195,8 +195,10 @@ class MeshTopology:
         A size-2 torus axis wraps both directions onto the same neighbour;
         the two physical cables collapse into one directed link per
         (src, dst) pair here, matching how traffic is charged in
-        :meth:`route` (``ici_links_per_axis`` still credits the bandwidth
-        of both in :meth:`ring_bw_per_chip`).
+        :meth:`route` (which emits exactly one hop for that neighbour).
+        :meth:`link_multiplicity` records the 2 aggregated cables and
+        :meth:`link_bandwidth` credits both, so the collapse never halves
+        the pair's real capacity.
         """
         out: list[Link] = []
         seen: set[tuple] = set()
@@ -214,19 +216,51 @@ class MeshTopology:
                 out.append(Link("dcn", DCN_FABRIC, d, "dcn"))
         return out
 
+    def link_multiplicity(self, link: Link) -> int:
+        """Physical cables aggregated into this directed :class:`Link`.
+
+        1 for every link except an ICI link on a size-2 torus axis, where
+        the +1 and -1 cables reach the *same* neighbour and collapse into
+        one enumerated link carrying both cables' bandwidth.
+        """
+        if link.kind == "ici" and self.axis_size(link.axis) == 2:
+            return self.hw.ici_links_per_axis
+        return 1
+
     def link_bandwidth(self, link: Link) -> float:
-        """Bytes/s one direction of this physical link sustains."""
+        """Bytes/s one direction of this physical link sustains (both
+        aggregated cables on a collapsed size-2 axis, see
+        :meth:`link_multiplicity`)."""
         if link.kind == "dcn":
             return self.hw.dcn_bw_per_chip
-        return self.hw.ici_bw
+        return self.hw.ici_bw * self.link_multiplicity(link)
+
+    def torus_distance(self, src: int, dst: int) -> int:
+        """Minimal ICI hop count between two same-pod devices: the sum over
+        torus axes of the shorter way around each ring (wrap-aware)."""
+        src_coords = self.coords(src)
+        dst_coords = self.coords(dst)
+        hops = 0
+        for i, axis in enumerate(self.axis_names):
+            size = self.axis_sizes[i]
+            if axis in self.dcn_axes or size <= 1:
+                continue
+            delta = (dst_coords[i] - src_coords[i]) % size
+            hops += min(delta, size - delta)
+        return hops
 
     def route(self, src: int, dst: int) -> list[Link]:
         """Physical links a ``src -> dst`` transfer traverses.
 
-        Within a pod: dimension-ordered torus routing, taking the shorter
-        way around each ring.  Across pods: the sender's DCN uplink plus
-        the receiver's DCN downlink (inter-pod traffic does not detour over
-        ICI in this model).
+        Within a pod: dimension-ordered torus routing, wrap-aware -- each
+        axis takes the shorter way around its ring (ties at exactly half
+        way go +1), so ``len(route(a, b)) == torus_distance(a, b)``.  On a
+        size-2 axis both directions are the same single hop onto the
+        collapsed neighbour link -- never two distinct hops.  Across pods:
+        the sender's DCN uplink plus the receiver's DCN downlink (inter-pod
+        traffic does not detour over ICI in this model).  Every emitted
+        link is one of :meth:`links` -- :func:`repro.core.comm_matrix.
+        project_links` enforces this.
         """
         if src == dst:
             return []

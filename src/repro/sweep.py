@@ -253,8 +253,9 @@ class SweepResult:
 
     def summary_table(self, by_link: bool = False) -> str:
         """One row per cell; ``by_link=True`` adds the physical-link view
-        (busiest link and its contention-aware bottleneck ms -- the
-        ``--by-link`` CLI column)."""
+        (busiest link, its contention-aware bottleneck ms, and the
+        tier-overlapped communication time ici ∥ dcn -- the ``--by-link``
+        CLI columns)."""
         rows = []
         for rep in self.reports:
             total_wire = sum(r.get("wire_bytes", 0.0)
@@ -279,14 +280,17 @@ class SweepResult:
             if by_link:
                 lu = rep.link_utilization()
                 bn = lu.bottleneck() if lu is not None else None
-                row[8:8] = ([bn[0].name, f"{bn[1] * 1e3:.3f}"]
-                            if bn else ["-", "-"])
+                overlap = rep.collective_overlap_seconds() \
+                    if rep.topo is not None else 0.0
+                row[8:8] = ([bn[0].name, f"{bn[1] * 1e3:.3f}",
+                             f"{overlap * 1e3:.3f}"]
+                            if bn else ["-", "-", "-"])
             rows.append(row)
         header = ["config", "mesh", "algorithm", "devices",
                   "collective calls", "wire bytes", "collective ms",
                   "dominant primitive", "source"]
         if by_link:
-            header[8:8] = ["busiest link", "link ms"]
+            header[8:8] = ["busiest link", "link ms", "overlap ms"]
         return format_table(rows, header)
 
 

@@ -32,12 +32,14 @@ class TestMatrixInvariants:
     @given(n=st.sampled_from([2, 4, 8]), elems=st.integers(1, 1024))
     @settings(max_examples=40, deadline=None)
     def test_ring_traffic_only_on_ring_edges(self, n, elems):
+        """Bidirectional ring: both neighbours get half, nothing else."""
         op = mk_op("all-gather", (elems * n,), [list(range(n))])
         mat = comm_matrix.matrix_for_ops([op], n)[1:, 1:]
         for i in range(n):
             for j in range(n):
-                if j == (i + 1) % n:
+                if j in ((i + 1) % n, (i - 1) % n):
                     assert mat[i, j] > 0
+                    assert mat[i, j] == pytest.approx(mat[i, (i + 1) % n])
                 else:
                     assert mat[i, j] == 0
 

@@ -94,16 +94,17 @@ class TestRoundTrip:
             sum(r["payload_bytes"] for r in report.compiled_summary.values())
 
 
-class TestSchemaV2:
-    """Physical-link sections (schema v2) + v1 backward-compat load."""
+class TestSchemaV3:
+    """Physical-link + overlap sections (schema v3) and v1/v2
+    backward-compat loads."""
 
     pytestmark = pytest.mark.compile  # module fixture compiles
 
-    def test_v2_writes_link_sections(self, report, tmp_path):
-        p = str(tmp_path / "v2.json")
+    def test_v3_writes_link_sections(self, report, tmp_path):
+        p = str(tmp_path / "v3.json")
         report.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v2"
+        assert d["schema"] == "repro.comm_report.v3"
         assert len(d["link_matrix"]) == report.num_devices + 1
         assert d["links"], "per-link rows missing"
         for row in d["links"]:
@@ -112,21 +113,41 @@ class TestSchemaV2:
             assert row["kind"] in ("ici", "dcn")
         assert "ici" in d["link_summary"]
 
-    def test_v1_file_loads_and_rederives_links(self, report, tmp_path):
-        """A file written by the previous schema (no link sections, v1
-        schema string) loads fine; link views recompute from ops+topo."""
-        p = str(tmp_path / "v1.json")
+    def test_v3_writes_overlap_sections(self, report, tmp_path):
+        p = str(tmp_path / "v3.json")
         report.save(p)
         d = json.loads(open(p).read())
-        for key in ("links", "link_matrix", "link_summary"):
+        assert "ici" in d["link_tiers"]
+        assert {"bytes", "busy_seconds"} <= set(d["link_tiers"]["ici"])
+        ov = d["overlap"]
+        assert {"collective_ici_s", "collective_dcn_s",
+                "collective_overlap_s", "collective_serial_s"} <= set(ov)
+        assert ov["collective_overlap_s"] <= \
+            ov["collective_serial_s"] + 1e-15
+        assert ov["collective_serial_s"] == pytest.approx(
+            ov["collective_ici_s"] + ov["collective_dcn_s"])
+
+    @pytest.mark.parametrize("old_schema", ["repro.comm_report.v1",
+                                            "repro.comm_report.v2"])
+    def test_old_file_loads_and_rederives_links(self, report, tmp_path,
+                                                old_schema):
+        """Files written by previous schemas (no link/overlap sections)
+        load fine; the derived views recompute from ops+topo."""
+        p = str(tmp_path / "old.json")
+        report.save(p)
+        d = json.loads(open(p).read())
+        for key in ("links", "link_matrix", "link_summary", "link_tiers",
+                    "overlap"):
             d.pop(key, None)
-        d["schema"] = "repro.comm_report.v1"
+        d["schema"] = old_schema
         with open(p, "w") as f:
             json.dump(d, f)
         back = CommReport.load(p)
         lu = back.link_utilization()
         assert lu is not None and lu.total_bytes() > 0
         np.testing.assert_allclose(back.link_matrix(), report.link_matrix())
+        assert back.collective_seconds_split() == \
+            report.collective_seconds_split()
 
     def test_unknown_schema_rejected(self, report, tmp_path):
         p = str(tmp_path / "bad.json")
@@ -172,10 +193,12 @@ class TestGolden:
         export.export_matrix_csv(hand_report(), p)
         lines = open(p).read().splitlines()
         assert lines[0] == ",host,gpu0,gpu1,gpu2,gpu3"
-        # ring edge 0->1 carries the per-rank wire bytes (col order:
-        # name, host, gpu0..gpu3 -> gpu1 is index 3)
+        # bidirectional ring: edge 0->1 carries half the 1536 B per-rank
+        # wire bytes, the other half flows 0->3 (col order: name, host,
+        # gpu0..gpu3 -> gpu1 is index 3, gpu3 is index 5)
         assert lines[1] == "host,0,0,0,0,0"
-        assert lines[2].split(",")[3] == "1536"
+        assert lines[2].split(",")[3] == "768"
+        assert lines[2].split(",")[5] == "768"
 
     def test_sweep_document_loads_as_list(self, tmp_path):
         p = str(tmp_path / "sweep.json")

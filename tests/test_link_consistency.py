@@ -6,8 +6,14 @@ Property-style (grid-parametrized, no compilation, no optional deps):
   equal ``cost_models.device_send_bytes`` times the op weight -- and for the
   symmetric algorithms that equals ``wire_bytes_per_rank`` per participating
   device;
-* hierarchical matrices place cross-pod bytes ONLY on DCN edges (and
-  intra-pod bytes only inside pods);
+* hierarchical matrices (all four decomposable kinds, on 1-, 2- and 4-pod
+  meshes) place cross-pod bytes ONLY on DCN edges, and the link-matrix DCN
+  row/col sums equal the cross-pod bytes ``collective_time`` bills;
+* routing is wrap-aware (``len(route) == torus_distance``, size-2 axes
+  collapse onto one link with both cables' bandwidth) and ``project_links``
+  only ever charges enumerated links;
+* the overlap model: ``max(ici_s, dcn_s) <= collective_time`` with equality
+  exactly when a single tier carries the traffic;
 * link projection conserves bytes (single-hop edges), charges transit hops,
   and the host row never leaks onto the fabric.
 """
@@ -15,11 +21,13 @@ import numpy as np
 import pytest
 
 from repro.core import comm_matrix, cost_models
+from repro.core.comm_matrix import HierarchicalFallbackWarning
 from repro.core.events import CollectiveOp, HostTransfer, Shape
 from repro.core.topology import DCN_FABRIC, MeshTopology
 
 KINDS = ("all-reduce", "all-gather", "reduce-scatter",
          "collective-broadcast", "all-to-all")
+HIER_KINDS = cost_models.HIERARCHICAL_KINDS
 ALGORITHMS = ("ring", "tree", "hierarchical")
 
 ONE_POD = MeshTopology(axis_names=("data",), axis_sizes=(8,))
@@ -111,55 +119,135 @@ class TestRowSumConsistency:
 
 
 class TestHierarchicalPlacement:
-    def test_cross_pod_bytes_only_on_dcn_edges(self):
+    """Per-kind hierarchical phase placement, on 1-, 2- and 4-pod meshes."""
+
+    @pytest.mark.parametrize("kind", HIER_KINDS)
+    @pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+    def test_cross_pod_bytes_only_on_dcn_edges(self, kind, topo_name):
         """Acceptance criterion: every cross-pod entry of a hierarchical
         matrix routes exclusively over DCN links, every intra-pod entry
-        over ICI."""
-        op = mk_op("all-reduce")
+        over ICI -- for every decomposable kind."""
+        topo = TOPOLOGIES[topo_name]
+        op = mk_op(kind)
         mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
-                                         topo=TWO_POD)[1:, 1:]
+                                         topo=topo)[1:, 1:]
         for i in range(8):
             for j in range(8):
                 if mat[i, j] <= 0:
                     continue
-                links = TWO_POD.route(i, j)
-                cross = TWO_POD.pod_index(i) != TWO_POD.pod_index(j)
+                links = topo.route(i, j)
+                cross = topo.pod_index(i) != topo.pod_index(j)
                 kinds = {l.kind for l in links}
                 assert kinds == ({"dcn"} if cross else {"ici"}), (i, j)
 
-    def test_cross_pod_share_is_shard_sized(self):
-        """Only the reduce-scattered S/m shard exchange crosses DCN."""
-        op = mk_op("all-reduce")
+    @pytest.mark.parametrize("kind", HIER_KINDS)
+    @pytest.mark.parametrize("topo_name", ["two_pod", "four_pod"])
+    def test_cross_pod_share_is_shard_sized(self, kind, topo_name):
+        """Only the shard exchange crosses DCN: 2(p-1)/n * S per rank for
+        all-reduce, (p-1)/n * S for the one-phase kinds -- strictly less
+        than the flat ring pushes across."""
+        topo = TOPOLOGIES[topo_name]
+        op = mk_op(kind)
         s = op.payload_bytes
+        p = topo.num_pods
+        phases = 2.0 if kind == "all-reduce" else 1.0
         mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
-                                         topo=TWO_POD)[1:, 1:]
+                                         topo=topo)[1:, 1:]
         cross = sum(mat[i, j] for i in range(8) for j in range(8)
-                    if TWO_POD.pod_index(i) != TWO_POD.pod_index(j))
-        p, m = 2, 4
-        expected = 8 * 2.0 * (p - 1) * (s / m) / p
+                    if topo.pod_index(i) != topo.pod_index(j))
+        expected = 8 * phases * (p - 1) * s / 8
         assert cross == pytest.approx(expected)
         # and it is strictly less than what a ring would push across
         ring = comm_matrix.matrix_for_ops([op], 8, "ring",
-                                          topo=TWO_POD)[1:, 1:]
+                                          topo=topo)[1:, 1:]
         ring_cross = sum(ring[i, j] for i in range(8) for j in range(8)
-                         if TWO_POD.pod_index(i) != TWO_POD.pod_index(j))
+                         if topo.pod_index(i) != topo.pod_index(j))
         assert cross < ring_cross
 
-    def test_uneven_split_falls_back_to_ring(self):
-        """A group that does not split evenly across pods degenerates to
-        ring placement, exactly like wire_bytes_per_rank's _hier_split."""
+    @pytest.mark.parametrize("kind", HIER_KINDS)
+    @pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+    def test_dcn_link_rows_match_billed_cross_bytes(self, kind, topo_name):
+        """THE acceptance criterion: the link matrix's DCN row/col sums
+        (each device's uplink/downlink bytes) equal the cross-pod bytes
+        ``collective_time`` bills -- its DCN-tier seconds times the
+        per-chip DCN share.  On a single pod both sides are zero."""
+        topo = TOPOLOGIES[topo_name]
+        op = mk_op(kind, weight=3.0)
+        lu = comm_matrix.link_utilization_for_ops([op], topo, "hierarchical")
+        lm = lu.matrix()
+        ici_s, dcn_s = cost_models.collective_time_split(
+            op, topo, "hierarchical")
+        cross_per_rank = dcn_s * topo.ring_bw_per_chip(True) * op.weight
+        for d in range(topo.num_devices):
+            assert lm[d + 1, 0] == pytest.approx(cross_per_rank), \
+                f"uplink row sum of device {d}"
+            assert lm[0, d + 1] == pytest.approx(cross_per_rank), \
+                f"downlink col sum of device {d}"
+        if topo.num_pods == 1:
+            assert dcn_s == 0.0 and lm[:, 0].sum() == 0.0
+
+    @pytest.mark.parametrize("kind", HIER_KINDS)
+    def test_uneven_split_warns_and_falls_back_to_ring(self, kind):
+        """A cross-pod group that does not split evenly across pods warns
+        (never silently degenerates) and places flat ring edges -- and
+        ``collective_time`` refuses to bill the decomposition in exactly
+        the same case (one shared predicate)."""
         group = [0, 1, 2, 4, 5]        # 3 in pod 0, 2 in pod 1
-        op = mk_op("all-reduce", group=group)
-        hier = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
-                                          topo=TWO_POD)
+        op = mk_op(kind, group=group)
+        with pytest.warns(HierarchicalFallbackWarning):
+            hier = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                              topo=TWO_POD)
         ring = comm_matrix.matrix_for_ops([op], 8, "ring", topo=TWO_POD)
         np.testing.assert_allclose(hier, ring)
+        # billing agrees with the placement: flat ring payload at the
+        # per-chip DCN share, no phantom ICI/DCN decomposition
+        ici_s, dcn_s = cost_models.collective_time_split(
+            op, TWO_POD, "hierarchical")
+        per_rank = cost_models.wire_bytes_per_rank(
+            kind, op.payload_bytes, len(group), "ring")
+        assert ici_s == 0.0
+        assert dcn_s == pytest.approx(
+            per_rank / TWO_POD.ring_bw_per_chip(True))
+
+    def test_shared_predicate_has_no_divergence(self):
+        """matrix totals, summaries and billing all degenerate together on
+        an uneven split: summarize()'s wire bytes equal the matrix total."""
+        from repro.core import hlo_parser
+        group = [0, 1, 2, 4, 5]
+        op = mk_op("all-gather", group=group)
+        with pytest.warns(HierarchicalFallbackWarning):
+            mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                             topo=TWO_POD)
+        summary = hlo_parser.summarize([op], "hierarchical", topo=TWO_POD)
+        assert mat.sum() == pytest.approx(
+            summary["all-gather"]["wire_bytes"])
 
     def test_without_topo_hierarchical_degenerates_to_ring(self):
         op = mk_op("all-reduce")
         hier = comm_matrix.matrix_for_ops([op], 8, "hierarchical")
         ring = comm_matrix.matrix_for_ops([op], 8, "ring")
         np.testing.assert_allclose(hier, ring)
+
+    def test_heterogeneous_groups_decided_per_group(self):
+        """An op whose replica groups straddle pods differently is decided
+        group by group: [0,1] stays intra-pod (pure ICI time) while [3,4]
+        crosses pods (DCN billed AND DCN edges placed) -- billing,
+        summaries and the matrix all see the same per-group split."""
+        from repro.core import hlo_parser
+        op = mk_op("all-reduce", group=[0, 1])
+        op.replica_groups = [[0, 1], [3, 4]]   # intra-pod + cross-pod
+        ici_s, dcn_s = cost_models.collective_time_split(
+            op, TWO_POD, "hierarchical")
+        assert ici_s > 0, "intra-pod group must occupy ICI"
+        assert dcn_s > 0, "cross-pod group must be billed on DCN"
+        mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                         topo=TWO_POD)
+        cross = sum(mat[i + 1, j + 1] for i in range(8) for j in range(8)
+                    if TWO_POD.pod_index(i) != TWO_POD.pod_index(j))
+        assert cross > 0, "the matrix must place the DCN bytes billed above"
+        summary = hlo_parser.summarize([op], "hierarchical", topo=TWO_POD)
+        assert mat.sum() == pytest.approx(
+            summary["all-reduce"]["wire_bytes"])
 
 
 class TestTreePlacement:
@@ -278,6 +366,173 @@ class TestLinkProjection:
         lu1 = comm_matrix.link_utilization_for_ops([op1], ONE_POD, "ring")
         lu16 = comm_matrix.link_utilization_for_ops([op16], ONE_POD, "ring")
         assert lu16.total_bytes() == pytest.approx(16 * lu1.total_bytes())
+
+
+class TestWrapAwareRouting:
+    """route() takes the shorter torus direction per axis; size-2 axes
+    collapse both directions onto ONE link with both cables' bandwidth."""
+
+    MESH_4X4 = MeshTopology(axis_names=("data", "model"), axis_sizes=(4, 4))
+
+    @pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+    def test_route_length_is_torus_distance(self, topo_name):
+        topo = TOPOLOGIES[topo_name]
+        for i in range(topo.num_devices):
+            for j in range(topo.num_devices):
+                if topo.pod_index(i) != topo.pod_index(j):
+                    continue
+                assert len(topo.route(i, j)) == topo.torus_distance(i, j), \
+                    (i, j)
+
+    def test_route_never_takes_the_long_way(self):
+        topo = self.MESH_4X4
+        for i in range(16):
+            for j in range(16):
+                hops = topo.route(i, j)
+                assert len(hops) == topo.torus_distance(i, j) <= 4
+                for a, b in zip(hops, hops[1:]):
+                    assert a.dst == b.src
+
+    def test_size2_axis_is_one_hop_one_link(self):
+        """Satellite fix: both directions around a size-2 axis are the SAME
+        single collapsed link -- never two distinct hops."""
+        topo = TWO_POD                       # data and model axes are size 2
+        d0, d1 = 0, 1                        # model-axis neighbours in pod 0
+        # +1 and -1 around a size-2 ring reach the same neighbour ...
+        assert topo.neighbor(d0, "model", +1) == \
+            topo.neighbor(d0, "model", -1) == d1
+        # ... and the enumeration holds exactly ONE link for the pair
+        pair_links = [l for l in topo.links() if l.kind == "ici"
+                      and l.src == d0 and l.dst == d1]
+        assert len(pair_links) == 1
+        fwd = topo.route(d0, d1)
+        back = topo.route(d1, d0)
+        assert len(fwd) == 1 and len(back) == 1
+        assert fwd[0] == pair_links[0]
+        # the collapsed link aggregates both physical cables
+        assert topo.link_multiplicity(fwd[0]) == 2
+        assert topo.link_bandwidth(fwd[0]) == \
+            topo.hw.ici_bw * topo.hw.ici_links_per_axis
+        # a size>2 axis keeps per-cable bandwidth
+        link8 = ONE_POD.route(0, 1)[0]
+        assert ONE_POD.link_multiplicity(link8) == 1
+        assert ONE_POD.link_bandwidth(link8) == ONE_POD.hw.ici_bw
+
+    @pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+    def test_route_emits_only_enumerated_links(self, topo_name):
+        """project_links' enforcement invariant, checked directly."""
+        topo = TOPOLOGIES[topo_name]
+        enumerated = set(topo.links())
+        for i in range(topo.num_devices):
+            for j in range(topo.num_devices):
+                for link in topo.route(i, j):
+                    assert link in enumerated, link.name
+
+    def test_project_links_rejects_foreign_links(self):
+        """A route outside the enumeration must raise, not silently invent
+        fabric (the satellite's assert-and-enforce)."""
+        class BadTopo(MeshTopology):
+            def route(self, src, dst):
+                from repro.core.topology import Link
+                return [Link("ici", src, dst, "ghost-axis")]
+
+        bad = BadTopo(axis_names=("data",), axis_sizes=(8,))
+        mat = np.zeros((9, 9))
+        mat[1, 5] = 64.0
+        with pytest.raises(ValueError, match="not an enumerated"):
+            comm_matrix.project_links(mat, bad)
+
+    def test_bidirectional_ring_matches_cost_model(self):
+        """The over-count fix: a ring over consecutive torus neighbours now
+        streams both directions, so the bottleneck link carries HALF the
+        per-rank bytes and contention_time equals collective_time (before:
+        2x on size>2 axes)."""
+        op = mk_op("all-reduce")
+        t_flat = cost_models.collective_time(op, ONE_POD, "ring")
+        t_link = cost_models.contention_time([op], ONE_POD, "ring")
+        assert t_link == pytest.approx(t_flat)
+
+    def test_size2_ring_matches_cost_model(self):
+        """Same consistency on a size-2 axis: the collapsed link carries
+        the full per-rank bytes at both cables' bandwidth."""
+        pair = MeshTopology(axis_names=("data",), axis_sizes=(2,))
+        op = mk_op("all-reduce", group=[0, 1])
+        t_flat = cost_models.collective_time(op, pair, "ring")
+        t_link = cost_models.contention_time([op], pair, "ring")
+        assert t_link == pytest.approx(t_flat)
+
+
+class TestOverlapModel:
+    """Link-level overlap: compute ∥ ICI ∥ DCN instead of serialized sums."""
+
+    @pytest.mark.parametrize("kind", HIER_KINDS)
+    @pytest.mark.parametrize("algorithm", ALGORITHMS)
+    @pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+    def test_overlap_bound_le_serialized(self, kind, algorithm, topo_name):
+        """Acceptance criterion: the overlapped communication bound never
+        exceeds the serialized sum of per-collective times, with equality
+        exactly when a single tier carries all the traffic."""
+        topo = TOPOLOGIES[topo_name]
+        op = mk_op(kind, weight=2.0)
+        ici_s, dcn_s = cost_models.total_time_split([op], topo, algorithm)
+        serial = cost_models.total_time([op], topo, algorithm)
+        assert ici_s + dcn_s == pytest.approx(serial)
+        overlap = max(ici_s, dcn_s)
+        assert overlap <= serial + 1e-15
+        if ici_s > 0 and dcn_s > 0:
+            assert overlap < serial            # both tiers busy: strict
+        else:
+            assert overlap == pytest.approx(serial)
+
+    def test_hierarchical_multi_pod_overlaps_tiers(self):
+        """On a multi-pod mesh the hierarchical split is the only algorithm
+        with BOTH tiers busy -- the overlap bound is strictly better."""
+        op = mk_op("all-reduce")
+        ici_s, dcn_s = cost_models.total_time_split([op], TWO_POD,
+                                                    "hierarchical")
+        assert ici_s > 0 and dcn_s > 0
+        assert max(ici_s, dcn_s) < ici_s + dcn_s
+        # ring/tree across pods: everything is billed on the DCN tier
+        for alg in ("ring", "tree"):
+            i_s, d_s = cost_models.total_time_split([op], TWO_POD, alg)
+            assert i_s == 0.0 and d_s > 0
+
+    def test_busy_seconds_per_tier(self):
+        """LinkUtilization.busy_seconds splits the fabric by tier and its
+        overall bottleneck is one of the tiers."""
+        op = mk_op("all-reduce")
+        lu = comm_matrix.link_utilization_for_ops([op], TWO_POD,
+                                                  "hierarchical")
+        ici_busy = lu.busy_seconds("ici")
+        dcn_busy = lu.busy_seconds("dcn")
+        assert ici_busy > 0 and dcn_busy > 0
+        assert lu.busy_seconds() == pytest.approx(max(ici_busy, dcn_busy))
+        assert lu.bottleneck_seconds() == pytest.approx(lu.busy_seconds())
+        tiers = lu.tier_summary()
+        assert tiers["ici"]["busy_seconds"] == pytest.approx(ici_busy)
+        assert tiers["dcn"]["bytes"] == pytest.approx(lu.total_bytes("dcn"))
+
+    def test_report_split_and_overlap_seconds(self):
+        """CommReport threads the split through: ici+dcn == serialized,
+        overlap == max -- no topology means zeros."""
+        from repro.core.monitor import CommReport
+        from repro.core import hlo_parser
+        op = mk_op("all-reduce")
+        rep = CommReport(
+            name="hand", num_devices=8, traced=[], compiled_ops=[op],
+            traced_summary={},
+            compiled_summary=hlo_parser.summarize([op], "hierarchical",
+                                                  topo=TWO_POD),
+            matrix=comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                              topo=TWO_POD),
+            per_primitive={}, cost={}, memory_stats=None,
+            trace_seconds=0.0, compile_seconds=0.0, topo=TWO_POD,
+            algorithm="hierarchical")
+        ici_s, dcn_s = rep.collective_seconds_split()
+        assert ici_s + dcn_s == pytest.approx(rep.collective_seconds())
+        assert rep.collective_overlap_seconds() == \
+            pytest.approx(max(ici_s, dcn_s))
+        assert rep.collective_overlap_seconds() <= rep.collective_seconds()
 
 
 class TestCollectiveTimeFaithful:

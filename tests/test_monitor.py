@@ -46,6 +46,32 @@ class TestMonitor:
         assert rl.compute_s > 0 and rl.memory_s > 0
         assert rl.dominant in ("compute", "memory", "collective")
 
+    def test_roofline_overlap_bound(self, report):
+        """Link-overlap model: per-tier sums partition the serialized
+        collective time; the overlap bound never exceeds the serialized
+        roofline and the per-link busy diagnostics are populated."""
+        rl = roofline_of(report, arch="toy", mesh_name="4x2")
+        assert rl.collective_ici_s + rl.collective_dcn_s == \
+            pytest.approx(rl.collective_s_topo)
+        assert rl.collective_overlap_s <= rl.collective_s_topo + 1e-15
+        assert rl.bound_overlap_s <= max(rl.bound_time_s,
+                                         rl.collective_s_topo) + 1e-15
+        # single-pod mesh: everything rides ICI, overlap == serialized
+        assert rl.collective_dcn_s == 0.0
+        assert rl.collective_overlap_s == pytest.approx(rl.collective_s_topo)
+        assert rl.ici_busy_s > 0 and rl.dcn_busy_s == 0.0
+        from repro.core import roofline
+        row = roofline.to_row(rl)
+        assert {"collective_ici_s", "collective_dcn_s",
+                "collective_overlap_s", "bound_overlap_s"} <= set(row)
+
+    def test_report_tier_split(self, report):
+        ici_s, dcn_s = report.collective_seconds_split()
+        assert ici_s + dcn_s == pytest.approx(report.collective_seconds())
+        assert report.collective_overlap_seconds() == \
+            pytest.approx(max(ici_s, dcn_s))
+        assert "tier overlap" in report.link_table()
+
     def test_save_json(self, report, tmp_path):
         p = tmp_path / "report.json"
         report.save(str(p))
