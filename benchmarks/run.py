@@ -15,8 +15,8 @@ import traceback
 
 from benchmarks import common
 
-BENCHES = ("table1", "table2", "table3", "fig3", "links", "overhead",
-           "roofline")
+BENCHES = ("table1", "table2", "table3", "fig3", "links", "matrix",
+           "overhead", "roofline")
 
 
 def run_one(name: str) -> bool:
@@ -27,6 +27,7 @@ def run_one(name: str) -> bool:
         "table3": "benchmarks.table3_resnet_bucketing",
         "fig3": "benchmarks.fig3_per_primitive",
         "links": "benchmarks.link_utilization",
+        "matrix": "benchmarks.matrix_build",
         "overhead": "benchmarks.overhead",
         "roofline": "benchmarks.roofline_table",
     }[name]

@@ -1,9 +1,16 @@
 """Paper §4.1: machine-translation model (GNMT-style), data-parallel +
-monitored, with per-primitive communication matrices (paper Fig. 3).
+monitored **per phase**, with per-primitive communication matrices (paper
+Fig. 3) and the Table-2 breakdown split fwd / bwd / optim.
 
 Trains the seq2seq model on a synthetic copy-reverse task (AdamW + bucketed
-DDP AllReduce inside shard_map) until it learns, then prints Table-2-style
-stats and one matrix per primitive.
+DDP AllReduce inside shard_map) until it learns, then monitors the step as a
+three-phase :class:`~repro.core.session.MonitorSession`:
+
+* ``fwd``   -- loss forward pass (+ the ``pmean`` loss all-reduce),
+* ``bwd``   -- backward pass with the paper's bucketed gradient AllReduce,
+* ``optim`` -- the AdamW update (local math: zero collectives -- visible as
+  an empty row in the per-phase table, the point the paper's Table 2 cannot
+  make because NCCL interception sees the whole step as one blob).
 
 Run:  PYTHONPATH=src python examples/translation.py [--steps 150]
 """
@@ -19,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import monitor_fn
+from repro.core import MonitorSession
 from repro.data import SyntheticSeq2Seq
 from repro.models.gnmt import GNMT
 from repro.optim import OptConfig, apply_updates, init_opt_state
@@ -63,18 +70,53 @@ def main():
             print(f"step {i:4d} loss {float(loss):.4f}", flush=True)
     assert float(loss) < l0 * 0.7, "translation model failed to learn"
 
-    # one monitored step -> Table-2 stats + Fig-3 per-primitive matrices
-    rep = monitor_fn(
-        shard_map(step, mesh=mesh,
-                      in_specs=(P(), P(), P(), P("data")),
-                      out_specs=(P(), P(), P()), check_vma=False),
-        params, opt, jnp.asarray(0), data.batch_at(0),
-        mesh=mesh, name="GNMT-MT")
+    # ------------------------------------------------------------------
+    # one monitored step, split into its phases: fwd / bwd / optim
+    # ------------------------------------------------------------------
+    def fwd(params, batch):
+        loss, _ = model.loss_fn(params, batch)
+        return jax.lax.pmean(loss, "data")
+
+    def bwd(params, batch):
+        (_, _), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        grads, _ = ddp.allreduce_bucketed(grads, "data", bucket_mb=1.0)
+        return grads
+
+    def optim(params, grads, opt, i):
+        params, opt, _ = apply_updates(params, grads, opt, ocfg, i)
+        return params, opt
+
+    def dp(fn, in_specs, out_specs):
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    batch = data.batch_at(0)
+    grads_like = params                    # same pytree shapes as the grads
+    session = MonitorSession(mesh=mesh, name="GNMT-MT")
+    with session:
+        with session.phase("fwd"):
+            session.capture(dp(fwd, (P(), P("data")), P()), params, batch)
+        with session.phase("bwd"):
+            session.capture(dp(bwd, (P(), P("data")), P()), params, batch)
+        with session.phase("optim"):
+            session.capture(
+                dp(optim, (P(), P(), P(), P()), (P(), P())),
+                params, grads_like, opt, jnp.asarray(0))
+
+    rep = session.report()
     print()
-    print(rep.usage_table())
-    for kind in sorted(rep.per_primitive):
+    print(rep.phase_table())               # Table 2, per phase
+    print()
+    print(rep.phase_diff("fwd", "bwd"))    # where the bytes come from
+    for phase in rep.phase_names():
+        view = rep.view(phase=phase)
+        if view.total_wire_bytes() == 0:
+            print(f"\nphase {phase}: no collective communication "
+                  "(local math only)")
+            continue
         print()
-        print(rep.heatmap(kind))
+        print(rep.heatmap(phase=phase))
     rep.save("artifacts/translation_report.json")
     print(f"\ntranslation example OK (loss {l0:.3f} -> {float(loss):.3f})")
 

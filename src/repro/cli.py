@@ -103,7 +103,8 @@ def _cmd_sweep(args) -> int:
             print(f"  {f}", file=sys.stderr)
         return 1
 
-    table = result.summary_table(by_link=args.by_link)
+    table = result.summary_table(by_link=args.by_link,
+                                 by_phase=args.by_phase)
     print()
     print(f"== sweep summary: {len(result.reports)} cells "
           f"({result.compiles} compiled, {result.cache_hits} cache hits) ==")
@@ -241,6 +242,9 @@ def build_parser() -> argparse.ArgumentParser:
                         "ICI/DCN link, the tier-overlapped communication "
                         "time, and its contention-aware bottleneck "
                         "ms) to the summary table")
+    p.add_argument("--by-phase", action="store_true", dest="by_phase",
+                   help="expand each cell into one row per session phase "
+                        "(statistics from that phase's CommView)")
     p.add_argument("--formats", default="json,csv,html,perfetto")
     p.add_argument("--out", default=os.path.join("artifacts", "sweep"))
     p.add_argument("--devices", type=int, default=8)
@@ -265,8 +269,8 @@ def build_parser() -> argparse.ArgumentParser:
 
     p = sub.add_parser("bench", help="paper-table benchmark suite")
     p.add_argument("names", nargs="*",
-                   help="table1 table2 table3 fig3 links overhead roofline "
-                        "(default: all)")
+                   help="table1 table2 table3 fig3 links matrix overhead "
+                        "roofline (default: all)")
     p.add_argument("--devices", type=int, default=8)
     p.set_defaults(func=_cmd_bench)
 

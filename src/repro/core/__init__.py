@@ -1,30 +1,39 @@
 # CommScribe-JAX core: the paper's contribution (collective-communication
 # monitoring) as a composable library. See DESIGN.md §3.
-from .events import CollectiveOp, HostTransfer, Shape, TraceEvent, jax_shape
-from .interceptor import CollectiveInterceptor, intercept
+from .events import (CollectiveOp, HostTransfer, PhaseRecord, Shape,
+                     TraceEvent, jax_shape)
+from .interceptor import CollectiveInterceptor, intercept, traced_summary
 from .hlo_parser import parse_hlo_collectives, summarize, total_wire_bytes
 from .comm_matrix import (LinkUtilization, add_host_transfers,
                           link_utilization_for_ops, matrix_for_ops,
+                          matrix_for_ops_reference, op_edge_arrays, op_edges,
                           per_primitive_matrices, project_links)
-from .cost_models import (collective_time, contention_time, device_send_bytes,
-                          table1_allreduce_bytes, wire_bytes_per_rank)
+from .cost_models import (ALGORITHMS, collective_time, contention_time,
+                          device_send_bytes, table1_allreduce_bytes,
+                          validate_algorithm, wire_bytes_per_rank)
 from .topology import HardwareSpec, Link, MeshTopology, V5E
+from .views import CommView
 from .monitor import CommReport, monitor_fn, roofline_of
+from .session import Capture, MonitorSession
 from .roofline import RooflineReport, analyze as roofline_analyze
 from .report_cache import ReportCache, cache_key
 from . import reporter
 from . import export
 
 __all__ = [
-    "CollectiveOp", "HostTransfer", "Shape", "TraceEvent", "jax_shape",
-    "CollectiveInterceptor", "intercept",
+    "CollectiveOp", "HostTransfer", "PhaseRecord", "Shape", "TraceEvent",
+    "jax_shape",
+    "CollectiveInterceptor", "intercept", "traced_summary",
     "parse_hlo_collectives", "summarize", "total_wire_bytes",
-    "matrix_for_ops", "per_primitive_matrices", "add_host_transfers",
+    "matrix_for_ops", "matrix_for_ops_reference", "op_edges",
+    "op_edge_arrays", "per_primitive_matrices", "add_host_transfers",
     "LinkUtilization", "project_links", "link_utilization_for_ops",
+    "ALGORITHMS", "validate_algorithm",
     "wire_bytes_per_rank", "collective_time", "table1_allreduce_bytes",
     "contention_time", "device_send_bytes",
     "HardwareSpec", "Link", "MeshTopology", "V5E",
-    "CommReport", "monitor_fn", "roofline_of",
+    "CommView", "CommReport", "monitor_fn", "roofline_of",
+    "Capture", "MonitorSession",
     "RooflineReport", "roofline_analyze",
     "ReportCache", "cache_key",
     "reporter", "export",

@@ -29,6 +29,16 @@ matrix can be **projected onto physical links** (:func:`project_links`):
 each logical edge is routed over the ICI torus / DCN uplinks of a
 :class:`~repro.core.topology.MeshTopology`, yielding per-link byte counts,
 the bottleneck link, and a contention-aware time bound.
+
+**Vectorized accumulation.**  :func:`matrix_for_ops` generates each op's
+edges as numpy COO arrays (:func:`op_edge_arrays`) and batches them into
+edge buffers flushed with a single ``np.add.at`` per flush, so a session
+with thousands of weighted ops on a large mesh builds its matrix without a
+per-edge Python loop.  The scalar placement (:func:`op_edges`, feeding
+:func:`matrix_for_ops_reference`) is kept as the readable oracle: a
+property test pins the two paths equal on randomized op streams, and
+``benchmarks/matrix_build.py`` tracks the speedup in
+``artifacts/BENCH_matrix.json``.
 """
 from __future__ import annotations
 
@@ -140,8 +150,12 @@ def _hierarchical_placement(group: list[int], kind: str, s: float,
 def op_edges(op: CollectiveOp, algorithm: str = "ring",
              topo: Optional[MeshTopology] = None) -> list[tuple[int, int, float]]:
     """``(src, dst, bytes)`` edges for ONE execution of ``op`` (weight not
-    applied).  The single source of truth for edge placement: matrices,
-    link projections and the consistency tests all go through here.
+    applied) -- the scalar (per-edge tuple) placement.
+
+    Production matrix building goes through the vectorized
+    :func:`op_edge_arrays`; this readable twin is the oracle the property
+    test pins it against, and the per-edge baseline
+    :func:`matrix_for_ops_reference` accumulates from.
 
     A hierarchical request for a cross-pod group the shared predicate
     cannot decompose emits a :class:`HierarchicalFallbackWarning` and
@@ -150,7 +164,7 @@ def op_edges(op: CollectiveOp, algorithm: str = "ring",
     """
     edges: list[tuple[int, int, float]] = []
     if op.kind == "collective-permute":
-        nbytes = float(op.result_bytes)
+        nbytes = float(op.result_bytes) * op.num_groups
         return [(src, dst, nbytes) for src, dst in op.source_target_pairs]
     for group in op.replica_groups or [[]]:
         n = len(group)
@@ -186,6 +200,172 @@ def op_edges(op: CollectiveOp, algorithm: str = "ring",
     return edges
 
 
+# ---------------------------------------------------------------------------
+# Vectorized edge generation: numpy COO arrays instead of per-edge tuples.
+# ---------------------------------------------------------------------------
+_EMPTY_EDGES = (np.empty(0, dtype=np.intp), np.empty(0, dtype=np.intp),
+                np.empty(0, dtype=np.float64))
+
+
+def _concat_edges(parts):
+    if not parts:
+        return _EMPTY_EDGES
+    if len(parts) == 1:
+        return parts[0]
+    return (np.concatenate([p[0] for p in parts]),
+            np.concatenate([p[1] for p in parts]),
+            np.concatenate([p[2] for p in parts]))
+
+
+# ring-size -> column indices of [next neighbour | previous neighbour],
+# cached because every same-size ring shares them
+_RING_IDX_CACHE: dict[int, np.ndarray] = {}
+
+
+def _ring_neighbor_idx(n: int) -> np.ndarray:
+    idx = _RING_IDX_CACHE.get(n)
+    if idx is None:
+        pos = np.arange(n)
+        idx = _RING_IDX_CACHE.setdefault(
+            n, np.concatenate([(pos + 1) % n, (pos - 1) % n]))
+    return idx
+
+
+def _ring_edges_arr(rings, per_rank: float):
+    """Bidirectional ring edges for a batch of rings (one per row).
+
+    The array form of :func:`_ring_edges`: each member streams half its
+    per-rank bytes to each neighbour (cached neighbour-index gather along
+    the row axis); on a 2-member ring both halves land on the same peer
+    and accumulate.
+    """
+    r = np.asarray(rings, dtype=np.intp)
+    if r.ndim == 1:
+        r = r[None, :]
+    src = np.tile(r, (1, 2)).ravel()
+    dst = r[:, _ring_neighbor_idx(r.shape[1])].ravel()
+    return src, dst, np.full(src.size, 0.5 * per_rank)
+
+
+def _tree_edges_arr(groups, kind: str, s: float):
+    """Array form of :func:`_tree_placement` (same heap-layout tree) for a
+    batch of same-size groups (one per row) -- the per-edge byte profile
+    depends only on the tree *position*, so it is computed once per column
+    and tiled over the batch."""
+    G = np.asarray(groups, dtype=np.intp)
+    if G.ndim == 1:
+        G = G[None, :]
+    k, n = G.shape
+    sizes = np.asarray(cost_models.tree_subtree_sizes(n), dtype=np.float64)
+    pos = np.arange(1, n)
+    parent = G[:, (pos - 1) // 2]                      # (k, n-1)
+    child = G[:, 1:]
+    if kind == "all-reduce":
+        up = np.full(n - 1, float(s))
+        down = up
+    elif kind == "collective-broadcast":
+        up = np.zeros(n - 1)
+        down = np.full(n - 1, float(s))
+    elif kind == "all-gather":
+        up = sizes[1:] * s / n
+        down = (n - sizes[1:]) * s / n
+    else:  # reduce-scatter
+        up = (n - sizes[1:]) * s / n
+        down = sizes[1:] * s / n
+    mu, md = up > 0, down > 0
+    return (np.concatenate([child[:, mu].ravel(), parent[:, md].ravel()]),
+            np.concatenate([parent[:, mu].ravel(), child[:, md].ravel()]),
+            np.concatenate([np.tile(up[mu], k), np.tile(down[md], k)]))
+
+
+def _hier_edges_arr(group: list[int], kind: str, s: float,
+                    topo: MeshTopology):
+    """Array form of :func:`_hierarchical_placement` (same decomposition
+    predicate; None when it refuses and the caller must fall back)."""
+    dec = cost_models.hierarchical_decomposition(kind, group, topo)
+    if dec is None:
+        return None
+    p, m, subs = dec
+    phases = cost_models.hier_phases(kind)
+    sub_arr = np.asarray(subs, dtype=np.intp)        # (p, m)
+    parts = []
+    if m > 1:
+        parts.append(_ring_edges_arr(sub_arr, phases * (m - 1) * s / m))
+    # cross-pod rings over same-index members == columns of the partition
+    parts.append(_ring_edges_arr(sub_arr.T,
+                                 phases * (p - 1) * s / len(group)))
+    return _concat_edges(parts)
+
+
+def op_edge_arrays(op: CollectiveOp, algorithm: str = "ring",
+                   topo: Optional[MeshTopology] = None):
+    """``(src, dst, bytes)`` numpy arrays for ONE execution of ``op``.
+
+    The vectorized twin of :func:`op_edges` -- identical edges (property-
+    tested), produced as COO arrays so :func:`matrix_for_ops` accumulates
+    them without a per-edge Python loop.  Same-size replica groups are
+    batched into one 2D array per size class (an op with 32 groups of 8
+    costs the same handful of numpy calls as one group would -- tiny
+    per-group arrays are where vectorization would otherwise lose to the
+    scalar loop).  Emits the same :class:`HierarchicalFallbackWarning` in
+    the same refusal case.
+    """
+    if op.kind == "collective-permute":
+        if not op.source_target_pairs:
+            return _EMPTY_EDGES
+        pairs = np.asarray(op.source_target_pairs, dtype=np.intp)
+        nbytes = float(op.result_bytes) * op.num_groups
+        return (pairs[:, 0], pairs[:, 1],
+                np.full(len(pairs), nbytes))
+    s = float(op.payload_bytes)
+    parts = []
+    a2a_by_size: dict[int, list] = {}
+    tree_by_size: dict[int, list] = {}
+    ring_by_size: dict[int, list] = {}
+    for group in op.replica_groups or [[]]:
+        n = len(group)
+        if n <= 1:
+            continue
+        if op.kind in ("all-to-all", "ragged-all-to-all"):
+            a2a_by_size.setdefault(n, []).append(group)
+            continue
+        if algorithm == "tree" and op.kind in _TREE_KINDS:
+            tree_by_size.setdefault(n, []).append(group)
+            continue
+        if algorithm == "hierarchical" and topo is not None:
+            placed = _hier_edges_arr(group, op.kind, s, topo)
+            if placed is not None:
+                parts.append(placed)
+                continue
+            if op.kind in cost_models.HIERARCHICAL_KINDS \
+                    and topo.group_crosses_dcn(group):
+                warnings.warn(HierarchicalFallbackWarning(
+                    f"hierarchical {op.kind} over cross-pod group of {n} "
+                    "cannot decompose (uneven pod split); placing flat "
+                    "ring edges and billing the same fallback"),
+                    stacklevel=2)
+        ring_by_size.setdefault(n, []).append(group)
+    for n, gs in a2a_by_size.items():
+        G = np.asarray(gs, dtype=np.intp)              # (k, n)
+        src = np.repeat(G, n, axis=1).ravel()
+        dst = np.tile(G, (1, n)).ravel()
+        keep = src != dst
+        parts.append((src[keep], dst[keep],
+                      np.full(len(gs) * n * (n - 1), s / (n * n))))
+    for n, gs in tree_by_size.items():
+        parts.append(_tree_edges_arr(gs, op.kind, s))
+    for n, gs in ring_by_size.items():
+        per_rank = cost_models.wire_bytes_per_rank(
+            op.kind, s, n, algorithm, pods=1)
+        parts.append(_ring_edges_arr(gs, per_rank))
+    return _concat_edges(parts)
+
+
+# flush threshold for the batched COO accumulation: large enough to amortize
+# np.add.at, small enough to keep the edge buffers cache-resident
+_FLUSH_EDGES = 32768
+
+
 def matrix_for_ops(
     ops: Iterable[CollectiveOp],
     num_devices: int,
@@ -198,12 +378,75 @@ def matrix_for_ops(
     ``topo`` enables topology-faithful placement (the hierarchical
     algorithm's pod decomposition); without it hierarchical degenerates to
     ring, matching ``wire_bytes_per_rank(..., pods=1)``.
+
+    Accumulation is vectorized: per-op COO edge arrays
+    (:func:`op_edge_arrays`, execution weights applied per op) are batched
+    into buffers and flushed with one ``np.add.at`` per
+    ``_FLUSH_EDGES``-sized batch -- see :func:`matrix_for_ops_reference`
+    for the scalar oracle this is property-tested against.
     """
+    cost_models.validate_algorithm(algorithm)
     mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
+    cap = _FLUSH_EDGES
+    buf_src = np.empty(cap, dtype=np.intp)
+    buf_dst = np.empty(cap, dtype=np.intp)
+    buf_val = np.empty(cap, dtype=np.float64)
+    pending = 0
+
+    def apply(src, dst, val):
+        keep = (src < num_devices) & (dst < num_devices)
+        if not keep.all():
+            src, dst, val = src[keep], dst[keep], val[keep]
+        np.add.at(mat, (src + 1, dst + 1), val)
+
+    def flush():
+        nonlocal pending
+        if pending:
+            apply(buf_src[:pending], buf_dst[:pending], buf_val[:pending])
+            pending = 0
+
     for op in ops:
         if kinds is not None and op.kind not in kinds:
             continue
         w = getattr(op, "weight", 1.0)   # execution count (loop trip counts)
+        src, dst, val = op_edge_arrays(op, algorithm, topo)
+        m = src.size
+        if m == 0:
+            continue
+        if w != 1.0:
+            val = val * w
+        if m >= cap:                     # oversized op: apply directly
+            flush()
+            apply(src, dst, val)
+            continue
+        if pending + m > cap:
+            flush()
+        buf_src[pending:pending + m] = src
+        buf_dst[pending:pending + m] = dst
+        buf_val[pending:pending + m] = val
+        pending += m
+    flush()
+    return mat
+
+
+def matrix_for_ops_reference(
+    ops: Iterable[CollectiveOp],
+    num_devices: int,
+    algorithm: str = "ring",
+    kinds: Optional[set[str]] = None,
+    topo: Optional[MeshTopology] = None,
+) -> np.ndarray:
+    """The pre-vectorization builder: per-op, per-edge Python accumulation
+    over :func:`op_edges` tuples.  Kept as the readable oracle for the
+    property test and as the baseline ``benchmarks/matrix_build.py``
+    measures the COO-batched :func:`matrix_for_ops` against.
+    """
+    cost_models.validate_algorithm(algorithm)
+    mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
+    for op in ops:
+        if kinds is not None and op.kind not in kinds:
+            continue
+        w = getattr(op, "weight", 1.0)
         for src, dst, nbytes in op_edges(op, algorithm, topo):
             if src < num_devices and dst < num_devices:
                 mat[src + 1, dst + 1] += nbytes * w
@@ -223,11 +466,14 @@ def per_primitive_matrices(
     ops: list[CollectiveOp], num_devices: int, algorithm: str = "ring",
     topo: Optional[MeshTopology] = None,
 ) -> dict[str, np.ndarray]:
-    """Paper Fig. 3: one matrix per collective primitive."""
-    kinds = sorted({op.kind for op in ops})
+    """Paper Fig. 3: one matrix per collective primitive (ops partitioned
+    by kind once instead of re-filtering the whole stream per kind)."""
+    by_kind: dict[str, list[CollectiveOp]] = {}
+    for op in ops:
+        by_kind.setdefault(op.kind, []).append(op)
     return {
-        k: matrix_for_ops(ops, num_devices, algorithm, kinds={k}, topo=topo)
-        for k in kinds
+        k: matrix_for_ops(by_kind[k], num_devices, algorithm, topo=topo)
+        for k in sorted(by_kind)
     }
 
 

@@ -44,6 +44,22 @@ from .topology import MeshTopology
 
 ALGORITHMS = ("ring", "tree", "hierarchical")
 
+
+def validate_algorithm(algorithm: str) -> str:
+    """Reject unknown collective algorithms with a clear error.
+
+    Every public entry point that accepts an ``algorithm`` string
+    (``monitor_fn``, ``MonitorSession``, ``CommView``, ``matrix_for_ops``,
+    the sweep engine / CLI) funnels through here, so a typo like
+    ``"treee"`` raises immediately instead of silently falling through to
+    ring edge placement.  Returns the validated name for call-through use.
+    """
+    if algorithm not in ALGORITHMS:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; known: {ALGORITHMS}")
+    return algorithm
+
+
 # Kinds the hierarchical algorithm knows how to decompose across pods.
 HIERARCHICAL_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
                       "collective-broadcast")
@@ -138,8 +154,7 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int,
     if n <= 1:
         return 0.0
     s = float(payload)
-    if algorithm not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {algorithm!r}")
+    validate_algorithm(algorithm)
 
     if kind == "all-reduce":
         if algorithm == "ring":

@@ -71,6 +71,7 @@ class CollectiveOp:
     source_target_pairs: list[tuple[int, int]] = dataclasses.field(default_factory=list)
     op_name: str = ""                    # metadata op_name (jax source op)
     weight: float = 1.0                  # execution count (while trip counts)
+    phase: str = ""                      # session phase ("" = unphased/legacy)
 
     # ------------------------------------------------------------------
     # Byte accounting.  The compiled module is per-device: result shapes are
@@ -138,8 +139,11 @@ class CollectiveOp:
         from . import cost_models
 
         if self.kind == "collective-permute":
+            # every group executes the pair schedule (num_groups scales the
+            # total exactly like it does for every other kind)
             return float(self.result_bytes
-                         * max(1, len(self.source_target_pairs))) * self.weight
+                         * max(1, len(self.source_target_pairs))) \
+                * self.num_groups * self.weight
         return (cost_models.wire_bytes_group_total(
                     self.kind, self.payload_bytes, self.group_size,
                     algorithm, pods=pods)
@@ -155,6 +159,7 @@ class TraceEvent:
     arg_shapes: list[Shape]
     axis_size: Optional[int] = None      # resolved group size if known
     call_site: str = ""                  # abbreviated stack location
+    phase: str = ""                      # session phase ("" = unphased/legacy)
 
     @property
     def payload_bytes(self) -> int:
@@ -169,6 +174,23 @@ class HostTransfer:
     device: int
     nbytes: int
     label: str = ""
+    phase: str = ""                      # session phase ("" = unphased/legacy)
+
+
+@dataclasses.dataclass
+class PhaseRecord:
+    """One named capture phase of a :class:`~repro.core.session.MonitorSession`.
+
+    Serialized with the report (schema v4): ``name`` matches the ``phase``
+    tag carried by every :class:`CollectiveOp` / :class:`TraceEvent` /
+    :class:`HostTransfer` captured under it, so per-phase views can be
+    rebuilt from any loaded report.
+    """
+
+    name: str
+    num_captures: int = 0
+    trace_seconds: float = 0.0
+    compile_seconds: float = 0.0
 
 
 def jax_shape(x) -> Shape:

@@ -10,6 +10,11 @@ only carry a bucket class.
 Each cell exposes its exact value as a hover tooltip (``title``), every
 matrix ships a color legend with min/max labels, and a collapsible raw-value
 table preserves a text-readable view of the same data.
+
+Session reports with two or more named phases additionally render a pure-CSS
+tab strip per report (radio inputs + sibling selectors, still zero
+JavaScript): an "all phases" tab with the full artifact set, and one tab per
+phase holding that phase's summary table and matrix heatmap.
 """
 from __future__ import annotations
 
@@ -65,7 +70,22 @@ details { margin: 0.5rem 0 1rem; }
 details summary { cursor: pointer; color: var(--text-2); font-size: 0.8rem; }
 details pre { font-size: 0.7rem; overflow-x: auto; background: var(--surface-2);
               padding: 0.5rem; border-radius: 4px; }
+.tabs { margin: 1rem 0; }
+.tabs > input { display: none; }
+.tabs > label { display: inline-block; padding: 4px 14px; cursor: pointer;
+                border: 1px solid var(--border); border-bottom: none;
+                border-radius: 6px 6px 0 0; color: var(--text-2);
+                font-size: 0.85rem; margin-right: 2px; }
+.tabs > input:checked + label { background: var(--surface-2);
+                                color: var(--text-1); font-weight: 600; }
+.tabs > .panel { display: none; border-top: 1px solid var(--border);
+                 padding-top: 0.8rem; }
 """ + "\n".join(
+    # pure-CSS tab switching: the checked radio reveals the same-index panel
+    f".tabs > input:nth-of-type({i}):checked ~ .panel:nth-of-type({i})"
+    " { display: block; }"
+    for i in range(1, 17)
+) + "\n" + "\n".join(
     f"td.q{i} {{ background: {c}; }}" for i, c in enumerate(_RAMP)
 ) + "\n@media (prefers-color-scheme: dark) {\n" + "\n".join(
     # dark mode: reversed ramp so near-zero recedes toward the dark surface
@@ -190,18 +210,10 @@ def link_section(report) -> str:
             + "</div>")
 
 
-def report_section(report) -> str:
-    """One report: header, primitive summary, combined + per-primitive +
-    physical-link maps."""
-    algorithm = getattr(report, "algorithm", "ring")
-    total_wire = sum(r.get("wire_bytes", 0.0)
-                     for r in report.compiled_summary.values())
+def _matrices_section(report) -> str:
+    """The whole-report artifact set: summary + combined/per-primitive/link
+    heatmaps (the body of the "all phases" view)."""
     parts = [
-        f"<h2>{html.escape(report.name)}</h2>",
-        f"<div class='meta'>{report.num_devices} devices &middot; "
-        f"algorithm: {html.escape(algorithm)} &middot; wire bytes "
-        f"{reporter.human_bytes(total_wire)} &middot; compile "
-        f"{report.compile_seconds * 1e3:.0f} ms</div>",
         _summary_table(report.compiled_summary),
         "<div class='grid'>",
         "<div><h3>all primitives</h3>" + matrix_table(report.matrix)
@@ -215,10 +227,70 @@ def report_section(report) -> str:
     return "\n".join(parts)
 
 
+def _phase_panel(report, phase: str) -> str:
+    """One phase's view: its summary table + combined matrix heatmap."""
+    view = report.view(phase=phase)
+    parts = [_summary_table(view.summary),
+             "<div class='grid'>",
+             f"<div><h3>phase {html.escape(phase)}: all primitives</h3>"
+             + matrix_table(view.matrix) + "</div>"]
+    for kind, mat in sorted(view.per_primitive.items()):
+        parts.append(f"<div><h3>{html.escape(kind)}</h3>"
+                     + matrix_table(mat) + "</div>")
+    parts.append("</div>")
+    return "\n".join(parts)
+
+
+def _phase_tabs(report, uid: str) -> str:
+    """Pure-CSS tab strip: "all phases" + one tab per session phase."""
+    names = report.phase_names()
+    panels = [("all phases", _matrices_section(report))]
+    panels += [(p, _phase_panel(report, p)) for p in names]
+    if len(panels) > 16:        # CSS switch rules cover 16 tabs; stack past it
+        return "\n".join(f"<h3>{html.escape(label)}</h3>\n{content}"
+                         for label, content in panels)
+    parts = ["<div class='tabs'>"]
+    for i, (label, _) in enumerate(panels):
+        checked = " checked" if i == 0 else ""
+        parts.append(f"<input type='radio' name='{uid}' id='{uid}-{i}'"
+                     f"{checked}><label for='{uid}-{i}'>"
+                     f"{html.escape(label)}</label>")
+    for _, content in panels:
+        parts.append(f"<div class='panel'>\n{content}\n</div>")
+    parts.append("</div>")
+    return "\n".join(parts)
+
+
+def report_section(report, idx: int = 0) -> str:
+    """One report: header, primitive summary, combined + per-primitive +
+    physical-link maps; multi-phase session reports get a per-phase tab
+    strip ("all phases" first, then one tab per phase)."""
+    algorithm = getattr(report, "algorithm", "ring")
+    total_wire = sum(r.get("wire_bytes", 0.0)
+                     for r in report.compiled_summary.values())
+    phase_names = (report.phase_names()
+                   if hasattr(report, "phase_names") else [])
+    phase_note = (f" &middot; phases: "
+                  f"{html.escape(' → '.join(phase_names))}"
+                  if len(phase_names) >= 2 else "")
+    parts = [
+        f"<h2>{html.escape(report.name)}</h2>",
+        f"<div class='meta'>{report.num_devices} devices &middot; "
+        f"algorithm: {html.escape(algorithm)} &middot; wire bytes "
+        f"{reporter.human_bytes(total_wire)} &middot; compile "
+        f"{report.compile_seconds * 1e3:.0f} ms{phase_note}</div>",
+    ]
+    if len(phase_names) >= 2:
+        parts.append(_phase_tabs(report, uid=f"phases{idx}"))
+    else:
+        parts.append(_matrices_section(report))
+    return "\n".join(parts)
+
+
 def render_dashboard(reports, title: str = "Communication matrices") -> str:
     if not isinstance(reports, (list, tuple)):
         reports = [reports]
-    body = "\n".join(report_section(r) for r in reports)
+    body = "\n".join(report_section(r, idx=i) for i, r in enumerate(reports))
     return (
         "<!doctype html>\n<html lang='en'>\n<head>\n<meta charset='utf-8'>\n"
         f"<title>{html.escape(title)}</title>\n"

@@ -3,10 +3,16 @@
 Renders each report's compiled collectives as a timeline loadable in
 https://ui.perfetto.dev or ``chrome://tracing``: one *process* per report,
 one *thread* (track) per collective primitive, one complete (``ph="X"``)
-event per collective op.  Events are laid out serially in HLO program order
--- the same no-overlap assumption as :func:`repro.core.cost_models.total_time`
--- with durations from the algorithm-aware bandwidth model, so the timeline
-*is* the roofline's collective term, made visible.
+event per collective op.  Events are laid out serially in session/HLO
+program order -- the same no-overlap assumption as
+:func:`repro.core.cost_models.total_time` -- with durations from the
+algorithm-aware bandwidth model, so the timeline *is* the roofline's
+collective term, made visible.
+
+Session reports with named phases additionally get a **phase lane**: a
+dedicated track whose ``X`` events span each phase's extent on the same
+clock, so the fwd/bwd/optimizer structure reads directly off the timeline
+(every op event also carries its ``phase`` in ``args``).
 
 Only the documented subset of the Chrome trace-event format is emitted
 (https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU):
@@ -48,11 +54,32 @@ def trace_events(report, *, pid: int = 1) -> list[dict]:
             "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
             "args": {"name": kind},
         })
+    phase_names = (report.phase_names()
+                   if hasattr(report, "phase_names") else [])
+    ops = report.compiled_ops
+    if phase_names:
+        # lay phases out contiguously in session order (stable within phase)
+        order = {p: i for i, p in enumerate(phase_names)}
+        ops = sorted(ops, key=lambda op: order.get(op.phase, len(order)))
     ts = 0.0
-    for op in report.compiled_ops:
+    phase_spans: dict[str, list[float]] = {}
+    for op in ops:
         # a weighted op (while-loop body) executes `weight` times; show the
         # aggregate as one span so trip-count-64 loops don't emit 64 events
         dur = _op_duration_us(op, report.topo, algorithm) * max(1.0, op.weight)
+        args = {
+            "kind": op.kind,
+            "hlo_name": op.name,
+            "payload_bytes": int(op.payload_bytes),
+            "wire_bytes_total": float(op.wire_bytes_total(algorithm)),
+            "group_size": op.group_size,
+            "num_groups": op.num_groups,
+            "weight": op.weight,
+        }
+        if op.phase:
+            args["phase"] = op.phase
+            span = phase_spans.setdefault(op.phase, [ts, ts])
+            span[1] = ts + dur
         events.append({
             "name": op.op_name or op.kind,
             "cat": "collective",
@@ -61,17 +88,32 @@ def trace_events(report, *, pid: int = 1) -> list[dict]:
             "dur": round(dur, 3),
             "pid": pid,
             "tid": tid_of[op.kind],
-            "args": {
-                "kind": op.kind,
-                "hlo_name": op.name,
-                "payload_bytes": int(op.payload_bytes),
-                "wire_bytes_total": float(op.wire_bytes_total(algorithm)),
-                "group_size": op.group_size,
-                "num_groups": op.num_groups,
-                "weight": op.weight,
-            },
+            "args": args,
         })
         ts += dur
+    if len(phase_names) >= 2:
+        # the phase lane: one span per phase on a dedicated track (phases
+        # with no collectives occupy no wall-clock on this model, so they
+        # have no span to draw)
+        lane_tid = len(kinds) + 1
+        events.append({
+            "name": "thread_name", "ph": "M", "pid": pid, "tid": lane_tid,
+            "args": {"name": "phases"},
+        })
+        for name in phase_names:
+            span = phase_spans.get(name)
+            if span is None:
+                continue
+            events.append({
+                "name": name,
+                "cat": "phase",
+                "ph": "X",
+                "ts": round(span[0], 3),
+                "dur": round(max(_MIN_DUR_US, span[1] - span[0]), 3),
+                "pid": pid,
+                "tid": lane_tid,
+                "args": {"phase": name},
+            })
     return events
 
 

@@ -1,4 +1,4 @@
-"""Lossless CommReport <-> plain-dict serialization (schema ``v3``).
+"""Lossless CommReport <-> plain-dict serialization (schema ``v4``).
 
 This is the substrate for everything under :mod:`repro.core.export`: the JSON
 exporter writes the dict verbatim, the on-disk report cache
@@ -15,28 +15,43 @@ alongside under new keys.
 Schema **v2** added the physical-link view for reports that carry a topology:
 ``link_matrix`` (the ``(d+1)^2`` per-link byte matrix, row/col 0 = DCN tier)
 and ``links`` (one row per physical link: kind/src/dst/axis/bytes/bandwidth/
-seconds).  Schema **v3** adds the link-overlap view on top: ``link_tiers``
+seconds).  Schema **v3** added the link-overlap view on top: ``link_tiers``
 (per-tier bytes + busy seconds from ``LinkUtilization.tier_summary``) and
 ``overlap`` (per-tier serialized collective seconds, their overlapped max
 and serialized sum).  All link/overlap sections are *derived* from ``ops``
-+ ``topo``, so v1 and v2 files load unchanged (:func:`report_from_dict`
++ ``topo``, so older files load unchanged (:func:`report_from_dict`
 accepts any accepted schema; loaded reports recompute the views on demand
 via ``CommReport.link_utilization`` / ``collective_seconds_split``).
+
+Schema **v4** is the session snapshot: ``phases`` (one record per named
+capture phase -- name, capture count, per-phase trace/compile seconds) and
+a ``phase`` tag on every op / traced event / host transfer, so per-phase
+views (``CommReport.view(phase=...)``) rebuild from any loaded file.  It
+also adds the *optional* ``hlo_gz`` key (a list of gzip + base64 compiled
+HLO modules, one per capture, written only by
+``save(..., include_hlo=True)``), which lets
+``roofline_of`` run on loaded/cached reports without a live compilation.
+v1-v3 files load fine: missing phase tags default to ``""`` (a single
+anonymous phase) and missing ``hlo_gz`` just means no offline roofline.
 """
 from __future__ import annotations
 
+import base64
 import dataclasses
+import gzip
 from typing import Any, Optional
 
 import numpy as np
 
-from ..events import CollectiveOp, HostTransfer, Shape, TraceEvent
+from ..events import (CollectiveOp, HostTransfer, PhaseRecord, Shape,
+                      TraceEvent)
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v3"
+SCHEMA = "repro.comm_report.v4"
+SCHEMA_V3 = "repro.comm_report.v3"
 SCHEMA_V2 = "repro.comm_report.v2"
 SCHEMA_V1 = "repro.comm_report.v1"
-ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V2, SCHEMA_V1)
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +78,7 @@ def op_to_dict(op: CollectiveOp) -> dict:
         "source_target_pairs": [list(p) for p in op.source_target_pairs],
         "op_name": op.op_name,
         "weight": op.weight,
+        "phase": op.phase,
         "payload_bytes": op.payload_bytes,
         "group_size": op.group_size,
         "num_groups": op.num_groups,
@@ -80,6 +96,7 @@ def op_from_dict(d: dict) -> CollectiveOp:
         source_target_pairs=[tuple(p) for p in d.get("source_target_pairs", [])],
         op_name=d.get("op_name", ""),
         weight=float(d.get("weight", 1.0)),
+        phase=d.get("phase", ""),
     )
 
 
@@ -90,6 +107,7 @@ def event_to_dict(e: TraceEvent) -> dict:
         "arg_shapes": [shape_to_dict(s) for s in e.arg_shapes],
         "axis_size": e.axis_size,
         "call_site": e.call_site,
+        "phase": e.phase,
     }
 
 
@@ -100,17 +118,32 @@ def event_from_dict(d: dict) -> TraceEvent:
         arg_shapes=[shape_from_dict(s) for s in d["arg_shapes"]],
         axis_size=d.get("axis_size"),
         call_site=d.get("call_site", ""),
+        phase=d.get("phase", ""),
     )
 
 
 def transfer_to_dict(t: HostTransfer) -> dict:
     return {"direction": t.direction, "device": t.device,
-            "nbytes": t.nbytes, "label": t.label}
+            "nbytes": t.nbytes, "label": t.label, "phase": t.phase}
 
 
 def transfer_from_dict(d: dict) -> HostTransfer:
     return HostTransfer(direction=d["direction"], device=d["device"],
-                        nbytes=d["nbytes"], label=d.get("label", ""))
+                        nbytes=d["nbytes"], label=d.get("label", ""),
+                        phase=d.get("phase", ""))
+
+
+def phase_to_dict(p: PhaseRecord) -> dict:
+    return {"name": p.name, "num_captures": p.num_captures,
+            "trace_seconds": p.trace_seconds,
+            "compile_seconds": p.compile_seconds}
+
+
+def phase_from_dict(d: dict) -> PhaseRecord:
+    return PhaseRecord(name=d["name"],
+                       num_captures=int(d.get("num_captures", 0)),
+                       trace_seconds=float(d.get("trace_seconds", 0.0)),
+                       compile_seconds=float(d.get("compile_seconds", 0.0)))
 
 
 def topo_to_dict(t: Optional[MeshTopology]) -> Optional[dict]:
@@ -168,11 +201,35 @@ def _link_section(report) -> dict:
     return out
 
 
-def report_to_dict(report) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v3``)."""
+def _hlo_section(report, include_hlo: bool) -> dict:
+    """Optional gzip+base64 of the compiled HLO modules (schema-v4 key).
+
+    ``hlo_gz`` is a list -- one compressed module per session capture;
+    modules must stay separate because computation names are only unique
+    within a module.  Persisted only on request
+    (``save(..., include_hlo=True)``): the text is large even compressed,
+    and most consumers never run a roofline on a loaded report.
+    """
+    if not include_hlo:
+        return {}
+    texts = getattr(report, "_hlo_texts", None)
+    if not texts:
+        single = getattr(report, "_hlo_text", None)
+        texts = [single] if single else None
+    if not texts:
+        return {}
+    return {"hlo_gz": [base64.b64encode(gzip.compress(t.encode()))
+                       .decode("ascii") for t in texts]}
+
+
+def report_to_dict(report, *, include_hlo: bool = False) -> dict:
+    """``CommReport`` -> JSON-serializable dict (schema ``v4``)."""
     return {
         "schema": SCHEMA,
         **_link_section(report),
+        **_hlo_section(report, include_hlo),
+        "phases": [phase_to_dict(p)
+                   for p in getattr(report, "phases", []) or []],
         "name": report.name,
         "num_devices": report.num_devices,
         "algorithm": getattr(report, "algorithm", "ring"),
@@ -194,12 +251,14 @@ def report_to_dict(report) -> dict:
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1`` / ``v2`` / ``v3``) -> ``CommReport``.
+    """Dict (schema ``v1`` ... ``v4``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
-    needed for matrices, tables, exports and cost models; only the live
-    compilation artifacts (``_compiled`` / ``_hlo_text``) are absent, so
-    :func:`repro.core.monitor.roofline_of` needs a freshly monitored report.
+    needed for matrices, tables, exports and cost models; the live
+    compilation artifacts (``_compiled`` / ``_lowered``) never persist, and
+    the HLO text only does when the file was saved with
+    ``include_hlo=True`` (``hlo_gz``), in which case
+    :func:`repro.core.monitor.roofline_of` works on the loaded report too.
     The v2/v3 ``links``/``link_matrix``/``link_tiers``/``overlap`` sections
     are derived data and are not restored -- ``CommReport.
     link_utilization`` / ``collective_seconds_split`` recompute them from
@@ -212,7 +271,7 @@ def report_from_dict(d: dict):
         raise ValueError(
             f"unknown report schema {schema!r}; accepted: {ACCEPTED_SCHEMAS}")
 
-    return CommReport(
+    report = CommReport(
         name=d["name"],
         num_devices=int(d["num_devices"]),
         traced=[event_from_dict(e) for e in d.get("traced", [])],
@@ -231,4 +290,15 @@ def report_from_dict(d: dict):
                         for t in d.get("host_transfers", [])],
         algorithm=d.get("algorithm", "ring"),
         meta=dict(d.get("meta", {})),
+        phases=[phase_from_dict(p) for p in d.get("phases", [])],
     )
+    if d.get("hlo_gz"):
+        blobs = d["hlo_gz"]
+        if isinstance(blobs, str):     # tolerate a single-blob spelling
+            blobs = [blobs]
+        texts = [gzip.decompress(base64.b64decode(b)).decode()
+                 for b in blobs]
+        report._hlo_texts = texts
+        if len(texts) == 1:
+            report._hlo_text = texts[0]
+    return report

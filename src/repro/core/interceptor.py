@@ -45,6 +45,21 @@ _HOOKED_PRIMITIVES = {
 _lock = threading.Lock()
 
 
+def traced_summary(events) -> dict:
+    """Paper Table-2 style logical summary over trace events.
+
+    Module-level so multi-capture sessions (which accumulate events across
+    many interceptor scopes) summarize exactly like a single interceptor.
+    """
+    table: dict[str, dict] = {}
+    for ev in events:
+        name = getattr(ev, "nccl_name", ev.primitive)
+        row = table.setdefault(name, {"calls": 0, "payload_bytes": 0})
+        row["calls"] += 1
+        row["payload_bytes"] += ev.payload_bytes
+    return table
+
+
 def _axis_names(params: dict) -> tuple[str, ...]:
     ax = params.get("axes", params.get("axis_name", ()))
     if ax is None:
@@ -153,13 +168,7 @@ class CollectiveInterceptor:
 
     # -- summaries (paper Table 2 style, logical view) -----------------------
     def summary(self) -> dict:
-        table: dict[str, dict] = {}
-        for ev in self.events:
-            name = getattr(ev, "nccl_name", ev.primitive)
-            row = table.setdefault(name, {"calls": 0, "payload_bytes": 0})
-            row["calls"] += 1
-            row["payload_bytes"] += ev.payload_bytes
-        return table
+        return traced_summary(self.events)
 
 
 @contextlib.contextmanager

@@ -3,7 +3,7 @@
 The paper's workflow (Fig. 1): preload shim -> record transfers during
 execution -> post-process into matrices + statistics.  Ours:
 
-1. **intercept**: trace the function under a scoped primitive hook
+1. **intercept**: trace each captured function under a scoped primitive hook
    (:mod:`repro.core.interceptor`) -> logical, application-issued collectives;
 2. **extract**: compile and parse the SPMD module
    (:mod:`repro.core.hlo_parser`) -> physical, compiler-scheduled collectives;
@@ -11,40 +11,50 @@ execution -> post-process into matrices + statistics.  Ours:
    communication matrices (Figs. 2/3), logical-vs-physical diff, and the
    roofline terms used by the perf loop.
 
-``monitor_fn`` is the one-call entry point used by examples, benchmarks, the
-dry-run launcher and the sweep CLI (``python -m repro sweep``).  Reports
-round-trip losslessly through :meth:`CommReport.save` / :meth:`CommReport.load`
-(schema v1, :mod:`repro.core.export.serialize`), which is also how the on-disk
-report cache (:mod:`repro.core.report_cache`) lets repeated sweeps skip
-recompilation entirely.
+The accumulating front door is :class:`~repro.core.session.MonitorSession`
+(any number of captures under named phases); derived artifacts live on lazy
+:class:`~repro.core.views.CommView` bindings (``session.view()`` /
+``report.view()``), one per ``(algorithm, phase)``.  ``monitor_fn`` below is
+the one-call compatibility wrapper -- a single capture in a single phase --
+still used by examples, benchmarks, the dry-run launcher and the sweep CLI.
+Reports round-trip losslessly through :meth:`CommReport.save` /
+:meth:`CommReport.load` (schema v4, :mod:`repro.core.export.serialize`;
+v1-v3 files still load), which is also how the on-disk report cache
+(:mod:`repro.core.report_cache`) lets repeated sweeps skip recompilation.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Optional
+from typing import Optional
 
-import jax
 import numpy as np
 
-from . import comm_matrix, cost_models, hlo_parser, reporter, roofline
-from .events import CollectiveOp, HostTransfer, TraceEvent
-from .interceptor import CollectiveInterceptor
+from . import cost_models, hlo_parser, reporter, roofline
+from .events import CollectiveOp, HostTransfer, PhaseRecord, TraceEvent
 from .topology import MeshTopology, V5E
+from .views import CommView, build_view
 
 
 @dataclasses.dataclass
 class CommReport:
-    """Everything ComScribe produces for one program, plus the TPU extras.
+    """Everything ComScribe produces for one session, plus the TPU extras.
 
-    A report is a plain data object: it serializes losslessly to JSON via
-    :meth:`save` and comes back via :meth:`load`, so sweeps can cache it on
-    disk (:mod:`repro.core.report_cache`) keyed by ``(config, mesh,
-    algorithm, jax version)`` and re-render any export format without
-    recompiling.  ``algorithm`` records which collective algorithm the byte
+    A report is the *serializable snapshot* of a monitoring session: it
+    serializes losslessly to JSON via :meth:`save` and comes back via
+    :meth:`load`, so sweeps can cache it on disk
+    (:mod:`repro.core.report_cache`) keyed by ``(config, mesh, algorithm,
+    jax version)`` and re-render any export format without recompiling.
+    ``phases`` records the session's named capture phases (empty for
+    legacy single-shot reports); every op / traced event / host transfer
+    carries its phase tag, so per-phase views rebuild from loaded files.
+
+    ``algorithm`` records which collective algorithm the eager byte
     accounting (``matrix``, ``per_primitive``, ``compiled_summary``) was
-    derived with; :meth:`with_algorithm` re-derives them for another
-    algorithm from the same compiled ops -- no recompilation.
+    derived with.  Every *derived* artifact beyond those snapshot fields is
+    served by :meth:`view`: a lazy, memoized
+    :class:`~repro.core.views.CommView` per ``(algorithm, phase)`` binding
+    -- re-binding ring -> tree -> hierarchical recomputes nothing until an
+    artifact is read, and never recompiles.
 
     Export beyond the terminal renderings below lives in
     :mod:`repro.core.export` (JSON / CSV / HTML heatmap dashboard / Perfetto
@@ -70,6 +80,53 @@ class CommReport:
     host_transfers: list[HostTransfer] = dataclasses.field(default_factory=list)
     algorithm: str = "ring"                 # algorithm the matrices assume
     meta: dict = dataclasses.field(default_factory=dict)  # sweep provenance
+    phases: list[PhaseRecord] = dataclasses.field(default_factory=list)
+
+    # -- lazy algorithm/phase-bound views ---------------------------------
+    def view(self, algorithm: Optional[str] = None,
+             phase: Optional[str] = None) -> CommView:
+        """The :class:`CommView` for ``(algorithm, phase)`` (defaults: the
+        report's own algorithm, the whole session).  Memoized per binding;
+        the default binding is seeded with the snapshot's eager artifacts,
+        so reading it recomputes nothing.
+        """
+        alg = algorithm or self.algorithm
+        cost_models.validate_algorithm(alg)
+        if not hasattr(self, "_views"):
+            self._views: dict = {}
+        key = (alg, phase)
+        if key not in self._views:
+            v = build_view(
+                self.compiled_ops, self.num_devices, alg, self.topo,
+                self.host_transfers, phase=phase,
+                known_phases=self.phase_names(), label=self.name)
+            if phase is None and alg == self.algorithm:
+                v._memo.update(matrix=self.matrix,
+                               per_primitive=self.per_primitive,
+                               summary=self.compiled_summary)
+            self._views[key] = v
+        return self._views[key]
+
+    def phase_names(self) -> list[str]:
+        """Phase order of the originating session (op-tag order for files
+        predating the phase records; empty for single-shot legacy data)."""
+        if self.phases:
+            return [p.name for p in self.phases]
+        seen: list[str] = []
+        for op in self.compiled_ops:
+            if op.phase and op.phase not in seen:
+                seen.append(op.phase)
+        return seen
+
+    def phase_view(self, phase: str,
+                   algorithm: Optional[str] = None) -> CommView:
+        """Shorthand for :meth:`view` with a required phase."""
+        return self.view(algorithm, phase=phase)
+
+    def phase_summaries(self, algorithm: Optional[str] = None) -> dict:
+        """``{phase: Table-2 summary}`` in phase order."""
+        return {p: self.view(algorithm, phase=p).summary
+                for p in self.phase_names()}
 
     # -- paper-style renderings -------------------------------------------
     def usage_table(self) -> str:
@@ -80,32 +137,44 @@ class CommReport:
         return reporter.primitive_usage_table(
             self.traced_summary, title=f"{self.name}: traced (application) collectives")
 
-    def heatmap(self, kind: Optional[str] = None) -> str:
-        mat = self.per_primitive.get(kind, self.matrix) if kind else self.matrix
-        t = f"{self.name} comm matrix" + (f" [{kind}]" if kind else "")
+    def phase_table(self, algorithm: Optional[str] = None) -> str:
+        """Per-phase Table-2 breakdown (paper Table 2, one block per
+        phase) -- the session analogue of :meth:`usage_table`."""
+        return reporter.phase_usage_table(
+            self.phase_summaries(algorithm),
+            title=f"{self.name}: per-phase compiled collectives")
+
+    def phase_diff(self, a: str, b: str,
+                   algorithm: Optional[str] = None) -> str:
+        """Primitive-by-primitive comparison of two phases' compiled
+        communication (calls + wire bytes, with the wire-byte delta)."""
+        return reporter.phase_diff_table(
+            a, self.view(algorithm, phase=a).summary,
+            b, self.view(algorithm, phase=b).summary)
+
+    def heatmap(self, kind: Optional[str] = None,
+                phase: Optional[str] = None) -> str:
+        v = self.view(phase=phase)
+        mat = v.per_primitive.get(kind, v.matrix) if kind else v.matrix
+        t = (f"{self.name} comm matrix"
+             + (f" [{kind}]" if kind else "")
+             + (f" [phase {phase}]" if phase else ""))
         return reporter.ascii_heatmap(mat, title=t)
 
     def diff(self) -> str:
         return reporter.diff_table(self.traced_summary, self.compiled_summary)
 
     def total_wire_bytes(self, algorithm: Optional[str] = None) -> float:
-        return hlo_parser.total_wire_bytes(
-            self.compiled_ops, algorithm or self.algorithm, topo=self.topo)
+        return self.view(algorithm).total_wire_bytes()
 
     def collective_seconds(self, algorithm: Optional[str] = None) -> float:
-        if self.topo is None:
-            return 0.0
-        return cost_models.total_time(
-            self.compiled_ops, self.topo, algorithm or self.algorithm)
+        return self.view(algorithm).collective_seconds()
 
     def collective_seconds_split(
             self, algorithm: Optional[str] = None) -> tuple[float, float]:
         """Per-tier serialized collective time ``(ici_s, dcn_s)``; sums to
         :meth:`collective_seconds`.  ``(0, 0)`` without a topology."""
-        if self.topo is None:
-            return 0.0, 0.0
-        return cost_models.total_time_split(
-            self.compiled_ops, self.topo, algorithm or self.algorithm)
+        return self.view(algorithm).collective_seconds_split()
 
     def collective_overlap_seconds(
             self, algorithm: Optional[str] = None) -> float:
@@ -113,7 +182,7 @@ class CommReport:
         fabrics, so the slower tier bounds the overlapped schedule --
         ``max`` of the per-tier serialized sums, always <=
         :meth:`collective_seconds` (equal when one tier has it all)."""
-        return max(self.collective_seconds_split(algorithm))
+        return self.view(algorithm).collective_overlap_seconds()
 
     # -- physical-link view ------------------------------------------------
     def link_utilization(self, algorithm: Optional[str] = None):
@@ -121,32 +190,27 @@ class CommReport:
 
         Returns a :class:`~repro.core.comm_matrix.LinkUtilization` (bytes
         per link, bottleneck link, contention-aware seconds), or ``None``
-        when the report carries no topology (``monitor_fn`` without
+        when the report carries no topology (monitoring without
         ``mesh=``).  Derived from the compiled ops, so it works on loaded
         and cached reports too.
         """
-        if self.topo is None:
-            return None
-        return comm_matrix.link_utilization_for_ops(
-            self.compiled_ops, self.topo, algorithm or self.algorithm)
+        return self.view(algorithm).link_utilization()
 
     def link_matrix(self, algorithm: Optional[str] = None):
         """The ``(d+1)^2`` per-link byte matrix: entry ``(i+1, j+1)`` is the
         physical ICI link ``i -> j``; row/col 0 is the DCN tier (uplinks/
         downlinks).  ``None`` without a topology."""
-        lu = self.link_utilization(algorithm)
-        return None if lu is None else lu.matrix()
+        return self.view(algorithm).link_matrix()
 
     def link_seconds(self, algorithm: Optional[str] = None) -> float:
         """Contention-aware communication time: the bottleneck link's
         bytes/bandwidth (max over links, not flat per-chip bandwidth)."""
-        lu = self.link_utilization(algorithm)
-        return 0.0 if lu is None else lu.bottleneck_seconds()
+        return self.view(algorithm).link_seconds()
 
     def link_table(self) -> str:
         lu = self.link_utilization()
         if lu is None:
-            return "(no topology: pass mesh= to monitor_fn for link stats)"
+            return "(no topology: pass mesh= to the monitor for link stats)"
         ici_s, dcn_s = self.collective_seconds_split()
         overlap = (f"tier overlap: ici {ici_s * 1e3:.3f} ms ∥ dcn "
                    f"{dcn_s * 1e3:.3f} ms -> overlapped "
@@ -159,6 +223,10 @@ class CommReport:
             f"### CommReport: {self.name} ({self.num_devices} devices) ###",
             self.logical_table(),
             self.usage_table(),
+        ]
+        if len(self.phase_names()) >= 2:
+            parts.append(self.phase_table())
+        parts += [
             "-- traced vs compiled --",
             self.diff(),
             self.heatmap(),
@@ -174,81 +242,56 @@ class CommReport:
     def with_algorithm(self, algorithm: str) -> "CommReport":
         """Same compiled ops, byte accounting re-derived for ``algorithm``.
 
-        Compilation does not depend on the collective algorithm -- only the
-        wire-byte model and matrix edge placement do -- so this is the cheap
-        way to compare ring vs tree for one program (the sweep engine uses it
-        to fill cache entries for extra algorithms without recompiling).
+        **Deprecated spelling**: prefer ``report.view(algorithm)``, which
+        binds lazily and memoizes instead of eagerly materializing a whole
+        replacement report.  Kept because cached sweep artifacts are whole
+        reports; this now just snapshots the view's artifacts (compilation
+        never depended on the algorithm, so no recompilation either way).
         """
         if algorithm == self.algorithm:
             return self
+        v = self.view(algorithm)
         rep = dataclasses.replace(
             self,
             algorithm=algorithm,
-            compiled_summary=hlo_parser.summarize(
-                self.compiled_ops, algorithm, topo=self.topo),
-            matrix=comm_matrix.matrix_for_ops(
-                self.compiled_ops, self.num_devices, algorithm,
-                topo=self.topo),
-            per_primitive=comm_matrix.per_primitive_matrices(
-                self.compiled_ops, self.num_devices, algorithm,
-                topo=self.topo),
+            compiled_summary=v.summary,
+            matrix=v.matrix,
+            per_primitive=v.per_primitive,
             meta=dict(self.meta, algorithm=algorithm),
         )
-        if self.host_transfers:
-            comm_matrix.add_host_transfers(rep.matrix, self.host_transfers)
-        for attr in ("_lowered", "_compiled", "_hlo_text"):
+        for attr in ("_lowered", "_compiled", "_hlo_text", "_hlo_texts"):
             if hasattr(self, attr):
                 setattr(rep, attr, getattr(self, attr))
         return rep
 
-    def save(self, path: str):
-        """Write the full report as schema-v1 JSON (see ``load``).
+    def save(self, path: str, *, include_hlo: bool = False):
+        """Write the full report as schema-v4 JSON (see ``load``).
 
         The file is a lossless round-trip: ops, traced events, matrices,
-        summaries, topology and timings all survive.  It is also a strict
-        superset of the legacy ``reporter.dump_report`` layout (``name``,
-        ``summary``, ``ops``, ``matrix`` keep their old meaning), so existing
-        consumers of those files keep working.
+        summaries, topology, phase records and timings all survive.  It is
+        also a strict superset of the legacy ``reporter.dump_report``
+        layout (``name``, ``summary``, ``ops``, ``matrix`` keep their old
+        meaning), so existing consumers of those files keep working.
+
+        ``include_hlo=True`` additionally persists the compiled HLO text
+        (gzip + base64, ``hlo_gz`` key) so :func:`roofline_of` works on the
+        loaded report without a live compilation.
         """
         from .export import export_json
-        export_json(self, path)
+        export_json(self, path, include_hlo=include_hlo)
 
     @classmethod
     def load(cls, path: str) -> "CommReport":
         """Read a report written by :meth:`save` (or the report cache).
 
-        Loaded reports render, diff, export and feed the cost models exactly
-        like fresh ones; only ``roofline_of`` needs a live compilation (the
-        HLO text is not persisted).
+        Accepts schema v1-v4.  Loaded reports render, diff, export and
+        feed the cost models exactly like fresh ones; ``roofline_of``
+        additionally needs the compiled HLO, which is present when the
+        file was saved with ``include_hlo=True`` (otherwise a live
+        compilation is required).
         """
         from .export import load_json
         return load_json(path)
-
-
-def _memory_stats(compiled) -> Optional[dict]:
-    try:
-        m = compiled.memory_analysis()
-        return {
-            "argument_bytes": m.argument_size_in_bytes,
-            "output_bytes": m.output_size_in_bytes,
-            "temp_bytes": m.temp_size_in_bytes,
-            "alias_bytes": m.alias_size_in_bytes,
-            "generated_code_bytes": m.generated_code_size_in_bytes,
-            "total_bytes": (m.argument_size_in_bytes + m.output_size_in_bytes
-                            + m.temp_size_in_bytes - m.alias_size_in_bytes),
-        }
-    except Exception:
-        return None
-
-
-def _cost_analysis(compiled) -> dict:
-    try:
-        c = compiled.cost_analysis()
-        if isinstance(c, (list, tuple)):
-            c = c[0] if c else {}
-        return dict(c)
-    except Exception:
-        return {}
 
 
 def monitor_fn(
@@ -264,87 +307,64 @@ def monitor_fn(
     host_transfers: Optional[list[HostTransfer]] = None,
     **kwargs,
 ) -> CommReport:
-    """Monitor a function end-to-end: trace (intercepted) + compile + parse.
+    """Monitor one function end-to-end: a single-capture, single-phase
+    :class:`~repro.core.session.MonitorSession`, snapshotted.
 
     ``args``/``kwargs`` may be concrete arrays or ``jax.ShapeDtypeStruct``
     stand-ins (the dry-run path: no device memory is allocated).
 
     ``algorithm`` selects the collective algorithm assumed by the byte
-    accounting (``ring`` / ``tree`` / ``hierarchical``, paper Table 1); use
-    ``report.with_algorithm(...)`` to re-derive for another one without
-    recompiling.  Compilation dominates this call's cost -- for iterative
-    use, persist the result (``report.save``) or go through the sweep CLI,
-    which caches reports on disk keyed by ``(config, mesh, algorithm, jax
-    version)`` and logs ``[cache] hit`` instead of recompiling::
+    accounting (``ring`` / ``tree`` / ``hierarchical``, paper Table 1;
+    anything else raises); use ``report.view(...)`` to re-bind another one
+    lazily without recompiling.  Compilation dominates this call's cost --
+    for iterative use, persist the result (``report.save``) or go through
+    the sweep CLI, which caches reports on disk keyed by ``(config, mesh,
+    algorithm, jax version)`` and logs ``[cache] hit`` instead of
+    recompiling::
 
         python -m repro sweep --configs paper,gnmt,resnet \\
             --algorithms ring,tree          # first run compiles
         python -m repro sweep --configs paper,gnmt,resnet \\
             --algorithms ring,tree          # second run: all cache hits
+
+    Multi-step workloads with distinguishable phases (fwd/bwd/optimizer,
+    prefill/decode) should use :class:`MonitorSession` directly -- this
+    wrapper exists so one-shot callers and pre-session code keep working,
+    golden-tested equal to the session path.
     """
-    jit_kw: dict[str, Any] = {}
-    if in_shardings is not None:
-        jit_kw["in_shardings"] = in_shardings
-    if out_shardings is not None:
-        jit_kw["out_shardings"] = out_shardings
-    if donate_argnums:
-        jit_kw["donate_argnums"] = donate_argnums
-    if static_argnums:
-        jit_kw["static_argnums"] = static_argnums
+    from .session import MonitorSession
 
-    jitted = jax.jit(fn, **jit_kw)
-
-    t0 = time.perf_counter()
-    with CollectiveInterceptor(mesh=mesh) as icpt:
-        lowered = jitted.lower(*args, **kwargs)
-    t1 = time.perf_counter()
-    compiled = lowered.compile()
-    t2 = time.perf_counter()
-
-    hlo_text = compiled.as_text()
-    # loop-aware extraction: ops inside while bodies carry execution weights
-    from . import hlo_cost
-    ops = hlo_cost.analyze_hlo(hlo_text).collectives
-    num_devices = int(np.prod(mesh.devices.shape)) if mesh is not None else jax.device_count()
-    topo = MeshTopology.from_mesh(mesh) if mesh is not None else None
-
-    mat = comm_matrix.matrix_for_ops(ops, num_devices, algorithm, topo=topo)
-    if host_transfers:
-        comm_matrix.add_host_transfers(mat, host_transfers)
-    report = CommReport(
-        name=name,
-        num_devices=num_devices,
-        traced=list(icpt.events),
-        compiled_ops=ops,
-        traced_summary=icpt.summary(),
-        compiled_summary=hlo_parser.summarize(ops, algorithm, topo=topo),
-        matrix=mat,
-        per_primitive=comm_matrix.per_primitive_matrices(ops, num_devices,
-                                                         algorithm, topo=topo),
-        cost=_cost_analysis(compiled),
-        memory_stats=_memory_stats(compiled),
-        trace_seconds=t1 - t0,
-        compile_seconds=t2 - t1,
-        topo=topo,
-        host_transfers=list(host_transfers or []),
-        algorithm=algorithm,
-    )
-    # stash the artifacts for roofline / debugging without re-compiling
-    report._lowered = lowered
-    report._compiled = compiled
-    report._hlo_text = hlo_text
-    return report
+    session = MonitorSession(mesh=mesh, name=name, algorithm=algorithm)
+    with session:
+        session.capture(
+            fn, *args, name=name,
+            in_shardings=in_shardings, out_shardings=out_shardings,
+            donate_argnums=donate_argnums, static_argnums=static_argnums,
+            host_transfers=host_transfers, **kwargs)
+    return session.report()
 
 
 def roofline_of(report: CommReport, *, arch: str = "", mesh_name: str = "",
                 model_flops: float = 0.0,
                 algorithm: str = "ring") -> roofline.RooflineReport:
-    assert report.topo is not None, "monitor_fn needs mesh= for roofline"
+    assert report.topo is not None, "monitoring needs mesh= for roofline"
+    # one module per capture; analyzed per module (concatenating would
+    # clobber same-named computations across independently compiled modules)
+    hlo_texts = getattr(report, "_hlo_texts", None)
+    if not hlo_texts:
+        single = getattr(report, "_hlo_text", None)
+        hlo_texts = [single] if single else None
+    if not hlo_texts:
+        raise ValueError(
+            "report carries no compiled HLO (loaded from a file saved "
+            "without include_hlo=True); re-monitor, or save with "
+            "report.save(path, include_hlo=True) to make rooflines work "
+            "on loaded reports")
     return roofline.analyze(
         arch=arch or report.name,
         mesh_name=mesh_name,
         cost=report.cost,
-        hlo_text=report._hlo_text,
+        hlo_text=hlo_texts,
         topo=report.topo,
         hw=report.topo.hw if report.topo else V5E,
         model_flops=model_flops,

@@ -65,6 +65,60 @@ def primitive_usage_table(summary: dict, title: str = "") -> str:
 
 
 # ---------------------------------------------------------------------------
+# session phases — per-phase Table 2 breakdown and phase-vs-phase diff
+# ---------------------------------------------------------------------------
+def phase_usage_table(phase_summaries: dict, title: str = "") -> str:
+    """Per-phase primitive usage: one row per (phase, primitive).
+
+    ``phase_summaries`` maps phase name (in session order) to a Table-2
+    style summary dict.  A phase with no compiled collectives still gets a
+    row -- an optimizer phase that moves no bytes is a finding, not an
+    omission.
+    """
+    rows = []
+    for phase, summary in phase_summaries.items():
+        if not summary:
+            rows.append([phase, "(none)", "0", "0 B", "0 B"])
+            continue
+        for name in sorted(summary,
+                           key=lambda k: -summary[k].get("payload_bytes", 0)):
+            r = summary[name]
+            rows.append([phase, name, f"{r.get('calls', 0):,}",
+                         human_bytes(r.get("payload_bytes", 0)),
+                         human_bytes(r.get("wire_bytes", 0))])
+    out = format_table(rows, ["Phase", "Communication Type",
+                              "Number of Calls", "Total Size", "Wire Bytes"])
+    if title:
+        out = f"== {title} ==\n{out}"
+    return out
+
+
+def _signed_bytes(n: float) -> str:
+    return ("-" if n < 0 else "+") + human_bytes(abs(n))
+
+
+def phase_diff_table(a_name: str, a_summary: dict,
+                     b_name: str, b_summary: dict) -> str:
+    """Primitive-by-primitive comparison of two phases' compiled
+    communication (calls + wire bytes, with the wire-byte delta b - a)."""
+    names = sorted(set(a_summary) | set(b_summary))
+    rows = []
+    for n in names:
+        a = a_summary.get(n, {})
+        b = b_summary.get(n, {})
+        rows.append([
+            n,
+            f"{a.get('calls', 0):,}", human_bytes(a.get("wire_bytes", 0.0)),
+            f"{b.get('calls', 0):,}", human_bytes(b.get("wire_bytes", 0.0)),
+            _signed_bytes(b.get("wire_bytes", 0.0)
+                          - a.get("wire_bytes", 0.0)),
+        ])
+    return format_table(rows, [
+        "Primitive", f"{a_name} calls", f"{a_name} wire",
+        f"{b_name} calls", f"{b_name} wire", "Δ wire"])
+
+
+# ---------------------------------------------------------------------------
 # paper Fig. 2/3 — communication-matrix heatmap (log scale), ASCII rendering
 # ---------------------------------------------------------------------------
 _SHADES = " .:-=+*#%@"

@@ -115,7 +115,7 @@ def analyze(
     arch: str,
     mesh_name: str,
     cost: dict,
-    hlo_text: str,
+    hlo_text,
     topo: MeshTopology,
     hw: HardwareSpec = V5E,
     model_flops: float = 0.0,
@@ -129,16 +129,24 @@ def analyze(
     (:mod:`repro.core.hlo_cost`) — ``cost_analysis`` counts while bodies once
     and is kept only as the ``cost_analysis_*`` reference fields.
 
+    ``hlo_text`` is one compiled module, or a list of modules (a
+    multi-capture session): each module is analyzed **separately** —
+    computation names are only unique within a module, so concatenating
+    them would clobber same-named computations and drop loop trip counts
+    — and the per-module FLOPs / bytes / collectives are summed.
+
     ``link_utilization`` lets a caller that already projected the program
     onto physical links (e.g. ``CommReport.link_utilization()``) reuse it
     for the per-tier busy diagnostics instead of re-routing the placed
     edges here (cost is proportional to placed edges x route hops).
     """
     from . import hlo_cost as hc_mod
-    hc = hc_mod.analyze_hlo(hlo_text)
-    ops = hc.collectives
-    flops = hc.flops
-    byts = hc.bytes_hbm
+    texts = [hlo_text] if isinstance(hlo_text, str) else list(hlo_text)
+    hcs = [hc_mod.analyze_hlo(t) for t in texts]
+    ops = [op for hc in hcs for op in hc.collectives]
+    flops = sum(hc.flops for hc in hcs)
+    byts = sum(hc.bytes_hbm for hc in hcs)
+    bytes_logical = sum(hc.bytes_logical for hc in hcs)
     wire = _sum_wire_bytes_per_device(ops, topo.num_devices, algorithm)
 
     compute_s = flops / hw.peak_flops_bf16
@@ -160,7 +168,7 @@ def analyze(
     mem = dict(memory_stats or {})
     mem["cost_analysis_flops"] = float(cost.get("flops", 0.0))
     mem["cost_analysis_bytes"] = float(cost.get("bytes accessed", 0.0))
-    mem["hlo_bytes_logical"] = hc.bytes_logical
+    mem["hlo_bytes_logical"] = bytes_logical
     memory_stats = mem
     report = RooflineReport(
         arch=arch,

@@ -1,0 +1,162 @@
+"""Lazy, memoized algorithm-bound views of a collective-op stream.
+
+A :class:`CommView` owns ONE ``(algorithm, topology)`` binding of a set of
+compiled ops and every artifact derived from it -- the ``(d+1)^2`` matrix,
+per-primitive matrices, the Table-2/3 summary, link utilization, per-tier
+collective seconds, overlap bounds, roofline inputs.  Each artifact is
+computed on first access and memoized, so consumers stop threading
+``algorithm=None, topo=...`` through every call: bind once, read many.
+
+Re-binding is free until read: ``view.rebind("tree")`` shares the same op
+list and recomputes nothing until an artifact is touched -- the cheap way
+to compare ring vs tree vs hierarchical for one program (no recompilation,
+no eager ``dataclasses.replace`` churn).
+
+Views are produced by :meth:`repro.core.session.MonitorSession.view`
+(whole-session or per-phase) and :meth:`repro.core.monitor.CommReport.view`
+(including loaded/cached reports); building one directly from a plain op
+list works too.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import numpy as np
+
+from . import comm_matrix, cost_models, hlo_parser
+from .events import CollectiveOp, HostTransfer
+from .topology import MeshTopology
+
+
+def build_view(ops, num_devices: int, algorithm: str,
+               topo: Optional[MeshTopology], host_transfers,
+               *, phase: Optional[str], known_phases, label: str):
+    """Construct the :class:`CommView` for one ``(algorithm, phase)``
+    binding -- the shared filter/validation behind both
+    ``MonitorSession.view`` and ``CommReport.view`` (one implementation,
+    so session and snapshot views cannot diverge).
+
+    ``phase=None`` binds everything; a named phase filters ops and host
+    transfers by their tag and must be one of ``known_phases``.
+    """
+    if phase is not None:
+        known = list(known_phases)
+        if phase not in known:
+            raise KeyError(
+                f"unknown phase {phase!r}; known phases: {known}")
+        ops = [op for op in ops if op.phase == phase]
+        host_transfers = [t for t in host_transfers if t.phase == phase]
+    return CommView(ops, num_devices, algorithm=algorithm, topo=topo,
+                    host_transfers=host_transfers,
+                    label=f"{label}:{phase or 'all'}")
+
+
+class CommView:
+    """One ``(ops, algorithm, topology)`` binding; every derived artifact
+    lazy and memoized.
+
+    The view never mutates its inputs: ``rebind`` shares the same op list
+    under a different algorithm with a fresh memo, and the memoized arrays
+    are handed out by reference (treat them as read-only).
+    """
+
+    def __init__(self, ops: Iterable[CollectiveOp], num_devices: int, *,
+                 algorithm: str = "ring",
+                 topo: Optional[MeshTopology] = None,
+                 host_transfers: Iterable[HostTransfer] = (),
+                 label: str = ""):
+        cost_models.validate_algorithm(algorithm)
+        self.ops = list(ops)
+        self.num_devices = int(num_devices)
+        self.algorithm = algorithm
+        self.topo = topo
+        self.host_transfers = list(host_transfers)
+        self.label = label
+        self._memo: dict = {}
+
+    def __repr__(self) -> str:
+        tag = f" {self.label!r}" if self.label else ""
+        return (f"CommView({len(self.ops)} ops, {self.num_devices} devices, "
+                f"algorithm={self.algorithm!r}{tag})")
+
+    def _cached(self, key: str, build):
+        if key not in self._memo:
+            self._memo[key] = build()
+        return self._memo[key]
+
+    def rebind(self, algorithm: str) -> "CommView":
+        """Same ops/topology under another algorithm (fresh memo, no
+        recompilation -- compilation never depended on the algorithm)."""
+        if algorithm == self.algorithm:
+            return self
+        return CommView(self.ops, self.num_devices, algorithm=algorithm,
+                        topo=self.topo, host_transfers=self.host_transfers,
+                        label=self.label)
+
+    # -- byte accounting ---------------------------------------------------
+    @property
+    def matrix(self) -> np.ndarray:
+        """``(d+1)^2`` bytes-sent matrix (host transfers in row/col 0)."""
+        def build():
+            mat = comm_matrix.matrix_for_ops(
+                self.ops, self.num_devices, self.algorithm, topo=self.topo)
+            if self.host_transfers:
+                comm_matrix.add_host_transfers(mat, self.host_transfers)
+            return mat
+        return self._cached("matrix", build)
+
+    @property
+    def per_primitive(self) -> dict[str, np.ndarray]:
+        """Paper Fig. 3: one matrix per collective primitive."""
+        return self._cached("per_primitive", lambda: (
+            comm_matrix.per_primitive_matrices(
+                self.ops, self.num_devices, self.algorithm, topo=self.topo)))
+
+    @property
+    def summary(self) -> dict:
+        """Paper Table-2/3 per-kind calls / payload / wire bytes."""
+        return self._cached("summary", lambda: hlo_parser.summarize(
+            self.ops, self.algorithm, topo=self.topo))
+
+    def total_wire_bytes(self) -> float:
+        """Global bytes-on-the-wire across all devices."""
+        return self._cached("total_wire_bytes", lambda: (
+            hlo_parser.total_wire_bytes(self.ops, self.algorithm,
+                                        topo=self.topo)))
+
+    # -- time models -------------------------------------------------------
+    def collective_seconds(self) -> float:
+        """Serialized collective time (0.0 without a topology)."""
+        ici, dcn = self.collective_seconds_split()
+        return ici + dcn
+
+    def collective_seconds_split(self) -> tuple[float, float]:
+        """Per-tier serialized collective time ``(ici_s, dcn_s)``."""
+        def build():
+            if self.topo is None:
+                return 0.0, 0.0
+            return cost_models.total_time_split(self.ops, self.topo,
+                                                self.algorithm)
+        return self._cached("seconds_split", build)
+
+    def collective_overlap_seconds(self) -> float:
+        """Tier-overlapped communication time: ``max(ici_s, dcn_s)``."""
+        return max(self.collective_seconds_split())
+
+    # -- physical-link view ------------------------------------------------
+    def link_utilization(self):
+        """Per-physical-link byte counts (None without a topology)."""
+        def build():
+            if self.topo is None:
+                return None
+            return comm_matrix.project_links(self.matrix, self.topo)
+        return self._cached("link_utilization", build)
+
+    def link_matrix(self):
+        lu = self.link_utilization()
+        return None if lu is None else lu.matrix()
+
+    def link_seconds(self) -> float:
+        """Contention-aware bound: the bottleneck link's bytes/bandwidth."""
+        lu = self.link_utilization()
+        return 0.0 if lu is None else lu.bottleneck_seconds()

@@ -28,10 +28,9 @@ import time
 from typing import Callable, Optional
 
 from repro.core import monitor_fn
+from repro.core.cost_models import ALGORITHMS, validate_algorithm
 from repro.core.report_cache import ReportCache, cache_key
 from repro.core.reporter import format_table, human_bytes
-
-ALGORITHMS = ("ring", "tree", "hierarchical")
 DEFAULT_MESHES = ("4x2",)
 
 
@@ -251,46 +250,59 @@ class SweepResult:
     compiles: int
     artifacts: dict[str, str] = dataclasses.field(default_factory=dict)
 
-    def summary_table(self, by_link: bool = False) -> str:
+    def summary_table(self, by_link: bool = False,
+                      by_phase: bool = False) -> str:
         """One row per cell; ``by_link=True`` adds the physical-link view
         (busiest link, its contention-aware bottleneck ms, and the
         tier-overlapped communication time ici ∥ dcn -- the ``--by-link``
-        CLI columns)."""
+        CLI columns).  ``by_phase=True`` expands each cell into one row per
+        session phase (single-phase reports keep one row, labelled with
+        their phase), with all statistics computed from that phase's
+        :class:`~repro.core.views.CommView`."""
         rows = []
         for rep in self.reports:
-            total_wire = sum(r.get("wire_bytes", 0.0)
-                             for r in rep.compiled_summary.values())
-            calls = sum(r.get("calls", 0)
-                        for r in rep.compiled_summary.values())
-            dominant = max(
-                rep.compiled_summary,
-                key=lambda k: rep.compiled_summary[k].get("wire_bytes", 0.0),
-            ) if rep.compiled_summary else "-"
-            row = [
-                rep.meta.get("config", rep.name),
-                rep.meta.get("mesh", f"{rep.num_devices}dev"),
-                rep.algorithm,
-                f"{rep.num_devices}",
-                f"{calls:,}",
-                human_bytes(total_wire),
-                f"{rep.collective_seconds(rep.algorithm) * 1e3:.3f}",
-                dominant,
-                rep.meta.get("source", "?"),
-            ]
-            if by_link:
-                lu = rep.link_utilization()
-                bn = lu.bottleneck() if lu is not None else None
-                overlap = rep.collective_overlap_seconds() \
-                    if rep.topo is not None else 0.0
-                row[8:8] = ([bn[0].name, f"{bn[1] * 1e3:.3f}",
-                             f"{overlap * 1e3:.3f}"]
-                            if bn else ["-", "-", "-"])
-            rows.append(row)
-        header = ["config", "mesh", "algorithm", "devices",
-                  "collective calls", "wire bytes", "collective ms",
-                  "dominant primitive", "source"]
+            targets = [(None, rep.view())]
+            if by_phase and rep.phase_names():
+                targets = [(ph, rep.view(phase=ph))
+                           for ph in rep.phase_names()]
+            for ph, view in targets:
+                summary = view.summary
+                total_wire = sum(r.get("wire_bytes", 0.0)
+                                 for r in summary.values())
+                calls = sum(r.get("calls", 0) for r in summary.values())
+                dominant = max(
+                    summary,
+                    key=lambda k: summary[k].get("wire_bytes", 0.0),
+                ) if summary else "-"
+                row = [
+                    rep.meta.get("config", rep.name),
+                    rep.meta.get("mesh", f"{rep.num_devices}dev"),
+                    rep.algorithm,
+                ]
+                if by_phase:
+                    row.append(ph or "-")
+                row += [
+                    f"{rep.num_devices}",
+                    f"{calls:,}",
+                    human_bytes(total_wire),
+                    f"{view.collective_seconds() * 1e3:.3f}",
+                    dominant,
+                    rep.meta.get("source", "?"),
+                ]
+                if by_link:
+                    lu = view.link_utilization()
+                    bn = lu.bottleneck() if lu is not None else None
+                    overlap = view.collective_overlap_seconds()
+                    row[-1:-1] = ([bn[0].name, f"{bn[1] * 1e3:.3f}",
+                                   f"{overlap * 1e3:.3f}"]
+                                  if bn else ["-", "-", "-"])
+                rows.append(row)
+        header = ["config", "mesh", "algorithm"] \
+            + (["phase"] if by_phase else []) \
+            + ["devices", "collective calls", "wire bytes", "collective ms",
+               "dominant primitive", "source"]
         if by_link:
-            header[8:8] = ["busiest link", "link ms", "overlap ms"]
+            header[-1:-1] = ["busiest link", "link ms", "overlap ms"]
         return format_table(rows, header)
 
 
@@ -315,9 +327,7 @@ def run_sweep(
         raise KeyError(
             f"unknown config(s) {unknown}; known: {sorted(registry)}")
     for alg in algorithms:
-        if alg not in ALGORITHMS:
-            raise ValueError(
-                f"unknown algorithm {alg!r}; known: {ALGORITHMS}")
+        validate_algorithm(alg)
     cache = cache or ReportCache()
     result = SweepResult(reports=[], failures=[], cache_hits=0, compiles=0)
 

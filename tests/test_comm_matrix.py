@@ -91,6 +91,88 @@ class TestMatrixInvariants:
         assert tree[1, 2] > 0 and tree[1, 3] > 0 and tree[1, 4] == 0
 
 
+KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+         "collective-broadcast", "all-to-all", "collective-permute")
+
+
+@st.composite
+def op_streams(draw):
+    """Randomized op streams over 8 devices: mixed kinds, group partitions
+    of every dividing size, permute pair schedules, loop-trip weights."""
+    num_devices = 8
+    ops = []
+    for _ in range(draw(st.integers(1, 8))):
+        kind = draw(st.sampled_from(KINDS))
+        elems = draw(st.integers(1, 2048))
+        weight = float(draw(st.integers(1, 64)))
+        if kind == "collective-permute":
+            perm = draw(st.permutations(range(num_devices)))
+            k = draw(st.integers(1, num_devices))
+            pairs = [(perm[i], perm[(i + 1) % num_devices])
+                     for i in range(k)]
+            op = mk_op(kind, (elems,), [], pairs=pairs)
+        else:
+            gsize = draw(st.sampled_from([2, 4, 8]))
+            devs = draw(st.permutations(range(num_devices)))
+            groups = [sorted(devs[i:i + gsize])
+                      for i in range(0, num_devices, gsize)]
+            op = mk_op(kind, (elems,), groups)
+        op.weight = weight
+        ops.append(op)
+    return ops
+
+
+class TestVectorizedBuilder:
+    """The COO-batched ``matrix_for_ops`` must match the per-op/per-edge
+    reference loop on randomized op streams -- every kind, every algorithm,
+    with and without a multi-pod topology."""
+
+    @given(ops=op_streams(),
+           algorithm=st.sampled_from(["ring", "tree", "hierarchical"]))
+    @settings(max_examples=80, deadline=None)
+    def test_coo_matches_loop(self, ops, algorithm):
+        import warnings
+        from repro.core.topology import MeshTopology
+        topo = MeshTopology(axis_names=("pod", "data", "model"),
+                            axis_sizes=(2, 2, 2))
+        for t in (None, topo):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                vec = comm_matrix.matrix_for_ops(ops, 8, algorithm, topo=t)
+                ref = comm_matrix.matrix_for_ops_reference(
+                    ops, 8, algorithm, topo=t)
+            np.testing.assert_allclose(vec, ref, rtol=1e-12)
+
+    @given(ops=op_streams())
+    @settings(max_examples=30, deadline=None)
+    def test_edge_arrays_match_edge_tuples(self, ops):
+        """op_edge_arrays and op_edges place the same aggregate traffic
+        per (src, dst) pair (edge order and splitting may differ)."""
+        for op in ops:
+            agg_t: dict = {}
+            for s, d, b in comm_matrix.op_edges(op):
+                agg_t[(s, d)] = agg_t.get((s, d), 0.0) + b
+            src, dst, val = comm_matrix.op_edge_arrays(op)
+            agg_a: dict = {}
+            for s, d, b in zip(src.tolist(), dst.tolist(), val.tolist()):
+                agg_a[(s, d)] = agg_a.get((s, d), 0.0) + b
+            assert set(agg_t) == set(agg_a)
+            for key in agg_t:
+                assert agg_t[key] == pytest.approx(agg_a[key])
+
+    def test_flush_batching_boundary(self):
+        """Streams larger than one flush batch accumulate identically
+        (exercises the buffered-flush and the oversized-single-op paths:
+        a 192-wide all-to-all alone exceeds ``_FLUSH_EDGES``)."""
+        d = 192
+        big = mk_op("all-to-all", (4096,), [list(range(d))])
+        assert d * (d - 1) > comm_matrix._FLUSH_EDGES
+        ops = [mk_op("all-reduce", (256,), [[0, 1, 2, 3]])] * 5000 + [big]
+        vec = comm_matrix.matrix_for_ops(ops, d)
+        ref = comm_matrix.matrix_for_ops_reference(ops, d)
+        np.testing.assert_allclose(vec, ref)
+
+
 class TestReporter:
     def test_heatmap_renders(self):
         from repro.core import reporter

@@ -94,17 +94,17 @@ class TestRoundTrip:
             sum(r["payload_bytes"] for r in report.compiled_summary.values())
 
 
-class TestSchemaV3:
-    """Physical-link + overlap sections (schema v3) and v1/v2
-    backward-compat loads."""
+class TestSchemaSections:
+    """Physical-link + overlap sections (since schema v3), the v4 phase
+    section, and v1/v2/v3 backward-compat loads."""
 
     pytestmark = pytest.mark.compile  # module fixture compiles
 
-    def test_v3_writes_link_sections(self, report, tmp_path):
-        p = str(tmp_path / "v3.json")
+    def test_v4_writes_link_sections(self, report, tmp_path):
+        p = str(tmp_path / "v4.json")
         report.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v3"
+        assert d["schema"] == "repro.comm_report.v4"
         assert len(d["link_matrix"]) == report.num_devices + 1
         assert d["links"], "per-link rows missing"
         for row in d["links"]:
@@ -113,8 +113,18 @@ class TestSchemaV3:
             assert row["kind"] in ("ici", "dcn")
         assert "ici" in d["link_summary"]
 
-    def test_v3_writes_overlap_sections(self, report, tmp_path):
-        p = str(tmp_path / "v3.json")
+    def test_v4_writes_phase_section(self, report, tmp_path):
+        """monitor_fn is a single-phase session: its snapshot carries one
+        'main' phase record and phase tags on every op."""
+        p = str(tmp_path / "v4.json")
+        report.save(p)
+        d = json.loads(open(p).read())
+        assert [ph["name"] for ph in d["phases"]] == ["main"]
+        assert d["phases"][0]["num_captures"] == 1
+        assert all(op["phase"] == "main" for op in d["ops"])
+
+    def test_v4_writes_overlap_sections(self, report, tmp_path):
+        p = str(tmp_path / "v4.json")
         report.save(p)
         d = json.loads(open(p).read())
         assert "ici" in d["link_tiers"]
@@ -128,17 +138,20 @@ class TestSchemaV3:
             ov["collective_ici_s"] + ov["collective_dcn_s"])
 
     @pytest.mark.parametrize("old_schema", ["repro.comm_report.v1",
-                                            "repro.comm_report.v2"])
+                                            "repro.comm_report.v2",
+                                            "repro.comm_report.v3"])
     def test_old_file_loads_and_rederives_links(self, report, tmp_path,
                                                 old_schema):
-        """Files written by previous schemas (no link/overlap sections)
-        load fine; the derived views recompute from ops+topo."""
+        """Files written by previous schemas (no link/overlap/phase
+        sections) load fine; the derived views recompute from ops+topo."""
         p = str(tmp_path / "old.json")
         report.save(p)
         d = json.loads(open(p).read())
         for key in ("links", "link_matrix", "link_summary", "link_tiers",
-                    "overlap"):
+                    "overlap", "phases", "hlo_gz"):
             d.pop(key, None)
+        for op in d["ops"]:
+            op.pop("phase", None)
         d["schema"] = old_schema
         with open(p, "w") as f:
             json.dump(d, f)
