@@ -61,7 +61,7 @@ def main():
         for alg in ("ring", "tree", "hierarchical"):
             lu = rep.link_utilization(alg)
             bn = lu.bottleneck()
-            matrix_bytes = rep.with_algorithm(alg).matrix[1:, 1:].sum()
+            matrix_bytes = rep.view(alg).matrix[1:, 1:].sum()
             ici_s, dcn_s = rep.collective_seconds_split(alg)
             overlap_ms = max(ici_s, dcn_s) * 1e3
             serial_ms = (ici_s + dcn_s) * 1e3

@@ -1,8 +1,11 @@
-"""Serve a small LM with batched requests and a monitored decode step.
+"""Serve a small LM with batched requests and a monitored serve session.
 
 Uses the qwen3-family reduced config on a (data=4, model=2) mesh: prefill
-the prompt batch, decode N tokens, and print the decode step's
-communication profile (TP psums + sequence-sharded KV cache).
+the prompt batch, decode N tokens, then monitor prefill AND decode as the
+two named phases of one :class:`MonitorSession` -- the per-phase tables
+show the prefill all-gather-heavy profile next to the decode TP-psum
+profile (the same cells ``python -m repro sweep --configs serve
+--by-phase`` sweeps).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--tokens 24]
 """
@@ -19,10 +22,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import monitor_fn
+from repro.core import MonitorSession
 from repro.models import build_model
 from repro.parallel import Sharder
-from repro.serve import generate
+from repro.serve import ServeConfig, cache_shardings, generate
 from repro.compat import make_mesh
 
 
@@ -52,17 +55,34 @@ def main():
           f"({args.batch*args.tokens/dt:.1f} tok/s incl. compile)")
     print("sample completion ids:", out[0, :12].tolist())
 
-    # decode-step communication profile (ShapeDtypeStructs: no allocation)
-    cache_shapes = model.cache_shapes(args.batch,
-                                      args.prompt_len + args.tokens)
-    rep = monitor_fn(
-        lambda p, c, b: model.decode_step(p, c, b, shd),
-        model.shapes(), cache_shapes,
-        {"tokens": jax.ShapeDtypeStruct((args.batch, 1), jnp.int32)},
-        mesh=mesh, name=f"decode[{cfg.name}]")
+    # prefill/decode communication profile: one two-phase session over
+    # ShapeDtypeStruct stand-ins (no allocation, nothing executes)
+    max_len = args.prompt_len + args.tokens
+    scfg = ServeConfig(max_len=max_len, batch=args.batch)
+    cache_sh = cache_shardings(model, scfg, shd)
+    cache_shapes = model.cache_shapes(args.batch, max_len)
+    sess = MonitorSession(mesh=mesh, name=f"serve[{cfg.name}]")
+    with sess:
+        with sess.phase("prefill"):
+            sess.capture(
+                lambda p, b: model.prefill(p, b, shd, max_len=max_len),
+                model.shapes(),
+                {"tokens": jax.ShapeDtypeStruct(
+                    (args.batch, args.prompt_len), jnp.int32)},
+                name="prefill", out_shardings=(None, cache_sh))
+        with sess.phase("decode"):
+            sess.capture(
+                lambda p, c, b: model.decode_step(p, c, b, shd),
+                model.shapes(), cache_shapes,
+                {"tokens": jax.ShapeDtypeStruct((args.batch, 1),
+                                                jnp.int32)},
+                name="decode", in_shardings=(None, cache_sh, None),
+                out_shardings=(None, cache_sh))
+    rep = sess.report()
     print()
-    print(rep.usage_table())
-    print(rep.heatmap())
+    print(rep.phase_table())
+    print(rep.phase_diff("prefill", "decode"))
+    print(rep.heatmap(phase="decode"))
     print("serving example OK")
 
 

@@ -8,6 +8,12 @@ from .comm_matrix import (LinkUtilization, add_host_transfers,
                           link_utilization_for_ops, matrix_for_ops,
                           matrix_for_ops_reference, op_edge_arrays, op_edges,
                           per_primitive_matrices, project_links)
+# NOTE: the decompose() function itself is NOT re-exported at package
+# level -- binding the name here would shadow the repro.core.decompose
+# submodule attribute (import it via `from repro.core.decompose import
+# decompose`); only the IR types and the warning are lifted.
+from .decompose import (CollectiveSchedule, CommPhase,
+                        HierarchicalFallbackWarning)
 from .cost_models import (ALGORITHMS, collective_time, contention_time,
                           device_send_bytes, table1_allreduce_bytes,
                           validate_algorithm, wire_bytes_per_rank)
@@ -28,6 +34,7 @@ __all__ = [
     "matrix_for_ops", "matrix_for_ops_reference", "op_edges",
     "op_edge_arrays", "per_primitive_matrices", "add_host_transfers",
     "LinkUtilization", "project_links", "link_utilization_for_ops",
+    "CollectiveSchedule", "CommPhase", "HierarchicalFallbackWarning",
     "ALGORITHMS", "validate_algorithm",
     "wire_bytes_per_rank", "collective_time", "table1_allreduce_bytes",
     "contention_time", "device_send_bytes",

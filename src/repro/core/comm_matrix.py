@@ -3,42 +3,42 @@
 A ``(d+1) x (d+1)`` matrix where entry ``(i+1, j+1)`` is the number of bytes
 device ``i`` sends to device ``j``; row/column 0 is reserved for the host
 (paper Fig. 2).  Matrices are built from compiled :class:`CollectiveOp` lists
-with an algorithm- and topology-faithful edge model:
+by **placing the op's decomposition schedule**
+(:func:`repro.core.decompose.decompose`) -- the same phase IR that drives
+billing and timing, so placement cannot diverge from the cost models:
 
-* ring collectives stream **both directions** of the ring (half the per-rank
-  bytes to each neighbour -- the bidirectional torus ring whose bandwidth
-  ``ring_bw_per_chip`` already credits, so the link projection no longer
-  piles 2x the bytes onto the +1 links),
-* tree collectives place traffic on binary-tree edges with per-role amounts
-  (root sends S per child, leaves send up only) for all-reduce, all-gather,
-  reduce-scatter and broadcast,
-* hierarchical all-reduce / all-gather / reduce-scatter / broadcast
-  decompose a cross-pod group into intra-pod ring edges plus a cross-pod
-  DCN shard exchange -- the per-kind placements that match
-  ``wire_bytes_per_rank(..., "hierarchical")``; a group the shared
-  predicate (``cost_models.hierarchical_decomposition``) refuses falls
-  back to flat ring **with a** :class:`HierarchicalFallbackWarning` (and
-  ``collective_time`` refuses to bill the decomposition in exactly the
-  same case),
-* collective-permute uses its explicit source-target pairs,
+* ring phases stream **both directions** of their rings (half the phase's
+  per-rank bytes to each neighbour -- the bidirectional torus ring whose
+  bandwidth ``ring_bw_per_chip`` credits); multi-axis single-pod groups
+  arrive as one ring phase per torus axis, so every edge lands on a
+  physical neighbour link (no multi-hop transit inflation inside a pod),
+* tree phases place per-role traffic on binary-tree edges (root sends S
+  per child, leaves send up only),
+* hierarchical schedules place intra-pod ring phases (per-axis when the
+  subgroups allow) plus the cross-pod DCN shard exchange; a group the
+  shared predicate refuses falls back to flat ring **with a**
+  :class:`HierarchicalFallbackWarning` (billing follows the same fallback),
+* collective-permute places its explicit source-target pairs,
 * all-to-all places uniform pairwise traffic.
 
 Every matrix row sum equals ``cost_models.device_send_bytes`` times the op
-weight (the matrix/model consistency contract, enforced by tests), and any
-matrix can be **projected onto physical links** (:func:`project_links`):
-each logical edge is routed over the ICI torus / DCN uplinks of a
-:class:`~repro.core.topology.MeshTopology`, yielding per-link byte counts,
-the bottleneck link, and a contention-aware time bound.
+weight (the matrix/model consistency contract -- both read the same
+schedule), and any matrix can be **projected onto physical links**
+(:func:`project_links`): each logical edge is routed over the ICI torus /
+DCN uplinks of a :class:`~repro.core.topology.MeshTopology`, yielding
+per-link byte counts, the bottleneck link, and a contention-aware time
+bound.
 
-**Vectorized accumulation.**  :func:`matrix_for_ops` generates each op's
-edges as numpy COO arrays (:func:`op_edge_arrays`) and batches them into
-edge buffers flushed with a single ``np.add.at`` per flush, so a session
-with thousands of weighted ops on a large mesh builds its matrix without a
-per-edge Python loop.  The scalar placement (:func:`op_edges`, feeding
-:func:`matrix_for_ops_reference`) is kept as the readable oracle: a
-property test pins the two paths equal on randomized op streams, and
-``benchmarks/matrix_build.py`` tracks the speedup in
-``artifacts/BENCH_matrix.json``.
+**Vectorized accumulation.**  :func:`matrix_for_ops` renders each op's
+schedule as numpy COO arrays (:func:`op_edge_arrays`; the schedule batches
+same-size replica groups into shared phases) and batches them into edge
+buffers flushed with a single ``np.add.at`` per flush, so a session with
+thousands of weighted ops on a large mesh builds its matrix without a
+per-edge Python loop.  The retired pre-schedule placement survives only as
+:func:`matrix_for_ops_reference` -- the legacy per-kind, per-edge oracle
+that pins schedule-derived matrices equal to the old loop on single-axis
+groups (``benchmarks/matrix_build.py`` also measures the COO path against
+it).
 """
 from __future__ import annotations
 
@@ -49,23 +49,20 @@ from typing import Iterable, Optional
 import numpy as np
 
 from .events import CollectiveOp, HostTransfer
-from . import cost_models
+from . import cost_models, decompose as decompose_mod
+from .decompose import HierarchicalFallbackWarning, decompose  # noqa: F401
 from .topology import DCN_FABRIC, Link, MeshTopology
 
 
-class HierarchicalFallbackWarning(UserWarning):
-    """``algorithm="hierarchical"`` was requested for a cross-pod group the
-    shared predicate cannot decompose (uneven pod split, or a kind outside
-    ``cost_models.HIERARCHICAL_KINDS``); the placement fell back to flat
-    ring edges and ``collective_time`` bills that same fallback."""
-
-
-def _ring_edges(group: list[int],
-                per_rank: float) -> list[tuple[int, int, float]]:
+# ---------------------------------------------------------------------------
+# Scalar edge placement: the schedule rendered as (src, dst, bytes) tuples.
+# ---------------------------------------------------------------------------
+def _ring_edges(group, per_rank: float) -> list[tuple[int, int, float]]:
     """Bidirectional ring: each member streams half its per-rank bytes to
     each ring neighbour (the torus ring algorithm uses both directions of
     the axis links -- the bandwidth ``ring_bw_per_chip`` credits).  On a
     2-member ring both halves reach the same peer and accumulate."""
+    group = list(group)
     n = len(group)
     half = 0.5 * per_rank
     out: list[tuple[int, int, float]] = []
@@ -75,128 +72,67 @@ def _ring_edges(group: list[int],
     return out
 
 
-_TREE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
-               "collective-broadcast")
-
-
-def _tree_placement(group: list[int], kind: str,
+def _tree_placement(group, kind: str,
                     s: float) -> list[tuple[int, int, float]]:
-    """Per-edge bytes on the implicit binary tree (heap layout).
-
-    Uses the same structure as :func:`cost_models.tree_subtree_sizes` so
-    row sums reproduce :func:`cost_models.device_send_bytes` exactly:
-
-    * all-reduce: S up (reduce) and S down (broadcast) every edge,
-    * broadcast: S down only,
-    * all-gather: a child sends its subtree's shards up, a parent sends
-      everything the child's subtree lacks down,
-    * reduce-scatter: the time-reversed all-gather.
-    """
+    """Per-edge bytes on the implicit binary tree (heap layout), resolved
+    from the shared :func:`repro.core.decompose.tree_edge_profile`."""
+    group = list(group)
     n = len(group)
-    sizes = cost_models.tree_subtree_sizes(n)
+    up, down = decompose_mod.tree_edge_profile(kind, s, n)
     edges: list[tuple[int, int, float]] = []
     for i in range(1, n):
-        parent = group[(i - 1) // 2]
-        child = group[i]
-        if kind == "all-reduce":
-            up, down = s, s
-        elif kind == "collective-broadcast":
-            up, down = 0.0, s
-        elif kind == "all-gather":
-            up, down = sizes[i] * s / n, (n - sizes[i]) * s / n
-        else:  # reduce-scatter
-            up, down = (n - sizes[i]) * s / n, sizes[i] * s / n
-        if up:
-            edges.append((child, parent, up))
-        if down:
-            edges.append((parent, child, down))
+        parent, child = group[(i - 1) // 2], group[i]
+        if up[i - 1]:
+            edges.append((child, parent, float(up[i - 1])))
+        if down[i - 1]:
+            edges.append((parent, child, float(down[i - 1])))
     return edges
 
 
-def _hierarchical_placement(group: list[int], kind: str, s: float,
-                            topo: MeshTopology) -> Optional[
-                                list[tuple[int, int, float]]]:
-    """Intra-pod ring edges + cross-pod DCN shard exchange, per kind.
-
-    Phase placement matching ``wire_bytes_per_rank(..., "hierarchical",
-    pods=p)`` for every kind in ``cost_models.HIERARCHICAL_KINDS``:
-    bidirectional ring phases inside each pod subgroup (``2*(m-1)/m*S`` per
-    member for all-reduce's RS+AG pair, ``(m-1)/m*S`` for the one-phase
-    kinds) and a ring exchange across the ``p`` same-index members of the
-    other pods (``2*(p-1)/n*S`` resp. ``(p-1)/n*S`` per member -- the only
-    bytes that cross DCN).  Returns None when
-    ``cost_models.hierarchical_decomposition`` refuses the triple (uneven
-    pod split / unsupported kind): the caller falls back to the plain ring
-    placement, and ``collective_time_split`` refuses the decomposition in
-    exactly the same case -- one shared predicate, no divergence.
-    """
-    dec = cost_models.hierarchical_decomposition(kind, group, topo)
-    if dec is None:
-        return None
-    p, m, subs = dec
-    phases = cost_models.hier_phases(kind)
-    edges: list[tuple[int, int, float]] = []
-    if m > 1:
-        intra_per_rank = phases * (m - 1) * s / m
-        for sub in subs:
-            edges.extend(_ring_edges(sub, intra_per_rank))
-    cross_per_rank = phases * (p - 1) * s / len(group)
-    for j in range(m):
-        ring = [subs[k][j] for k in range(p)]
-        edges.extend(_ring_edges(ring, cross_per_rank))
-    return edges
+def _phase_edges(ph) -> list[tuple[int, int, float]]:
+    """Scalar edges of ONE schedule phase."""
+    if ph.structure == "pairs":
+        if ph.pairs is None:
+            return []
+        return [(int(a), int(b), ph.payload) for a, b in ph.pairs]
+    if ph.groups is None:
+        return []
+    G = np.atleast_2d(ph.groups)
+    out: list[tuple[int, int, float]] = []
+    if ph.structure == "ring":
+        for row in G:
+            out += _ring_edges(row.tolist(), ph.bytes_per_rank)
+    elif ph.structure == "tree":
+        for row in G:
+            out += _tree_placement(row.tolist(), ph.kind, ph.payload)
+    elif ph.structure == "a2a":
+        n = G.shape[1]
+        block = ph.payload / (n * n)
+        for row in G:
+            members = row.tolist()
+            out += [(a, b, block) for a in members for b in members
+                    if a != b]
+    return out
 
 
 def op_edges(op: CollectiveOp, algorithm: str = "ring",
              topo: Optional[MeshTopology] = None) -> list[tuple[int, int, float]]:
     """``(src, dst, bytes)`` edges for ONE execution of ``op`` (weight not
-    applied) -- the scalar (per-edge tuple) placement.
+    applied) -- the scalar rendering of the op's decomposition schedule.
 
     Production matrix building goes through the vectorized
-    :func:`op_edge_arrays`; this readable twin is the oracle the property
-    test pins it against, and the per-edge baseline
-    :func:`matrix_for_ops_reference` accumulates from.
-
-    A hierarchical request for a cross-pod group the shared predicate
-    cannot decompose emits a :class:`HierarchicalFallbackWarning` and
-    places flat ring edges instead (silently degenerating is exactly the
-    matrix/model mismatch this module exists to expose).
+    :func:`op_edge_arrays`; both walk the same
+    :func:`~repro.core.decompose.decompose` output, and a property test
+    pins their aggregate traffic equal.  A hierarchical request for a
+    cross-pod group the shared predicate cannot decompose emits a
+    :class:`HierarchicalFallbackWarning` and places flat ring edges
+    instead (silently degenerating is exactly the matrix/model mismatch
+    this module exists to expose).
     """
+    sched = decompose(op, algorithm, topo)
     edges: list[tuple[int, int, float]] = []
-    if op.kind == "collective-permute":
-        nbytes = float(op.result_bytes) * op.num_groups
-        return [(src, dst, nbytes) for src, dst in op.source_target_pairs]
-    for group in op.replica_groups or [[]]:
-        n = len(group)
-        if n <= 1:
-            continue
-        s = float(op.payload_bytes)
-        if op.kind in ("all-to-all", "ragged-all-to-all"):
-            block = s / (n * n)
-            edges.extend((a, b, block)
-                         for a in group for b in group if a != b)
-            continue
-        if algorithm == "tree" and op.kind in _TREE_KINDS:
-            edges.extend(_tree_placement(group, op.kind, s))
-            continue
-        if algorithm == "hierarchical" and topo is not None:
-            placed = _hierarchical_placement(group, op.kind, s, topo)
-            if placed is not None:
-                edges.extend(placed)
-                continue
-            if op.kind in cost_models.HIERARCHICAL_KINDS \
-                    and topo.group_crosses_dcn(group):
-                warnings.warn(HierarchicalFallbackWarning(
-                    f"hierarchical {op.kind} over cross-pod group of {n} "
-                    "cannot decompose (uneven pod split); placing flat "
-                    "ring edges and billing the same fallback"),
-                    stacklevel=2)
-        # pods=1 is exact here: a decomposable hierarchical triple already
-        # placed above, and the ring/tree Table-1 entries ignore pods --
-        # so the degenerate value spares a pod-partition walk per group.
-        per_rank = cost_models.wire_bytes_per_rank(
-            op.kind, s, n, algorithm, pods=1)
-        edges.extend(_ring_edges(group, per_rank))
+    for ph in sched.phases:
+        edges += _phase_edges(ph)
     return edges
 
 
@@ -256,109 +192,68 @@ def _tree_edges_arr(groups, kind: str, s: float):
     if G.ndim == 1:
         G = G[None, :]
     k, n = G.shape
-    sizes = np.asarray(cost_models.tree_subtree_sizes(n), dtype=np.float64)
     pos = np.arange(1, n)
     parent = G[:, (pos - 1) // 2]                      # (k, n-1)
     child = G[:, 1:]
-    if kind == "all-reduce":
-        up = np.full(n - 1, float(s))
-        down = up
-    elif kind == "collective-broadcast":
-        up = np.zeros(n - 1)
-        down = np.full(n - 1, float(s))
-    elif kind == "all-gather":
-        up = sizes[1:] * s / n
-        down = (n - sizes[1:]) * s / n
-    else:  # reduce-scatter
-        up = (n - sizes[1:]) * s / n
-        down = sizes[1:] * s / n
+    up, down = decompose_mod.tree_edge_profile(kind, s, n)
     mu, md = up > 0, down > 0
     return (np.concatenate([child[:, mu].ravel(), parent[:, md].ravel()]),
             np.concatenate([parent[:, mu].ravel(), child[:, md].ravel()]),
             np.concatenate([np.tile(up[mu], k), np.tile(down[md], k)]))
 
 
-def _hier_edges_arr(group: list[int], kind: str, s: float,
-                    topo: MeshTopology):
-    """Array form of :func:`_hierarchical_placement` (same decomposition
-    predicate; None when it refuses and the caller must fall back)."""
-    dec = cost_models.hierarchical_decomposition(kind, group, topo)
-    if dec is None:
-        return None
-    p, m, subs = dec
-    phases = cost_models.hier_phases(kind)
-    sub_arr = np.asarray(subs, dtype=np.intp)        # (p, m)
-    parts = []
-    if m > 1:
-        parts.append(_ring_edges_arr(sub_arr, phases * (m - 1) * s / m))
-    # cross-pod rings over same-index members == columns of the partition
-    parts.append(_ring_edges_arr(sub_arr.T,
-                                 phases * (p - 1) * s / len(group)))
-    return _concat_edges(parts)
+def _a2a_edges_arr(groups, block: float):
+    """Uniform pairwise exchange for a batch of same-size groups."""
+    G = np.asarray(groups, dtype=np.intp)
+    if G.ndim == 1:
+        G = G[None, :]
+    k, n = G.shape
+    src = np.repeat(G, n, axis=1).ravel()
+    dst = np.tile(G, (1, n)).ravel()
+    keep = src != dst
+    return src[keep], dst[keep], np.full(k * n * (n - 1), block)
+
+
+def _phase_edge_arrays(ph):
+    """COO arrays of ONE schedule phase (the vectorized
+    :func:`_phase_edges`)."""
+    if ph.structure == "pairs":
+        if ph.pairs is None:
+            return _EMPTY_EDGES
+        return (ph.pairs[:, 0], ph.pairs[:, 1],
+                np.full(len(ph.pairs), ph.payload))
+    if ph.groups is None:
+        return _EMPTY_EDGES
+    if ph.structure == "ring":
+        return _ring_edges_arr(ph.groups, ph.bytes_per_rank)
+    if ph.structure == "tree":
+        return _tree_edges_arr(ph.groups, ph.kind, ph.payload)
+    if ph.structure == "a2a":
+        n = int(np.atleast_2d(ph.groups).shape[1])
+        return _a2a_edges_arr(ph.groups, ph.payload / (n * n))
+    return _EMPTY_EDGES
+
+
+def schedule_edge_arrays(sched):
+    """``(src, dst, bytes)`` COO arrays of one whole schedule."""
+    if not sched.phases:
+        return _EMPTY_EDGES
+    return _concat_edges([_phase_edge_arrays(ph) for ph in sched.phases])
 
 
 def op_edge_arrays(op: CollectiveOp, algorithm: str = "ring",
                    topo: Optional[MeshTopology] = None):
     """``(src, dst, bytes)`` numpy arrays for ONE execution of ``op``.
 
-    The vectorized twin of :func:`op_edges` -- identical edges (property-
-    tested), produced as COO arrays so :func:`matrix_for_ops` accumulates
-    them without a per-edge Python loop.  Same-size replica groups are
-    batched into one 2D array per size class (an op with 32 groups of 8
-    costs the same handful of numpy calls as one group would -- tiny
-    per-group arrays are where vectorization would otherwise lose to the
-    scalar loop).  Emits the same :class:`HierarchicalFallbackWarning` in
-    the same refusal case.
+    The vectorized twin of :func:`op_edges` -- identical aggregate traffic
+    (property-tested), produced as COO arrays so :func:`matrix_for_ops`
+    accumulates them without a per-edge Python loop.  The schedule already
+    batches same-size replica groups into shared phases (an op with 32
+    groups of 8 costs the same handful of numpy calls as one group would),
+    and emits the same :class:`HierarchicalFallbackWarning` in the same
+    refusal case.
     """
-    if op.kind == "collective-permute":
-        if not op.source_target_pairs:
-            return _EMPTY_EDGES
-        pairs = np.asarray(op.source_target_pairs, dtype=np.intp)
-        nbytes = float(op.result_bytes) * op.num_groups
-        return (pairs[:, 0], pairs[:, 1],
-                np.full(len(pairs), nbytes))
-    s = float(op.payload_bytes)
-    parts = []
-    a2a_by_size: dict[int, list] = {}
-    tree_by_size: dict[int, list] = {}
-    ring_by_size: dict[int, list] = {}
-    for group in op.replica_groups or [[]]:
-        n = len(group)
-        if n <= 1:
-            continue
-        if op.kind in ("all-to-all", "ragged-all-to-all"):
-            a2a_by_size.setdefault(n, []).append(group)
-            continue
-        if algorithm == "tree" and op.kind in _TREE_KINDS:
-            tree_by_size.setdefault(n, []).append(group)
-            continue
-        if algorithm == "hierarchical" and topo is not None:
-            placed = _hier_edges_arr(group, op.kind, s, topo)
-            if placed is not None:
-                parts.append(placed)
-                continue
-            if op.kind in cost_models.HIERARCHICAL_KINDS \
-                    and topo.group_crosses_dcn(group):
-                warnings.warn(HierarchicalFallbackWarning(
-                    f"hierarchical {op.kind} over cross-pod group of {n} "
-                    "cannot decompose (uneven pod split); placing flat "
-                    "ring edges and billing the same fallback"),
-                    stacklevel=2)
-        ring_by_size.setdefault(n, []).append(group)
-    for n, gs in a2a_by_size.items():
-        G = np.asarray(gs, dtype=np.intp)              # (k, n)
-        src = np.repeat(G, n, axis=1).ravel()
-        dst = np.tile(G, (1, n)).ravel()
-        keep = src != dst
-        parts.append((src[keep], dst[keep],
-                      np.full(len(gs) * n * (n - 1), s / (n * n))))
-    for n, gs in tree_by_size.items():
-        parts.append(_tree_edges_arr(gs, op.kind, s))
-    for n, gs in ring_by_size.items():
-        per_rank = cost_models.wire_bytes_per_rank(
-            op.kind, s, n, algorithm, pods=1)
-        parts.append(_ring_edges_arr(gs, per_rank))
-    return _concat_edges(parts)
+    return schedule_edge_arrays(decompose(op, algorithm, topo))
 
 
 # flush threshold for the batched COO accumulation: large enough to amortize
@@ -375,17 +270,44 @@ def matrix_for_ops(
 ) -> np.ndarray:
     """Bytes-sent matrix, shape ``(d+1, d+1)``; row/col 0 = host.
 
-    ``topo`` enables topology-faithful placement (the hierarchical
-    algorithm's pod decomposition); without it hierarchical degenerates to
-    ring, matching ``wire_bytes_per_rank(..., pods=1)``.
+    ``topo`` enables topology-faithful placement (per-axis ring phases for
+    multi-axis groups, the hierarchical algorithm's pod decomposition);
+    without it every schedule degenerates to flattened rings, matching
+    ``wire_bytes_per_rank(..., pods=1)``.
 
     Accumulation is vectorized: per-op COO edge arrays
     (:func:`op_edge_arrays`, execution weights applied per op) are batched
     into buffers and flushed with one ``np.add.at`` per
     ``_FLUSH_EDGES``-sized batch -- see :func:`matrix_for_ops_reference`
-    for the scalar oracle this is property-tested against.
+    for the legacy oracle this is property-tested against.
     """
     cost_models.validate_algorithm(algorithm)
+    return _accumulate_edges(
+        ((op, op_edge_arrays(op, algorithm, topo))
+         for op in ops if kinds is None or op.kind in kinds),
+        num_devices)
+
+
+def matrix_for_schedules(
+    ops, schedules, num_devices: int,
+    kinds: Optional[set[str]] = None,
+) -> np.ndarray:
+    """Bytes-sent matrix from pre-built schedules (aligned with ``ops``).
+
+    The entry point for callers that already hold the ops' decomposition
+    schedules (e.g. a :class:`~repro.core.views.CommView`'s memoized IR):
+    identical accumulation to :func:`matrix_for_ops` without re-running
+    :func:`~repro.core.decompose.decompose` per op.
+    """
+    return _accumulate_edges(
+        ((op, schedule_edge_arrays(sched))
+         for op, sched in zip(ops, schedules)
+         if kinds is None or op.kind in kinds),
+        num_devices)
+
+
+def _accumulate_edges(pairs, num_devices: int) -> np.ndarray:
+    """Buffered COO accumulation over ``(op, (src, dst, val))`` pairs."""
     mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
     cap = _FLUSH_EDGES
     buf_src = np.empty(cap, dtype=np.intp)
@@ -405,11 +327,8 @@ def matrix_for_ops(
             apply(buf_src[:pending], buf_dst[:pending], buf_val[:pending])
             pending = 0
 
-    for op in ops:
-        if kinds is not None and op.kind not in kinds:
-            continue
+    for op, (src, dst, val) in pairs:
         w = getattr(op, "weight", 1.0)   # execution count (loop trip counts)
-        src, dst, val = op_edge_arrays(op, algorithm, topo)
         m = src.size
         if m == 0:
             continue
@@ -429,6 +348,73 @@ def matrix_for_ops(
     return mat
 
 
+# ---------------------------------------------------------------------------
+# Legacy oracle: the retired per-kind placement, kept ONLY to pin the
+# schedule-derived path against the old behavior on single-axis groups.
+# ---------------------------------------------------------------------------
+_TREE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+               "collective-broadcast")
+
+
+def _legacy_hierarchical_placement(group, kind: str, s: float,
+                                   topo: MeshTopology):
+    """Pre-schedule hierarchical placement: flattened intra-pod rings +
+    cross-pod exchange (no per-axis decomposition)."""
+    dec = cost_models.hierarchical_decomposition(kind, list(group), topo)
+    if dec is None:
+        return None
+    p, m, subs = dec
+    phases = cost_models.hier_phases(kind)
+    edges: list[tuple[int, int, float]] = []
+    if m > 1:
+        intra_per_rank = phases * (m - 1) * s / m
+        for sub in subs:
+            edges.extend(_ring_edges(sub, intra_per_rank))
+    cross_per_rank = phases * (p - 1) * s / len(group)
+    for j in range(m):
+        ring = [subs[k][j] for k in range(p)]
+        edges.extend(_ring_edges(ring, cross_per_rank))
+    return edges
+
+
+def _legacy_op_edges(op: CollectiveOp, algorithm: str = "ring",
+                     topo: Optional[MeshTopology] = None):
+    """The pre-schedule scalar placement (flattened rings everywhere)."""
+    edges: list[tuple[int, int, float]] = []
+    if op.kind == "collective-permute":
+        nbytes = float(op.result_bytes) * op.num_groups
+        return [(src, dst, nbytes) for src, dst in op.source_target_pairs]
+    for group in op.replica_groups or [[]]:
+        n = len(group)
+        if n <= 1:
+            continue
+        s = float(op.payload_bytes)
+        if op.kind in ("all-to-all", "ragged-all-to-all"):
+            block = s / (n * n)
+            edges.extend((a, b, block)
+                         for a in group for b in group if a != b)
+            continue
+        if algorithm == "tree" and op.kind in _TREE_KINDS:
+            edges.extend(_tree_placement(group, op.kind, s))
+            continue
+        if algorithm == "hierarchical" and topo is not None:
+            placed = _legacy_hierarchical_placement(group, op.kind, s, topo)
+            if placed is not None:
+                edges.extend(placed)
+                continue
+            if op.kind in cost_models.HIERARCHICAL_KINDS \
+                    and topo.group_crosses_dcn(group):
+                warnings.warn(HierarchicalFallbackWarning(
+                    f"hierarchical {op.kind} over cross-pod group of {n} "
+                    "cannot decompose (uneven pod split); placing flat "
+                    "ring edges and billing the same fallback"),
+                    stacklevel=2)
+        per_rank = cost_models.wire_bytes_per_rank(
+            op.kind, s, n, algorithm, pods=1)
+        edges.extend(_ring_edges(group, per_rank))
+    return edges
+
+
 def matrix_for_ops_reference(
     ops: Iterable[CollectiveOp],
     num_devices: int,
@@ -436,10 +422,12 @@ def matrix_for_ops_reference(
     kinds: Optional[set[str]] = None,
     topo: Optional[MeshTopology] = None,
 ) -> np.ndarray:
-    """The pre-vectorization builder: per-op, per-edge Python accumulation
-    over :func:`op_edges` tuples.  Kept as the readable oracle for the
-    property test and as the baseline ``benchmarks/matrix_build.py``
-    measures the COO-batched :func:`matrix_for_ops` against.
+    """The pre-schedule builder: per-op, per-edge Python accumulation over
+    the legacy per-kind placement.  Kept as the readable oracle: on
+    single-axis replica groups (where per-axis decomposition does not
+    apply) schedule-derived matrices must equal this loop exactly -- the
+    property test pins that, and ``benchmarks/matrix_build.py`` measures
+    the COO-batched :func:`matrix_for_ops` against it.
     """
     cost_models.validate_algorithm(algorithm)
     mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
@@ -447,7 +435,7 @@ def matrix_for_ops_reference(
         if kinds is not None and op.kind not in kinds:
             continue
         w = getattr(op, "weight", 1.0)
-        for src, dst, nbytes in op_edges(op, algorithm, topo):
+        for src, dst, nbytes in _legacy_op_edges(op, algorithm, topo):
             if src < num_devices and dst < num_devices:
                 mat[src + 1, dst + 1] += nbytes * w
     return mat
@@ -488,7 +476,9 @@ class LinkUtilization:
     included, so utilization denominators are meaningful).  Multi-hop
     logical edges charge every link on their route, so the sum over links
     can exceed the matrix total -- that is the point: it exposes transit
-    traffic a logical matrix hides.
+    traffic a logical matrix hides.  (Schedules that decompose per torus
+    axis place neighbour-only edges, so their projection carries zero
+    transit inflation inside a pod.)
     """
 
     topo: MeshTopology
@@ -599,6 +589,9 @@ def project_links(mat: np.ndarray, topo: MeshTopology) -> LinkUtilization:
     the ICI/DCN fabric.  Each device-to-device entry is routed by
     :meth:`MeshTopology.route` (dimension-ordered wrap-aware torus routing,
     DCN uplink+downlink across pods) and its bytes charged to every hop.
+    The matrices this module builds are schedule-derived
+    (:func:`op_edge_arrays` renders :func:`~repro.core.decompose.
+    decompose` output), so the projection IS the schedule's link view.
 
     Every routed hop must be one of the enumerated physical links -- in
     particular, both directions around a size-2 torus axis are the SAME
@@ -621,6 +614,6 @@ def link_utilization_for_ops(
     ops: list[CollectiveOp], topo: MeshTopology, algorithm: str = "ring",
     kinds: Optional[set[str]] = None,
 ) -> LinkUtilization:
-    """Place ``ops`` (algorithm-faithfully) and project onto physical links."""
+    """Place ``ops``' schedules and project onto physical links."""
     mat = matrix_for_ops(ops, topo.num_devices, algorithm, kinds, topo=topo)
     return project_links(mat, topo)

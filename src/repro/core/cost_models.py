@@ -10,114 +10,40 @@ same structure; the TPU-native algorithm menu is:
 * ``tree``         -- binary reduce/broadcast tree, logarithmic latency (small
                       payloads; NCCL-tree analogue).
 * ``hierarchical`` -- phase decomposition across the pod boundary (the
-                      collnet/SHARP analogue), per kind: all-reduce does
-                      reduce-scatter + all-gather rings inside the pod over
-                      ICI with a cross-pod ring all-reduce of the ``S/m``
-                      shard over DCN; all-gather / reduce-scatter / broadcast
-                      do their shard exchange across the ``p`` same-index
-                      members over DCN and the full-payload ring phase inside
-                      the pod over ICI (only ``(p-1)/n`` of S per rank ever
-                      crosses the slow tier).  With ``pods=1`` (no DCN tier)
-                      every entry degenerates exactly to ``ring``.
+                      collnet/SHARP analogue): intra-pod ring phases over ICI
+                      around a cross-pod DCN shard exchange, degenerating
+                      exactly to ``ring`` at ``pods=1``.
 
-``wire_bytes_per_rank`` reproduces the Table-1 entries; ``collective_time``
-(= the sum of ``collective_time_split``'s per-tier terms) turns them into
-seconds on a :class:`~repro.core.topology.MeshTopology`, honouring the
-*requested* algorithm even when the group spans DCN (a ring all-reduce
-across pods pays its full per-rank payload at the per-chip DCN share -- it
-is never silently rebilled as hierarchical).
-:func:`hierarchical_decomposition` is the ONE predicate deciding whether a
-(kind, group, topology) triple decomposes hierarchically -- matrix placement
-and billing both go through it, so they cannot diverge.
-``device_send_bytes`` resolves the per-rank entries down to each device's
-role (tree roots/leaves send different amounts), and is the contract the
-communication-matrix row sums are tested against.  ``contention_time``
-projects the matrix onto physical links and takes the bottleneck link.
+Every entry below is **derived from the one schedule engine**
+(:mod:`repro.core.decompose`): :func:`wire_bytes_per_rank` sums the per-rank
+bytes of the phases :func:`repro.core.decompose.group_phases` emits,
+:func:`device_send_bytes` resolves them per device role (tree roots/leaves
+send different amounts), and :func:`collective_time_split` streams each
+phase's bytes at its tier's bandwidth **plus the phase's serial
+``latency_hops`` at the tier's per-hop latency** (the latency term
+:func:`latency_model` describes, finally billed).  There is no per-kind
+algorithm branching left here -- the schedule IR is the single source of
+truth shared with matrix placement and link projection, so they cannot
+diverge.  The algorithm menu, the shared hierarchical predicate and the
+tree-structure helpers live in :mod:`repro.core.decompose` and are
+re-exported here for compatibility.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Iterable, Optional
 
+import numpy as np
+
+from . import decompose as _dec
+from .decompose import (ALGORITHMS, HIERARCHICAL_KINDS,  # noqa: F401
+                        HierarchicalFallbackWarning, effective_pods,
+                        hier_phases, hierarchical_decomposition,
+                        tree_children, tree_subtree_sizes,
+                        validate_algorithm)
 from .events import CollectiveOp
 from .topology import MeshTopology
-
-ALGORITHMS = ("ring", "tree", "hierarchical")
-
-
-def validate_algorithm(algorithm: str) -> str:
-    """Reject unknown collective algorithms with a clear error.
-
-    Every public entry point that accepts an ``algorithm`` string
-    (``monitor_fn``, ``MonitorSession``, ``CommView``, ``matrix_for_ops``,
-    the sweep engine / CLI) funnels through here, so a typo like
-    ``"treee"`` raises immediately instead of silently falling through to
-    ring edge placement.  Returns the validated name for call-through use.
-    """
-    if algorithm not in ALGORITHMS:
-        raise ValueError(
-            f"unknown algorithm {algorithm!r}; known: {ALGORITHMS}")
-    return algorithm
-
-
-# Kinds the hierarchical algorithm knows how to decompose across pods.
-HIERARCHICAL_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
-                      "collective-broadcast")
-
-
-def _hier_split(n: int, pods: int) -> tuple[int, int]:
-    """(pods, in_pod) for a hierarchical decomposition of an ``n``-rank group.
-
-    Degenerates to ``(1, n)`` when the group does not split evenly across
-    pods (or there is no DCN tier), which makes hierarchical == ring.
-    """
-    p = max(1, int(pods))
-    if p <= 1 or n % p != 0 or n // p < 1:
-        return 1, n
-    return p, n // p
-
-
-def hierarchical_decomposition(
-        kind: str, group: list[int],
-        topo: Optional[MeshTopology]) -> Optional[
-            tuple[int, int, list[list[int]]]]:
-    """``(p, m, subgroups)`` when ``kind`` over ``group`` decomposes
-    hierarchically.
-
-    The single shared predicate between matrix placement
-    (:func:`repro.core.comm_matrix.op_edges`) and billing
-    (:func:`collective_time_split`): a group decomposes iff the kind is one
-    of :data:`HIERARCHICAL_KINDS`, the group spans more than one pod, and
-    the pods partition it into equal-size subgroups.  ``None`` otherwise --
-    both callers then fall back to the flat ring model together.  The
-    per-pod subgroups ride along so callers never recompute the partition.
-    """
-    if topo is None or kind not in HIERARCHICAL_KINDS or not group:
-        return None
-    if not topo.group_crosses_dcn(group):
-        return None
-    subs = topo.pod_partition(group)
-    p, n = len(subs), len(group)
-    if p <= 1 or n % p != 0 or any(len(sub) != n // p for sub in subs):
-        return None
-    return p, n // p, subs
-
-
-def effective_pods(kind: str, group: list[int],
-                   topo: Optional[MeshTopology]) -> int:
-    """``pods`` argument for the Table-1 entries: the decomposition's ``p``
-    when :func:`hierarchical_decomposition` accepts the triple, else 1 (so
-    hierarchical degenerates to ring exactly where the placement does)."""
-    dec = hierarchical_decomposition(kind, group, topo)
-    return dec[0] if dec is not None else 1
-
-
-def hier_phases(kind: str) -> float:
-    """Ring phases per tier: all-reduce = RS + AG (2), the one-phase kinds
-    (all-gather / reduce-scatter / scatter-allgather broadcast) = 1.
-    Part of the shared placement/billing contract alongside
-    :data:`HIERARCHICAL_KINDS` and :func:`hierarchical_decomposition`."""
-    return 2.0 if kind == "all-reduce" else 1.0
 
 
 def wire_bytes_per_rank(kind: str, payload: float, n: int,
@@ -125,18 +51,15 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int,
     """Bytes *sent* by one rank for one collective (paper Table 1 analogue).
 
     ``payload`` is S (the full logical payload per group), ``n`` the group
-    size.  ``pods`` is the number of DCN tiers the group spans -- every
-    hierarchical entry in :data:`HIERARCHICAL_KINDS` depends on it.  Pass
-    :func:`effective_pods` for ``pods`` so a group the placement cannot
-    decompose degenerates here too.  Receives mirror sends for all entries
-    below (symmetric algorithms), matching the paper's "sent and received"
-    accounting.  Tree entries report the non-root (dominant) cost;
-    ``device_send_bytes`` resolves per-role amounts.
-
-    Hierarchical per-rank entries (``m = n/pods`` in-pod ranks, ``p = pods``):
+    size, ``pods`` the number of DCN tiers the group spans (pass
+    :func:`effective_pods` so a group the schedule cannot decompose
+    degenerates here too).  The value is the per-rank sum over the phases
+    of :func:`repro.core.decompose.group_phases` -- the same schedule the
+    matrix placement walks -- which reproduces the closed-form Table-1
+    entries exactly:
 
     ========================  =====================  ====================
-    kind                      intra-pod (ICI)        cross-pod (DCN)
+    kind (hierarchical)       intra-pod (ICI)        cross-pod (DCN)
     ========================  =====================  ====================
     all-reduce                ``2(m-1)/m * S``       ``2(p-1)/n * S``
     all-gather                ``(m-1)/m * S``        ``(p-1)/n * S``
@@ -144,49 +67,30 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int,
     collective-broadcast      ``(m-1)/m * S``        ``(p-1)/n * S``
     ========================  =====================  ====================
 
-    All-reduce is RS+AG rings in pod plus a cross-pod ring all-reduce of
-    the ``S/m`` shard; the one-phase kinds exchange their ``S/n`` shards
-    across the ``p`` same-index members over DCN and run the full-payload
-    ring phase inside the pod (broadcast is the scatter-allgather form, the
-    same convention the ring entry already uses).  Each entry degenerates
-    exactly to its ring value at ``p = 1``.
+    (``m = n/pods``; ring entries are the ``pods=1`` degenerate case:
+    ``2(n-1)/n*S`` for all-reduce, ``(n-1)/n*S`` for the one-phase kinds,
+    ``(n-1)/n^2*S`` for all-to-all.)  Receives mirror sends for the
+    symmetric entries; tree entries report the non-root (dominant) cost,
+    with :func:`device_send_bytes` resolving per-role amounts.
     """
     if n <= 1:
         return 0.0
-    s = float(payload)
     validate_algorithm(algorithm)
+    return _per_rank_cached(kind, float(payload), n, algorithm,
+                            int(pods))
 
-    if kind == "all-reduce":
-        if algorithm == "ring":
-            # reduce-scatter ring + all-gather ring
-            return 2.0 * (n - 1) * s / n
-        if algorithm == "tree":
-            # double binary tree: non-root sends S up + S down (pipelined);
-            # paper: root S, others 2S.  Report the non-root (dominant) cost.
-            return 2.0 * s
-        # hierarchical: RS ring over the in-pod ranks (2*(m-1)/m * S total
-        # for RS+AG) + cross-pod ring all-reduce of the S/m shard over pods
-        p, m = _hier_split(n, pods)
-        intra = 2.0 * (m - 1) * s / m if m > 1 else 0.0
-        cross = 2.0 * (p - 1) * s / n if p > 1 else 0.0
-        return intra + cross
-    if kind in ("all-gather", "reduce-scatter", "collective-broadcast"):
-        # ring: each rank forwards (n-1) shards of size S/n around the ring.
-        # hierarchical: cross-pod shard exchange among the p same-index
-        # members ((p-1)/n * S over DCN) + full-payload ring phase inside
-        # the pod ((m-1)/m * S over ICI); total bytes stay minimal.
-        if algorithm == "hierarchical":
-            p, m = _hier_split(n, pods)
-            intra = (m - 1) * s / m if m > 1 else 0.0
-            cross = (p - 1) * s / n if p > 1 else 0.0
-            return intra + cross
-        return (n - 1) * s / n
-    if kind in ("all-to-all", "ragged-all-to-all"):
-        # each rank sends (n-1) of its n blocks; block = S/n^2 of global S
-        return (n - 1) * s / (n * n)
-    if kind == "collective-permute":
-        return s
-    return s
+
+@functools.lru_cache(maxsize=8192)
+def _per_rank_cached(kind: str, payload: float, n: int, algorithm: str,
+                     pods: int) -> float:
+    """Scalar-cached per-rank sum over the abstract phase plan (ops repeat
+    the same (kind, payload, n) tuples across summaries, the Perfetto
+    exporter's per-op args, and matrices, so the schedule is built once
+    per distinct entry)."""
+    phases = _dec.group_phases(kind, payload, np.arange(n, dtype=np.intp),
+                               algorithm, topo=None, pods=pods,
+                               warn=False)
+    return float(sum(ph.bytes_per_rank for ph in phases))
 
 
 def wire_bytes_received_per_rank(kind: str, payload: float, n: int,
@@ -199,40 +103,26 @@ def wire_bytes_group_total(kind: str, payload: float, n: int,
                            algorithm: str = "ring", *, pods: int = 1) -> float:
     """Bytes on the wire summed over every rank of ONE group.
 
-    For the symmetric (ring, hierarchical) entries this is
-    ``n * wire_bytes_per_rank``; tree entries sum the true per-role amounts
-    (a binary tree all-reduce moves ``2*(n-1)*S`` total: S up and S down
-    each of its ``n-1`` edges), so matrices, summaries and cost models all
-    agree on the same totals.
+    The per-device sum over the group's schedule: for the symmetric (ring,
+    hierarchical) entries this is ``n * wire_bytes_per_rank``; tree phases
+    resolve true per-role amounts (a binary tree all-reduce moves
+    ``2*(n-1)*S`` total: S up and S down each of its ``n-1`` edges), so
+    matrices, summaries and cost models all agree on the same totals.
     """
     if n <= 1:
         return 0.0
-    s = float(payload)
-    if algorithm == "tree":
-        if kind == "all-reduce":
-            return 2.0 * (n - 1) * s
-        if kind in ("all-gather", "reduce-scatter", "collective-broadcast"):
-            # up + down phases move (n-1)*S in aggregate, same as the ring
-            return (n - 1) * s
-    return n * wire_bytes_per_rank(kind, s, n, algorithm, pods=pods)
+    validate_algorithm(algorithm)
+    return _group_total_cached(kind, float(payload), n, algorithm,
+                               int(pods))
 
 
-# ----------------------------------------------------------------------------
-# Binary-tree structure (heap layout over group positions) -- shared contract
-# between the per-device byte model below and the matrix edge placement in
-# comm_matrix.py.
-# ----------------------------------------------------------------------------
-def tree_children(i: int, n: int) -> list[int]:
-    """Children of position ``i`` in the implicit binary tree over ``n``."""
-    return [c for c in (2 * i + 1, 2 * i + 2) if c < n]
-
-
-def tree_subtree_sizes(n: int) -> list[int]:
-    """Subtree size per position of the implicit binary tree over ``n``."""
-    sizes = [1] * n
-    for i in range(n - 1, 0, -1):
-        sizes[(i - 1) // 2] += sizes[i]
-    return sizes
+@functools.lru_cache(maxsize=8192)
+def _group_total_cached(kind: str, payload: float, n: int, algorithm: str,
+                        pods: int) -> float:
+    phases = _dec.group_phases(kind, payload, np.arange(n, dtype=np.intp),
+                               algorithm, topo=None, pods=pods,
+                               warn=False)
+    return float(sum(ph.total_send_bytes() for ph in phases))
 
 
 def device_send_bytes(kind: str, payload: float, group: list[int],
@@ -240,134 +130,83 @@ def device_send_bytes(kind: str, payload: float, group: list[int],
                       topo: Optional[MeshTopology] = None) -> dict[int, float]:
     """Bytes each device of ``group`` sends for one collective execution.
 
-    This is the per-role resolution of :func:`wire_bytes_per_rank` -- the
+    The per-role resolution of :func:`wire_bytes_per_rank` -- the
     matrix/model consistency contract: ``matrix_for_ops`` row sums must
-    equal these values (times the op weight).  Ring and hierarchical
-    placements are symmetric (every rank sends the Table-1 per-rank
-    amount); tree placements depend on the device's position (root sends S
-    per child, a leaf sends S up and nothing down).
+    equal these values (times the op weight).  Both sides read the same
+    schedule, so the contract holds by construction: ring and hierarchical
+    phases are symmetric (every rank sends the per-phase amount); tree
+    phases depend on the device's position (root sends S per child, a leaf
+    sends S up and nothing down).
     """
-    n = len(group)
-    if n <= 1:
-        return {d: 0.0 for d in group}
-    s = float(payload)
-    if algorithm == "tree" and kind in ("all-reduce", "all-gather",
-                                        "reduce-scatter",
-                                        "collective-broadcast"):
-        sizes = tree_subtree_sizes(n)
-        out: dict[int, float] = {}
-        for i, d in enumerate(group):
-            kids = tree_children(i, n)
-            up = s if i > 0 else 0.0                      # reduce phase
-            down = s * len(kids)                          # broadcast phase
-            if kind == "all-reduce":
-                sent = up + down
-            elif kind == "collective-broadcast":
-                sent = down
-            elif kind == "all-gather":
-                # up: my subtree's shards; down: everything a child lacks
-                sent = (sizes[i] * s / n if i > 0 else 0.0) \
-                    + sum((n - sizes[c]) * s / n for c in kids)
-            else:  # reduce-scatter == time-reversed all-gather
-                sent = ((n - sizes[i]) * s / n if i > 0 else 0.0) \
-                    + sum(sizes[c] * s / n for c in kids)
-            out[d] = sent
+    out = {d: 0.0 for d in group}
+    if len(group) <= 1:
         return out
-    per_rank = wire_bytes_per_rank(kind, s, n, algorithm,
-                                   pods=effective_pods(kind, group, topo))
-    return {d: per_rank for d in group}
-
-
-def _group_time_split(kind: str, s: float, group: list[int], n: int,
-                      topo: MeshTopology,
-                      algorithm: str) -> tuple[float, float]:
-    """``(ici_seconds, dcn_seconds)`` for ONE replica group."""
-    if n <= 1:
-        return 0.0, 0.0
-    crosses = topo.group_crosses_dcn(group)
-
-    if not crosses:
-        per_rank = wire_bytes_per_rank(kind, s, n, algorithm)
-        return per_rank / topo.ring_bw_per_chip(False), 0.0
-
-    if algorithm == "hierarchical":
-        dec = hierarchical_decomposition(kind, group, topo)
-        if dec is not None:
-            p, m, _ = dec
-            phases = hier_phases(kind)
-            intra = (phases * (m - 1) * s / m) / topo.ring_bw_per_chip(False) \
-                if m > 1 else 0.0
-            cross = (phases * (p - 1) * s / n) / topo.ring_bw_per_chip(True) \
-                if p > 1 else 0.0
-            return intra, cross
-        # refusal: bill the flat ring fallback the placement also uses
-        # (pods=1 degenerates every hierarchical Table-1 entry to ring)
-        per_rank = wire_bytes_per_rank(kind, s, n, algorithm, pods=1)
-        return 0.0, per_rank / topo.ring_bw_per_chip(True)
-
-    per_rank = wire_bytes_per_rank(kind, s, n, algorithm)
-    return 0.0, per_rank / topo.ring_bw_per_chip(True)
+    phases = _dec.group_phases(kind, float(payload), group, algorithm,
+                               topo, warn=False)
+    for ph in phases:
+        for d, b in ph.send_bytes().items():
+            out[d] = out.get(d, 0.0) + b
+    return out
 
 
 def collective_time_split(op: CollectiveOp, topo: MeshTopology,
-                          algorithm: str = "ring") -> tuple[float, float]:
-    """``(ici_seconds, dcn_seconds)`` for one collective (bandwidth terms).
+                          algorithm: str = "ring", *,
+                          include_latency: bool = True) -> tuple[float, float]:
+    """``(ici_seconds, dcn_seconds)`` for one collective.
 
-    The per-tier resolution of :func:`collective_time`, decided **per
-    replica group** with the same shared predicate the matrix placement
-    uses (groups occupy disjoint devices and run concurrently, so each
-    tier's time is the max over groups).  The *requested* algorithm is
-    honoured:
+    The per-tier resolution of :func:`collective_time`, read off the op's
+    :func:`~repro.core.decompose.decompose` schedule: each phase streams
+    its per-rank bytes at its tier's per-chip ring bandwidth and adds its
+    serial ``latency_hops`` at the tier's per-hop latency
+    (``HardwareSpec.ici_hop_latency_s`` / ``dcn_hop_latency_s``; set
+    ``include_latency=False`` for the pure bandwidth term, e.g. to compare
+    against byte-conservation invariants).  Phase streams of disjoint
+    replica groups run concurrently, so each tier's time is the max over
+    streams.  The *requested* algorithm is honoured:
 
-    * intra-pod groups stream the per-rank bytes at the per-chip ring
-      bandwidth (both directions of the axis links) -- pure ICI time;
-    * a **hierarchical** group across pods that
-      :func:`hierarchical_decomposition` accepts pays its intra-pod ring
-      phases over ICI and only the shard exchange over DCN (per-kind
-      entries in the :func:`wire_bytes_per_rank` table);
-    * a hierarchical request the predicate *refuses* (uneven pod split,
-      or a kind outside :data:`HIERARCHICAL_KINDS`) is billed exactly like
-      the placement's fallback -- flat ring edges crossing DCN at the
-      per-chip DCN share -- never as a phantom decomposition;
-    * a **ring or tree** group spanning pods has ring/tree edges crossing
-      DCN, so its full per-rank payload streams at the per-chip DCN share
-      -- it is NOT silently rebilled as hierarchical (that would
-      contradict the matrix's edge placement).
+    * intra-pod groups stream over ICI only (per-axis decomposed groups
+      pay fewer serial hops than the flattened ring -- same bytes, less
+      latency);
+    * a **hierarchical** group across pods that the shared predicate
+      accepts pays its intra-pod phases over ICI and only the shard
+      exchange over DCN;
+    * a hierarchical request the predicate *refuses* is billed exactly
+      like the placement's fallback -- flat ring phases crossing DCN --
+      never as a phantom decomposition;
+    * a **ring or tree** group spanning pods streams its full per-rank
+      payload at the per-chip DCN share -- it is NOT silently rebilled as
+      hierarchical (that would contradict the matrix's edge placement).
     """
-    s = float(op.payload_bytes)
-    groups = [g for g in (op.replica_groups or []) if len(g) > 1]
-    if not groups:
-        # pair-form ops (collective-permute) carry no replica groups
-        return _group_time_split(op.kind, s, [], op.group_size, topo,
-                                 algorithm)
-    ici = dcn = 0.0
-    for g in groups:
-        i, d = _group_time_split(op.kind, s, g, len(g), topo, algorithm)
-        ici = max(ici, i)
-        dcn = max(dcn, d)
-    return ici, dcn
+    return _dec.decompose(op, algorithm, topo, warn=False).time_split(
+        topo, include_latency=include_latency)
 
 
 def collective_time(op: CollectiveOp, topo: MeshTopology,
-                    algorithm: str = "ring") -> float:
+                    algorithm: str = "ring", *,
+                    include_latency: bool = True) -> float:
     """Seconds for one collective on the torus: the serialized sum of the
     per-tier terms of :func:`collective_time_split`."""
-    ici, dcn = collective_time_split(op, topo, algorithm)
+    ici, dcn = collective_time_split(op, topo, algorithm,
+                                     include_latency=include_latency)
     return ici + dcn
 
 
 def total_time(ops: Iterable[CollectiveOp], topo: MeshTopology,
-               algorithm: str = "ring") -> float:
+               algorithm: str = "ring", *,
+               include_latency: bool = True) -> float:
     """Serialized collective time (no overlap) -- upper bound / roofline term.
 
     Execution-weighted: an op inside a while body contributes once per trip.
     """
-    return float(sum(collective_time(op, topo, algorithm)
-                     * max(1.0, getattr(op, "weight", 1.0)) for op in ops))
+    return float(sum(
+        collective_time(op, topo, algorithm,
+                        include_latency=include_latency)
+        * max(1.0, getattr(op, "weight", 1.0)) for op in ops))
 
 
 def total_time_split(ops: Iterable[CollectiveOp], topo: MeshTopology,
-                     algorithm: str = "ring") -> tuple[float, float]:
+                     algorithm: str = "ring", *,
+                     include_latency: bool = True) -> tuple[float, float]:
     """Execution-weighted per-tier serialized sums ``(ici_s, dcn_s)``.
 
     ``total_time == sum(total_time_split)`` by construction; the overlap
@@ -376,7 +215,8 @@ def total_time_split(ops: Iterable[CollectiveOp], topo: MeshTopology,
     """
     ici = dcn = 0.0
     for op in ops:
-        i, d = collective_time_split(op, topo, algorithm)
+        i, d = collective_time_split(op, topo, algorithm,
+                                     include_latency=include_latency)
         w = max(1.0, getattr(op, "weight", 1.0))
         ici += i * w
         dcn += d * w
@@ -389,6 +229,7 @@ def contention_time(ops: Iterable[CollectiveOp], topo: MeshTopology,
     busiest link (bytes / link bandwidth), instead of a flat per-chip
     bandwidth.  This is the contention-aware lower bound on communication
     time -- two logical edges sharing one ICI cable serialize on it.
+    (Pure bandwidth: link projection carries bytes, not hop latencies.)
     """
     from . import comm_matrix  # deferred: comm_matrix imports this module
 
@@ -412,7 +253,13 @@ def table1_allreduce_bytes(n: int, s: float, algorithm: str, role: str = "other"
 
 
 def latency_model(kind: str, n: int, algorithm: str = "ring") -> float:
-    """Number of serial hops (latency term), for small-payload reasoning."""
+    """Number of serial hops (latency term), for small-payload reasoning.
+
+    The closed-form reference the schedule reproduces on flattened rings:
+    ``CollectiveSchedule.latency_hops()`` equals this for single-axis
+    groups, and is strictly smaller for per-axis-decomposed multi-axis
+    groups (``2 * sum(axis_size - 1)`` instead of ``2 * (n - 1)``).
+    """
     if n <= 1:
         return 0.0
     if algorithm == "tree":

@@ -1,4 +1,4 @@
-"""JSON export: the schema-``v4`` report dict, verbatim, on disk."""
+"""JSON export: the schema-``v5`` report dict, verbatim, on disk."""
 from __future__ import annotations
 
 import json
@@ -7,16 +7,19 @@ import os
 from . import serialize
 
 
-def export_json(report, path: str, *, include_hlo: bool = False) -> str:
-    """Write one report as schema-v4 JSON.  Returns ``path``.
+def export_json(report, path: str, *, include_hlo: bool = False,
+                include_schedules: bool = False) -> str:
+    """Write one report as schema-v5 JSON.  Returns ``path``.
 
     ``include_hlo=True`` persists the compiled HLO text (gzip+base64) so
-    ``roofline_of`` works on the loaded report.
+    ``roofline_of`` works on the loaded report.  ``include_schedules=True``
+    adds the optional per-op decomposition-schedule summaries.
     """
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w") as f:
-        json.dump(serialize.report_to_dict(report, include_hlo=include_hlo),
-                  f, indent=1)
+        json.dump(serialize.report_to_dict(
+            report, include_hlo=include_hlo,
+            include_schedules=include_schedules), f, indent=1)
     return path
 
 

@@ -3,11 +3,21 @@
 Renders each report's compiled collectives as a timeline loadable in
 https://ui.perfetto.dev or ``chrome://tracing``: one *process* per report,
 one *thread* (track) per collective primitive, one complete (``ph="X"``)
-event per collective op.  Events are laid out serially in session/HLO
-program order -- the same no-overlap assumption as
-:func:`repro.core.cost_models.total_time` -- with durations from the
-algorithm-aware bandwidth model, so the timeline *is* the roofline's
+event per collective op.  Durations come straight from the op's
+decomposition schedule (:func:`repro.core.decompose.decompose`) -- the same
+phase IR the cost models bill -- so the timeline *is* the roofline's
 collective term, made visible.
+
+**Overlap-aware per-tier lanes.**  Reports with a topology additionally get
+one **ICI lane** and one **DCN lane**: every schedule phase is drawn as a
+span on its tier's lane, laid out with a software-pipelined clock -- a
+phase starts when both its predecessor phase (within its op *stream*;
+disjoint replica groups are concurrent streams and overlap) and the op's
+tier base are free.  Ops therefore overlap across tiers exactly the way the
+link-overlap roofline bound (``max(ici_s, dcn_s)``) assumes: op ``k+1``'s
+intra-pod ICI phases run while op ``k``'s DCN shard exchange is still in
+flight, and the timeline's end approaches the overlapped bound instead of
+the serialized sum.
 
 Session reports with named phases additionally get a **phase lane**: a
 dedicated track whose ``X`` events span each phase's extent on the same
@@ -24,24 +34,57 @@ from __future__ import annotations
 import json
 import os
 
-from .. import cost_models
+from ..decompose import decompose as _decompose
 
 # floor so zero-cost ops (group size 1, no topology) stay visible in the UI
 _MIN_DUR_US = 0.05
 
 
-def _op_duration_us(op, topo, algorithm: str) -> float:
-    if topo is not None:
-        sec = cost_models.collective_time(op, topo, algorithm)
-    else:
-        # no topology: assume a generic 50 GB/s per-rank link
-        sec = op.wire_bytes_per_rank(algorithm) / 50e9
-    return max(_MIN_DUR_US, sec * 1e6)
+def _op_args(op, algorithm: str) -> dict:
+    args = {
+        "kind": op.kind,
+        "hlo_name": op.name,
+        "payload_bytes": int(op.payload_bytes),
+        "wire_bytes_total": float(op.wire_bytes_total(algorithm)),
+        "group_size": op.group_size,
+        "num_groups": op.num_groups,
+        "weight": op.weight,
+    }
+    if op.phase:
+        args["phase"] = op.phase
+    return args
+
+
+def _memoized_schedules(report, algorithm: str) -> dict:
+    """``{id(op): CollectiveSchedule}`` from the report view's memoized
+    schedule list when the report offers one (a ``CommReport``), so the
+    exporter shares the IR other artifacts already computed instead of
+    re-running ``decompose`` per op.  Empty dict for plain objects."""
+    view = getattr(report, "view", None)
+    if view is None:
+        return {}
+    try:
+        v = view(algorithm)
+        return {id(op): sched
+                for op, sched in zip(v.ops, v.schedules())}
+    except Exception:
+        return {}
+
+
+def _ordered_ops(report, phase_names):
+    ops = report.compiled_ops
+    if phase_names:
+        # lay phases out contiguously in session order (stable within phase)
+        order = {p: i for i, p in enumerate(phase_names)}
+        ops = sorted(ops, key=lambda op: order.get(op.phase, len(order)))
+    return ops
 
 
 def trace_events(report, *, pid: int = 1) -> list[dict]:
-    """Trace events for one report (one process, one track per primitive)."""
+    """Trace events for one report (one process, one track per primitive,
+    plus the per-tier lanes when the report carries a topology)."""
     algorithm = getattr(report, "algorithm", "ring")
+    topo = getattr(report, "topo", None)
     label = f"{report.name} [{report.num_devices} devices, {algorithm}]"
     events: list[dict] = [{
         "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
@@ -56,46 +99,104 @@ def trace_events(report, *, pid: int = 1) -> list[dict]:
         })
     phase_names = (report.phase_names()
                    if hasattr(report, "phase_names") else [])
-    ops = report.compiled_ops
-    if phase_names:
-        # lay phases out contiguously in session order (stable within phase)
-        order = {p: i for i, p in enumerate(phase_names)}
-        ops = sorted(ops, key=lambda op: order.get(op.phase, len(order)))
-    ts = 0.0
+    ops = _ordered_ops(report, phase_names)
+    next_tid = len(kinds) + 1
+    tier_tid: dict[str, int] = {}
+    if topo is not None and ops:
+        for tier in ("ici", "dcn"):
+            tier_tid[tier] = next_tid
+            events.append({
+                "name": "thread_name", "ph": "M", "pid": pid,
+                "tid": next_tid, "args": {"name": f"{tier} lane"}})
+            next_tid += 1
+
     phase_spans: dict[str, list[float]] = {}
-    for op in ops:
-        # a weighted op (while-loop body) executes `weight` times; show the
-        # aggregate as one span so trip-count-64 loops don't emit 64 events
-        dur = _op_duration_us(op, report.topo, algorithm) * max(1.0, op.weight)
-        args = {
-            "kind": op.kind,
-            "hlo_name": op.name,
-            "payload_bytes": int(op.payload_bytes),
-            "wire_bytes_total": float(op.wire_bytes_total(algorithm)),
-            "group_size": op.group_size,
-            "num_groups": op.num_groups,
-            "weight": op.weight,
-        }
+
+    def note_span(op, start: float, end: float):
         if op.phase:
-            args["phase"] = op.phase
-            span = phase_spans.setdefault(op.phase, [ts, ts])
-            span[1] = ts + dur
-        events.append({
-            "name": op.op_name or op.kind,
-            "cat": "collective",
-            "ph": "X",
-            "ts": round(ts, 3),
-            "dur": round(dur, 3),
-            "pid": pid,
-            "tid": tid_of[op.kind],
-            "args": args,
-        })
-        ts += dur
+            span = phase_spans.setdefault(op.phase, [start, end])
+            span[0] = min(span[0], start)
+            span[1] = max(span[1], end)
+
+    if topo is None:
+        # no topology: the legacy serial layout (generic 50 GB/s link)
+        ts = 0.0
+        for op in ops:
+            sec = op.wire_bytes_per_rank(algorithm) / 50e9
+            dur = max(_MIN_DUR_US, sec * 1e6) * max(1.0, op.weight)
+            events.append({
+                "name": op.op_name or op.kind, "cat": "collective",
+                "ph": "X", "ts": round(ts, 3), "dur": round(dur, 3),
+                "pid": pid, "tid": tid_of[op.kind],
+                "args": _op_args(op, algorithm)})
+            note_span(op, ts, ts + dur)
+            ts += dur
+    else:
+        # software-pipelined layout: a phase starts when its predecessor
+        # (within its op *stream*) and its tier's lane are both free --
+        # ICI and DCN overlap across ops exactly as the roofline's overlap
+        # bound assumes, and concurrent streams (disjoint replica groups)
+        # overlap within the op like ``time_split``'s max-over-streams.
+        # A weighted op (while-loop body) executes ``weight`` times; its
+        # phases show the aggregate as one span each.
+        sched_of = _memoized_schedules(report, algorithm)
+        cursor = {"ici": 0.0, "dcn": 0.0}
+        issue = 0.0   # monotone issue clock: ops are issued in program
+        for op in ops:  # order, so op k+1 never *starts* before op k does
+            sched = sched_of.get(id(op)) \
+                or _decompose(op, algorithm, topo, warn=False)
+            w = max(1.0, op.weight)
+            # a schedule-less op (size-1 groups) moves nothing: marker at
+            # the issue clock, gating nothing (no pipeline barrier)
+            t_prev = issue if not sched.phases else 0.0
+            # streams start from the op's base (not behind each other's
+            # phases); the base honours both lane availability and issue
+            # order
+            base = {t: max(c, issue) for t, c in cursor.items()}
+            op_start = None
+            op_end = 0.0
+            stream_end: dict[int, float] = {}
+            tier_events: list[dict] = []
+            for ph in sched.phases:
+                dur = max(_MIN_DUR_US, ph.seconds(topo) * 1e6 * w)
+                start = max(stream_end.get(ph.stream, 0.0), base[ph.tier])
+                end = start + dur
+                cursor[ph.tier] = max(cursor[ph.tier], end)
+                stream_end[ph.stream] = end
+                op_start = start if op_start is None else min(op_start,
+                                                              start)
+                op_end = max(op_end, end)
+                tier_events.append({
+                    "name": f"{ph.kind}"
+                            + (f"@{ph.axis}" if ph.axis else ""),
+                    "cat": "tier", "ph": "X",
+                    "ts": round(start, 3), "dur": round(dur, 3),
+                    "pid": pid, "tid": tier_tid[ph.tier],
+                    "args": {
+                        "tier": ph.tier, "structure": ph.structure,
+                        "axis": ph.axis, "hlo_name": op.name,
+                        "bytes_per_rank": float(ph.bytes_per_rank),
+                        "latency_hops": float(ph.latency_hops),
+                    }})
+            # concurrent streams restart from the op's base, so sort the
+            # op's lane spans by start time to keep each track ordered
+            events.extend(sorted(tier_events, key=lambda e: e["ts"]))
+            if op_start is None:            # scheduleless op (size-1 group)
+                op_start, op_end = t_prev, t_prev + _MIN_DUR_US
+            issue = op_start
+            events.append({
+                "name": op.op_name or op.kind, "cat": "collective",
+                "ph": "X", "ts": round(op_start, 3),
+                "dur": round(max(_MIN_DUR_US, op_end - op_start), 3),
+                "pid": pid, "tid": tid_of[op.kind],
+                "args": _op_args(op, algorithm)})
+            note_span(op, op_start, op_end)
+
     if len(phase_names) >= 2:
         # the phase lane: one span per phase on a dedicated track (phases
         # with no collectives occupy no wall-clock on this model, so they
         # have no span to draw)
-        lane_tid = len(kinds) + 1
+        lane_tid = next_tid
         events.append({
             "name": "thread_name", "ph": "M", "pid": pid, "tid": lane_tid,
             "args": {"name": "phases"},

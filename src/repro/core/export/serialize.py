@@ -1,4 +1,4 @@
-"""Lossless CommReport <-> plain-dict serialization (schema ``v4``).
+"""Lossless CommReport <-> plain-dict serialization (schema ``v5``).
 
 This is the substrate for everything under :mod:`repro.core.export`: the JSON
 exporter writes the dict verbatim, the on-disk report cache
@@ -31,8 +31,18 @@ also adds the *optional* ``hlo_gz`` key (a list of gzip + base64 compiled
 HLO modules, one per capture, written only by
 ``save(..., include_hlo=True)``), which lets
 ``roofline_of`` run on loaded/cached reports without a live compilation.
-v1-v3 files load fine: missing phase tags default to ``""`` (a single
-anonymous phase) and missing ``hlo_gz`` just means no offline roofline.
+
+Schema **v5** adds the *optional* ``schedules`` section: one decomposition-
+schedule summary per compiled op (aligned with ``ops``), each a list of
+phase records -- kind / tier / structure / axis / group shape / per-rank
+bytes / latency hops -- straight from
+:func:`repro.core.decompose.decompose`.  Written only on request
+(``save(..., include_schedules=True)``): schedules are pure derived data,
+so loaders recompute them from ``ops`` + ``topo`` + ``algorithm`` on
+demand (``CommReport.schedule_summaries()``), and every older file loads
+unchanged: missing phase tags default to ``""`` (a single anonymous
+phase), missing ``hlo_gz`` just means no offline roofline, missing
+``schedules`` just means re-derive.
 """
 from __future__ import annotations
 
@@ -47,11 +57,12 @@ from ..events import (CollectiveOp, HostTransfer, PhaseRecord, Shape,
                       TraceEvent)
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v4"
+SCHEMA = "repro.comm_report.v5"
+SCHEMA_V4 = "repro.comm_report.v4"
 SCHEMA_V3 = "repro.comm_report.v3"
 SCHEMA_V2 = "repro.comm_report.v2"
 SCHEMA_V1 = "repro.comm_report.v1"
-ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -222,12 +233,27 @@ def _hlo_section(report, include_hlo: bool) -> dict:
                        .decode("ascii") for t in texts]}
 
 
-def report_to_dict(report, *, include_hlo: bool = False) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v4``)."""
+def _schedule_section(report, include_schedules: bool) -> dict:
+    """Optional schema-v5 per-op decomposition-schedule summaries.
+
+    One entry per compiled op (aligned with the ``ops`` list), derived
+    from the report's ``(algorithm, topo)`` binding -- purely derived
+    data, so it is written only on request and never restored on load
+    (``CommReport.schedule_summaries()`` recomputes it).
+    """
+    if not include_schedules or not hasattr(report, "schedule_summaries"):
+        return {}
+    return {"schedules": report.schedule_summaries()}
+
+
+def report_to_dict(report, *, include_hlo: bool = False,
+                   include_schedules: bool = False) -> dict:
+    """``CommReport`` -> JSON-serializable dict (schema ``v5``)."""
     return {
         "schema": SCHEMA,
         **_link_section(report),
         **_hlo_section(report, include_hlo),
+        **_schedule_section(report, include_schedules),
         "phases": [phase_to_dict(p)
                    for p in getattr(report, "phases", []) or []],
         "name": report.name,
@@ -251,7 +277,7 @@ def report_to_dict(report, *, include_hlo: bool = False) -> dict:
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1`` ... ``v4``) -> ``CommReport``.
+    """Dict (schema ``v1`` ... ``v5``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
     needed for matrices, tables, exports and cost models; the live
@@ -260,9 +286,10 @@ def report_from_dict(d: dict):
     ``include_hlo=True`` (``hlo_gz``), in which case
     :func:`repro.core.monitor.roofline_of` works on the loaded report too.
     The v2/v3 ``links``/``link_matrix``/``link_tiers``/``overlap`` sections
-    are derived data and are not restored -- ``CommReport.
-    link_utilization`` / ``collective_seconds_split`` recompute them from
-    ``ops`` + ``topo``, which is how older files stay fully usable.
+    and the v5 ``schedules`` section are derived data and are not restored
+    -- ``CommReport.link_utilization`` / ``collective_seconds_split`` /
+    ``schedule_summaries`` recompute them from ``ops`` + ``topo``, which is
+    how older files stay fully usable.
     """
     from ..monitor import CommReport  # deferred: monitor imports this module
 

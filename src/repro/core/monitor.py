@@ -18,8 +18,8 @@ The accumulating front door is :class:`~repro.core.session.MonitorSession`
 the one-call compatibility wrapper -- a single capture in a single phase --
 still used by examples, benchmarks, the dry-run launcher and the sweep CLI.
 Reports round-trip losslessly through :meth:`CommReport.save` /
-:meth:`CommReport.load` (schema v4, :mod:`repro.core.export.serialize`;
-v1-v3 files still load), which is also how the on-disk report cache
+:meth:`CommReport.load` (schema v5, :mod:`repro.core.export.serialize`;
+v1-v4 files still load), which is also how the on-disk report cache
 (:mod:`repro.core.report_cache`) lets repeated sweeps skip recompilation.
 """
 from __future__ import annotations
@@ -239,14 +239,17 @@ class CommReport:
             f"wire bytes (all devices) {reporter.human_bytes(self.total_wire_bytes())}")
         return "\n\n".join(parts)
 
-    def with_algorithm(self, algorithm: str) -> "CommReport":
-        """Same compiled ops, byte accounting re-derived for ``algorithm``.
+    def rebound(self, algorithm: str) -> "CommReport":
+        """A sibling snapshot report with its eager artifacts re-derived
+        from ``view(algorithm)``.
 
-        **Deprecated spelling**: prefer ``report.view(algorithm)``, which
-        binds lazily and memoizes instead of eagerly materializing a whole
-        replacement report.  Kept because cached sweep artifacts are whole
-        reports; this now just snapshots the view's artifacts (compilation
-        never depended on the algorithm, so no recompilation either way).
+        This is NOT the way to compare algorithms -- use :meth:`view`,
+        which binds lazily and memoizes.  It exists for the one consumer
+        that genuinely needs a whole replacement *snapshot*: the sweep
+        engine's derive path, whose on-disk cache stores one serialized
+        report per ``(config, mesh, algorithm)`` cell.  (The old
+        ``with_algorithm`` spelling is gone; compilation never depended on
+        the algorithm, so no recompilation either way.)
         """
         if algorithm == self.algorithm:
             return self
@@ -264,8 +267,15 @@ class CommReport:
                 setattr(rep, attr, getattr(self, attr))
         return rep
 
-    def save(self, path: str, *, include_hlo: bool = False):
-        """Write the full report as schema-v4 JSON (see ``load``).
+    def schedule_summaries(self, algorithm: Optional[str] = None) -> list[dict]:
+        """Per-op decomposition-schedule summaries (one entry per compiled
+        op, aligned with ``compiled_ops``): the phase IR's serializable
+        face, also written by ``save(..., include_schedules=True)``."""
+        return self.view(algorithm).schedule_summaries()
+
+    def save(self, path: str, *, include_hlo: bool = False,
+             include_schedules: bool = False):
+        """Write the full report as schema-v5 JSON (see ``load``).
 
         The file is a lossless round-trip: ops, traced events, matrices,
         summaries, topology, phase records and timings all survive.  It is
@@ -276,15 +286,19 @@ class CommReport:
         ``include_hlo=True`` additionally persists the compiled HLO text
         (gzip + base64, ``hlo_gz`` key) so :func:`roofline_of` works on the
         loaded report without a live compilation.
+        ``include_schedules=True`` adds the optional schema-v5
+        ``schedules`` section: one decomposition-schedule summary per op
+        (phase kind / tier / structure / axis / bytes / latency hops).
         """
         from .export import export_json
-        export_json(self, path, include_hlo=include_hlo)
+        export_json(self, path, include_hlo=include_hlo,
+                    include_schedules=include_schedules)
 
     @classmethod
     def load(cls, path: str) -> "CommReport":
         """Read a report written by :meth:`save` (or the report cache).
 
-        Accepts schema v1-v4.  Loaded reports render, diff, export and
+        Accepts schema v1-v5.  Loaded reports render, diff, export and
         feed the cost models exactly like fresh ones; ``roofline_of``
         additionally needs the compiled HLO, which is present when the
         file was saved with ``include_hlo=True`` (otherwise a live

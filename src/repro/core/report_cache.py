@@ -16,10 +16,20 @@ JSON tuple ``(schema, config, mesh, algorithm, jax_version)``:
 * ``algorithm`` -- collective algorithm used for byte/edge accounting
   (``ring`` / ``tree`` / ``hierarchical``); compilation does not depend on
   it, but the derived matrices and summaries do, so each algorithm gets its
-  own entry (derivation from a sibling entry is still compile-free, see
-  ``CommReport.with_algorithm``);
+  own entry (derivation from a sibling entry is still compile-free: a lazy
+  ``CommReport.view(algorithm)`` binding, snapshotted by
+  ``CommReport.rebound``);
 * ``jax_version`` -- XLA's collective emission changes across releases, so
   reports never survive a jax upgrade.
+
+**Phase-aware entries.**  Sessions capture under named phases, but a phase
+is a *view* of the session snapshot, not a separate compilation -- so a
+sweep cell keyed with ``phase=`` resolves to the SAME cache entry as the
+whole session (:func:`cache_key` deliberately folds ``phase`` out of the
+hash) and :meth:`ReportCache.get` hands back the cached whole-session
+snapshot, from which ``report.view(phase=...)`` derives the per-phase
+artifacts in milliseconds.  A phase the cached snapshot never captured is
+a miss (the caller re-monitors the session, which then contains it).
 
 The cache directory defaults to ``artifacts/report_cache`` (override with
 ``REPRO_CACHE_DIR`` or ``ReportCache(root=...)``).  Entries are one JSON file
@@ -42,8 +52,17 @@ DEFAULT_ROOT = os.path.join("artifacts", "report_cache")
 
 
 def cache_key(config: str, mesh: str, algorithm: str,
-              jax_version: Optional[str] = None) -> str:
-    """Deterministic key for one (config, mesh, algorithm, jax) cell."""
+              jax_version: Optional[str] = None, *,
+              phase: Optional[str] = None) -> str:
+    """Deterministic key for one (config, mesh, algorithm, jax) cell.
+
+    ``phase`` is accepted -- and deliberately **not hashed** -- so a
+    per-phase sweep cell addresses the whole-session snapshot it derives
+    from: ``cache_key(..., phase="decode") == cache_key(...)``.  Pass the
+    phase to :meth:`ReportCache.get` instead to assert the cached snapshot
+    actually captured it.
+    """
+    del phase  # key-neutral by design: phases are views of one snapshot
     if jax_version is None:
         import jax
         jax_version = jax.__version__
@@ -62,8 +81,15 @@ class ReportCache:
     def path_for(self, key: str) -> str:
         return os.path.join(self.root, key + ".json")
 
-    def get(self, key: str):
-        """Cached CommReport for ``key``, or None (corrupt entry == miss)."""
+    def get(self, key: str, phase: Optional[str] = None):
+        """Cached CommReport for ``key``, or None (corrupt entry == miss).
+
+        ``phase`` makes the lookup phase-aware: the WHOLE-session snapshot
+        is returned (phases are lazy views over it -- derive with
+        ``report.view(phase=...)``; nothing is recaptured), but a phase
+        the snapshot never captured counts as a miss so the caller
+        re-monitors a session that contains it.
+        """
         path = self.path_for(key)
         try:
             with open(path) as f:
@@ -71,6 +97,9 @@ class ReportCache:
             from .export import serialize
             report = serialize.report_from_dict(payload["report"])
         except (OSError, KeyError, ValueError, TypeError):
+            self.misses += 1
+            return None
+        if phase is not None and phase not in report.phase_names():
             self.misses += 1
             return None
         report.meta = dict(payload.get("meta", {}))

@@ -22,12 +22,15 @@ torus with the DCN fabric (independent wires).  The overlap-aware bound is
                           collective_ici_s, collective_dcn_s)
 
 where ``collective_ici_s`` / ``collective_dcn_s`` are the per-tier
-serialized sums from ``cost_models.total_time_split`` (so
+serialized sums from ``cost_models.total_time_split`` -- bandwidth plus
+the per-phase latency hops of each op's decomposition schedule
+(:mod:`repro.core.decompose`), summed per phase per tier -- so
 ``collective_overlap_s = max(ici, dcn) <= collective_s_topo``, with
-equality exactly when a single tier carries all the traffic).  The
+equality exactly when a single tier carries all the traffic.  The
 per-link busy times from ``LinkUtilization.busy_seconds`` ride along as
 the contention-aware refinement per tier (``ici_busy_s`` / ``dcn_busy_s``:
-the busiest physical link of each fabric, including multi-hop transit).
+the busiest physical link of each fabric, including multi-hop transit --
+pure bandwidth, since links carry bytes, not hop latencies).
 """
 from __future__ import annotations
 
@@ -52,7 +55,7 @@ class RooflineReport:
     compute_s: float
     memory_s: float
     collective_s: float
-    collective_s_topo: float        # topology-aware refinement (serialized)
+    collective_s_topo: float        # topology-aware (serialized, bw+latency)
     # link-level overlap terms (tiers are independent fabrics)
     collective_ici_s: float = 0.0   # serialized ICI share of collective_s_topo
     collective_dcn_s: float = 0.0   # serialized DCN share of collective_s_topo

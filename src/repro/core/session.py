@@ -19,14 +19,14 @@ one-shot wrapper around a single jitted function cannot tell them apart.
     sess.view()                    # whole-session CommView (lazy, memoized)
     sess.view(phase="bwd")         # one phase's matrices / summaries
     sess.view("tree")              # re-bound algorithm, no recompilation
-    report = sess.report()         # serializable CommReport snapshot (v4)
+    report = sess.report()         # serializable CommReport snapshot (v5)
 
 Each :meth:`capture` traces one function under the interceptor, compiles
 it, parses the collective schedule, and tags every op / traced event /
 host transfer with the active phase.  Derived artifacts are never built
 eagerly -- :meth:`view` hands out :class:`~repro.core.views.CommView`
 bindings that memoize on first read -- and :meth:`report` snapshots the
-session into a :class:`~repro.core.monitor.CommReport` whose schema-v4
+session into a :class:`~repro.core.monitor.CommReport` whose schema-v5
 serialization round-trips the phase structure.
 
 ``monitor_fn`` (:mod:`repro.core.monitor`) survives as a thin
@@ -308,7 +308,7 @@ class MonitorSession:
 
     def report(self, name: Optional[str] = None):
         """Snapshot the session into a serializable
-        :class:`~repro.core.monitor.CommReport` (schema v4: per-phase op
+        :class:`~repro.core.monitor.CommReport` (schema v5: per-phase op
         lists and phase records ride along; ``save``/``load`` round-trips
         them).  The compiled HLO of every capture is attached as
         ``_hlo_texts`` (one module per capture -- analyzed per module, a

@@ -29,6 +29,11 @@ class HardwareSpec:
     ici_links_per_axis: int = 2          # bidirectional ring: +1/-1 neighbours
     dcn_bw_per_chip: float = 6.25e9      # bytes/s per chip across pods
     hbm_per_chip: int = 16 * 1024**3     # bytes
+    # per-hop latency terms (small-payload regime): one ICI neighbour hop
+    # vs one DCN exchange -- charged per schedule-phase ``latency_hops`` by
+    # ``cost_models.collective_time_split``
+    ici_hop_latency_s: float = 1e-6      # seconds per ICI ring hop
+    dcn_hop_latency_s: float = 25e-6     # seconds per cross-pod DCN hop
 
 
 V5E = HardwareSpec()

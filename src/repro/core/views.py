@@ -24,6 +24,7 @@ from typing import Iterable, Optional
 import numpy as np
 
 from . import comm_matrix, cost_models, hlo_parser
+from .decompose import schedules_for_ops
 from .events import CollectiveOp, HostTransfer
 from .topology import MeshTopology
 
@@ -98,8 +99,8 @@ class CommView:
     def matrix(self) -> np.ndarray:
         """``(d+1)^2`` bytes-sent matrix (host transfers in row/col 0)."""
         def build():
-            mat = comm_matrix.matrix_for_ops(
-                self.ops, self.num_devices, self.algorithm, topo=self.topo)
+            mat = comm_matrix.matrix_for_schedules(
+                self.ops, self.schedules(), self.num_devices)
             if self.host_transfers:
                 comm_matrix.add_host_transfers(mat, self.host_transfers)
             return mat
@@ -108,9 +109,12 @@ class CommView:
     @property
     def per_primitive(self) -> dict[str, np.ndarray]:
         """Paper Fig. 3: one matrix per collective primitive."""
-        return self._cached("per_primitive", lambda: (
-            comm_matrix.per_primitive_matrices(
-                self.ops, self.num_devices, self.algorithm, topo=self.topo)))
+        def build():
+            return {k: comm_matrix.matrix_for_schedules(
+                        self.ops, self.schedules(), self.num_devices,
+                        kinds={k})
+                    for k in sorted({op.kind for op in self.ops})}
+        return self._cached("per_primitive", build)
 
     @property
     def summary(self) -> dict:
@@ -124,6 +128,23 @@ class CommView:
             hlo_parser.total_wire_bytes(self.ops, self.algorithm,
                                         topo=self.topo)))
 
+    # -- decomposition schedules -------------------------------------------
+    def schedules(self) -> list:
+        """One :class:`~repro.core.decompose.CollectiveSchedule` per op
+        (aligned with ``self.ops``) -- the phase IR every derived artifact
+        reads: :attr:`matrix` / :attr:`per_primitive` accumulate its
+        edges, :meth:`collective_seconds_split` sums its per-tier times,
+        the Perfetto exporter renders its lanes.  Built once (with
+        fallback warnings, like the placement always warned) and memoized;
+        ``decompose`` runs at most once per op per binding."""
+        return self._cached("schedules", lambda: (
+            schedules_for_ops(self.ops, self.algorithm, self.topo,
+                              warn=True)))
+
+    def schedule_summaries(self) -> list[dict]:
+        """Serializable per-op schedule summaries (schema-v5 section)."""
+        return [sched.summary() for sched in self.schedules()]
+
     # -- time models -------------------------------------------------------
     def collective_seconds(self) -> float:
         """Serialized collective time (0.0 without a topology)."""
@@ -131,12 +152,18 @@ class CommView:
         return ici + dcn
 
     def collective_seconds_split(self) -> tuple[float, float]:
-        """Per-tier serialized collective time ``(ici_s, dcn_s)``."""
+        """Per-tier serialized collective time ``(ici_s, dcn_s)``,
+        execution-weighted, summed over the memoized schedules."""
         def build():
             if self.topo is None:
                 return 0.0, 0.0
-            return cost_models.total_time_split(self.ops, self.topo,
-                                                self.algorithm)
+            ici = dcn = 0.0
+            for op, sched in zip(self.ops, self.schedules()):
+                i, d = sched.time_split(self.topo)
+                w = max(1.0, op.weight)
+                ici += i * w
+                dcn += d * w
+            return ici, dcn
         return self._cached("seconds_split", build)
 
     def collective_overlap_seconds(self) -> float:

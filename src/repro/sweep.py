@@ -16,10 +16,21 @@ Three properties keep iteration fast:
   (model ``.shapes()`` trees), so no device memory is ever allocated;
 * **cache**: finished reports land in the on-disk
   :class:`~repro.core.report_cache.ReportCache` keyed by ``(config, mesh,
-  algorithm, jax version)`` -- a second sweep run recompiles nothing;
+  algorithm, jax version)`` -- a second sweep run recompiles nothing, and a
+  cell keyed with ``phase=`` reuses the cached whole-session snapshot
+  instead of recapturing (per-phase rows are lazy ``view(phase=...)``
+  bindings over it);
 * **algorithm derivation**: compilation is algorithm-independent, so extra
-  algorithms for an already-compiled cell are derived via
-  ``CommReport.with_algorithm`` in milliseconds.
+  algorithms for an already-compiled cell are derived in milliseconds from
+  a sibling report's lazy ``view(algorithm)`` binding
+  (``CommReport.rebound``).
+
+Multi-phase workloads sweep natively: a config's builder may return
+``{"captures": [{"phase", "fn", "args", ...}, ...]}`` instead of a single
+``{"fn", "args"}``, and the cell is monitored as one
+:class:`~repro.core.session.MonitorSession` (one compile per capture, one
+snapshot per cell) -- see the ``serve`` config's prefill/decode cells and
+``sweep --by-phase``.
 """
 from __future__ import annotations
 
@@ -65,12 +76,18 @@ def build_mesh(spec: str):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """One sweepable workload: a builder from mesh -> monitorable program."""
+    """One sweepable workload: a builder from mesh -> monitorable program.
+
+    ``build(mesh)`` returns either ``dict(fn=, args=, kwargs=)`` (a single
+    captured function) or ``dict(captures=[dict(phase=, fn=, args=,
+    kwargs=, name=), ...])`` -- a multi-phase session monitored as one
+    cell.
+    """
 
     name: str
     description: str
     version: str                 # part of the cache key: bump to invalidate
-    build: Callable              # (mesh) -> dict(fn=, args=, kwargs=)
+    build: Callable              # (mesh) -> dict(fn=...) | dict(captures=...)
 
     @property
     def config_id(self) -> str:
@@ -176,6 +193,53 @@ def _build_resnet(mesh):
     return {"fn": step, "args": (params, _sds_like(params), batch)}
 
 
+def _build_serve(mesh):
+    """Prefill/decode serve cells: one multi-phase session per sweep cell.
+
+    Monitors the qwen3-family reduced config's prefill (full prompt, fills
+    the KV cache) and decode (one token against the cache) as TWO named
+    phases of one :class:`~repro.core.session.MonitorSession`, so
+    ``sweep --by-phase`` shows the prefill all-gather-heavy profile next
+    to the decode TP-psum profile without a separate compile per row.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.models import build_model
+    from repro.parallel import Sharder
+    from repro.serve import ServeConfig, cache_shardings
+
+    n_data = _data_axis_size(mesh)
+    batch = 2 * n_data
+    prompt_len, max_len = 32, 48
+    cfg = configs.config("qwen3_8b", reduced=True)
+    model = build_model(cfg)
+    shd = Sharder(mesh)
+    scfg = ServeConfig(max_len=max_len, batch=batch)
+    cache_sh = cache_shardings(model, scfg, shd)
+    params = model.shapes()
+    i32 = jnp.int32
+
+    def prefill(params, batch_):
+        return model.prefill(params, batch_, shd, max_len=max_len)
+
+    def decode(params, cache, batch_):
+        return model.decode_step(params, cache, batch_, shd)
+
+    return {"captures": [
+        {"phase": "prefill", "name": "prefill", "fn": prefill,
+         "args": (params,
+                  {"tokens": jax.ShapeDtypeStruct((batch, prompt_len),
+                                                  i32)}),
+         "kwargs": {"out_shardings": (None, cache_sh)}},
+        {"phase": "decode", "name": "decode", "fn": decode,
+         "args": (params, model.cache_shapes(batch, max_len),
+                  {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}),
+         "kwargs": {"in_shardings": (None, cache_sh, None),
+                    "out_shardings": (None, cache_sh)}},
+    ]}
+
+
 def _arch_builder(arch: str):
     """Reduced-scale train step for one :mod:`repro.configs` architecture,
     sharded by the production Sharder over the given mesh (needs data+model
@@ -226,6 +290,9 @@ def _registry() -> dict[str, SweepSpec]:
         SweepSpec("resnet", "paper §4.2 ResNet-18 image classification, DDP "
                   "step (PyTorch-style bucketing)",
                   "v1:classes=100,bucket=1", _build_resnet),
+        SweepSpec("serve", "prefill/decode serve cells: one multi-phase "
+                  "session per cell (qwen3_8b reduced; use --by-phase)",
+                  "v1:qwen3,prompt=32,max=48", _build_serve),
     ]
     for arch in _configs.ARCH_IDS:
         specs.append(SweepSpec(
@@ -242,6 +309,25 @@ def available_configs() -> dict[str, SweepSpec]:
 # ---------------------------------------------------------------------------
 # the sweep itself
 # ---------------------------------------------------------------------------
+def _monitor_cell(built: dict, mesh, name: str, algorithm: str):
+    """Monitor one built cell: a single function via ``monitor_fn``, or a
+    ``captures`` list as one multi-phase :class:`MonitorSession`."""
+    if "captures" not in built:
+        return monitor_fn(
+            built["fn"], *built.get("args", ()),
+            mesh=mesh, name=name, algorithm=algorithm,
+            **built.get("kwargs", {}))
+    from repro.core import MonitorSession
+
+    with MonitorSession(mesh=mesh, name=name, algorithm=algorithm) as sess:
+        for cap in built["captures"]:
+            with sess.phase(cap["phase"]):
+                sess.capture(cap["fn"], *cap.get("args", ()),
+                             name=cap.get("name"),
+                             **cap.get("kwargs", {}))
+    return sess.report()
+
+
 @dataclasses.dataclass
 class SweepResult:
     reports: list                        # CommReport, one per finished cell
@@ -372,10 +458,8 @@ def run_sweep(
                 try:
                     mesh = build_mesh(mspec)
                     built = spec.build(mesh)
-                    rep = monitor_fn(
-                        built["fn"], *built.get("args", ()),
-                        mesh=mesh, name=f"{cname}@{mspec}",
-                        algorithm=alg0, **built.get("kwargs", {}))
+                    rep = _monitor_cell(built, mesh, f"{cname}@{mspec}",
+                                        alg0)
                 except Exception as e:  # noqa: BLE001 -- keep sweeping
                     log(f"[sweep] FAIL config={cname} mesh={mspec}: {e!r}")
                     result.failures.append(
@@ -389,10 +473,12 @@ def run_sweep(
                 cell[alg0] = rep
                 missing = [a for a in algorithms if a not in cell]
             if missing and (cell or sibling):
-                # warm: derive remaining algorithms without recompiling
+                # warm: derive remaining algorithms without recompiling --
+                # a lazy view(alg) binding over the sibling's compiled ops,
+                # snapshotted so the cache gets one report per algorithm
                 base = next(iter(cell.values())) if cell else sibling
                 for alg in missing:
-                    rep = base.with_algorithm(alg)
+                    rep = base.rebound(alg)
                     rep.meta = dict(base.meta, source="derived",
                                     algorithm=alg)
                     log(f"[sweep] derive config={cname} mesh={mspec} "

@@ -82,16 +82,22 @@ class TestRoundTrip:
         # old-style op entries keep their repr'd shapes
         assert all("shapes" in op for op in d["ops"])
 
-    def test_with_algorithm_no_recompile(self, report):
-        tree = report.with_algorithm("tree")
+    def test_view_rebinding_no_recompile(self, report):
+        """Algorithm comparison is a lazy view binding; ``rebound`` (the
+        sweep derive path) snapshots it into a sibling report."""
+        tv = report.view("tree")
+        assert not np.allclose(tv.matrix, report.matrix)
+        tree = report.rebound("tree")
         assert tree.algorithm == "tree"
         assert tree.compiled_ops is report.compiled_ops or \
             len(tree.compiled_ops) == len(report.compiled_ops)
-        assert not np.allclose(tree.matrix, report.matrix)
+        np.testing.assert_allclose(tree.matrix, tv.matrix)
         # same payloads, different wire model
         assert sum(r["payload_bytes"]
                    for r in tree.compiled_summary.values()) == \
             sum(r["payload_bytes"] for r in report.compiled_summary.values())
+        # the deprecated eager spelling is gone
+        assert not hasattr(report, "with_algorithm")
 
 
 class TestSchemaSections:
@@ -100,11 +106,11 @@ class TestSchemaSections:
 
     pytestmark = pytest.mark.compile  # module fixture compiles
 
-    def test_v4_writes_link_sections(self, report, tmp_path):
-        p = str(tmp_path / "v4.json")
+    def test_v5_writes_link_sections(self, report, tmp_path):
+        p = str(tmp_path / "v5.json")
         report.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v4"
+        assert d["schema"] == "repro.comm_report.v5"
         assert len(d["link_matrix"]) == report.num_devices + 1
         assert d["links"], "per-link rows missing"
         for row in d["links"]:
@@ -113,18 +119,18 @@ class TestSchemaSections:
             assert row["kind"] in ("ici", "dcn")
         assert "ici" in d["link_summary"]
 
-    def test_v4_writes_phase_section(self, report, tmp_path):
+    def test_v5_writes_phase_section(self, report, tmp_path):
         """monitor_fn is a single-phase session: its snapshot carries one
         'main' phase record and phase tags on every op."""
-        p = str(tmp_path / "v4.json")
+        p = str(tmp_path / "v5.json")
         report.save(p)
         d = json.loads(open(p).read())
         assert [ph["name"] for ph in d["phases"]] == ["main"]
         assert d["phases"][0]["num_captures"] == 1
         assert all(op["phase"] == "main" for op in d["ops"])
 
-    def test_v4_writes_overlap_sections(self, report, tmp_path):
-        p = str(tmp_path / "v4.json")
+    def test_v5_writes_overlap_sections(self, report, tmp_path):
+        p = str(tmp_path / "v5.json")
         report.save(p)
         d = json.loads(open(p).read())
         assert "ici" in d["link_tiers"]
@@ -139,16 +145,18 @@ class TestSchemaSections:
 
     @pytest.mark.parametrize("old_schema", ["repro.comm_report.v1",
                                             "repro.comm_report.v2",
-                                            "repro.comm_report.v3"])
+                                            "repro.comm_report.v3",
+                                            "repro.comm_report.v4"])
     def test_old_file_loads_and_rederives_links(self, report, tmp_path,
                                                 old_schema):
-        """Files written by previous schemas (no link/overlap/phase
-        sections) load fine; the derived views recompute from ops+topo."""
+        """Files written by previous schemas (no link/overlap/phase/
+        schedule sections) load fine; the derived views recompute from
+        ops+topo."""
         p = str(tmp_path / "old.json")
         report.save(p)
         d = json.loads(open(p).read())
         for key in ("links", "link_matrix", "link_summary", "link_tiers",
-                    "overlap", "phases", "hlo_gz"):
+                    "overlap", "phases", "hlo_gz", "schedules"):
             d.pop(key, None)
         for op in d["ops"]:
             op.pop("phase", None)
@@ -235,7 +243,7 @@ class TestPerfetto:
     pytestmark = pytest.mark.compile  # module fixture compiles
 
     def test_chrome_trace_schema(self, report):
-        doc = export.chrome_trace([report, report.with_algorithm("tree")])
+        doc = export.chrome_trace([report, report.rebound("tree")])
         assert set(doc) >= {"traceEvents", "displayTimeUnit"}
         events = doc["traceEvents"]
         assert events, "no events emitted"
@@ -244,16 +252,40 @@ class TestPerfetto:
             assert e["ph"] in ("X", "M")
             if e["ph"] == "X":
                 assert e["ts"] >= 0 and e["dur"] > 0
-                assert e["cat"] == "collective"
-                assert e["args"]["payload_bytes"] >= 0
+                assert e["cat"] in ("collective", "tier", "phase")
+                if e["cat"] == "collective":
+                    assert e["args"]["payload_bytes"] >= 0
             else:
                 assert "name" in e["args"]
-        # per-process timelines are laid out serially (no overlap model)
+        # each track's spans are laid out in non-decreasing start order
+        # (tracks themselves may overlap: that is the per-tier pipelining)
         for pid in {e["pid"] for e in events}:
-            xs = [e for e in events if e["pid"] == pid and e["ph"] == "X"]
-            ts = [e["ts"] for e in xs]
-            assert ts == sorted(ts)
+            for tid in {e["tid"] for e in events if e["pid"] == pid}:
+                ts = [e["ts"] for e in events
+                      if e["pid"] == pid and e["tid"] == tid
+                      and e["ph"] == "X"]
+                assert ts == sorted(ts)
         json.dumps(doc)  # must be JSON-serializable as-is
+
+    def test_tier_lanes_from_schedules(self, report):
+        """Overlap-aware per-tier lanes: phase spans render straight from
+        the decomposition schedules on dedicated ICI / DCN tracks."""
+        events = export.trace_events(report)
+        lane_meta = {e["args"]["name"]: e["tid"] for e in events
+                     if e["ph"] == "M" and e["tid"] > 0}
+        assert "ici lane" in lane_meta and "dcn lane" in lane_meta
+        tiers = [e for e in events if e.get("cat") == "tier"]
+        assert tiers, "no tier-lane spans emitted"
+        for e in tiers:
+            assert e["args"]["tier"] in ("ici", "dcn")
+            assert e["args"]["structure"] in ("ring", "tree", "a2a",
+                                              "pairs")
+            assert e["args"]["bytes_per_rank"] >= 0
+        # mesh8 is single-pod: every phase must ride the ICI lane
+        assert {e["tid"] for e in tiers} == {lane_meta["ici lane"]}
+        # an op's span covers its phases
+        ops = [e for e in events if e.get("cat") == "collective"]
+        assert ops and all(e["dur"] > 0 for e in ops)
 
     def test_one_process_per_report(self, report):
         doc = export.chrome_trace([report, report])
@@ -265,7 +297,7 @@ class TestHtml:
 
     def test_dashboard_structure(self, report, tmp_path):
         p = str(tmp_path / "d.html")
-        export.export_html([report, report.with_algorithm("tree")], p)
+        export.export_html([report, report.rebound("tree")], p)
         html_text = open(p).read()
         assert html_text.count("<h2>") == 2
         assert "td class='q" in html_text          # ramp-bucketed cells
@@ -313,6 +345,37 @@ class TestCache:
         with open(cache.path_for(key), "w") as f:
             f.write("{not json")
         assert cache.get(key) is None
+
+    def test_phase_is_key_neutral(self):
+        """Satellite: a sweep cell keyed with phase= addresses the SAME
+        entry as the whole session -- phases are views, not compiles."""
+        base = cache_key("a/v1", "4x2:data,model", "ring", jax_version="1")
+        assert cache_key("a/v1", "4x2:data,model", "ring", jax_version="1",
+                         phase="decode") == base
+        assert cache_key("a/v1", "4x2:data,model", "ring", jax_version="1",
+                         phase="prefill") == base
+
+    def test_phase_aware_get_reuses_session_snapshot(self, tmp_path):
+        """A phase-keyed lookup hands back the cached whole-session
+        snapshot (per-phase artifacts derive lazily); a phase the snapshot
+        never captured is a miss."""
+        from repro.core.events import PhaseRecord
+        rep = hand_report()
+        rep.phases = [PhaseRecord(name="prefill", num_captures=1),
+                      PhaseRecord(name="decode", num_captures=1)]
+        rep.compiled_ops[0].phase = "decode"
+        cache = ReportCache(root=str(tmp_path / "cache"))
+        key = cache_key("serve/v1", "4:data", "ring",
+                        phase="decode")      # == the session's key
+        cache.put(key, rep)
+        back = cache.get(key, phase="decode")
+        assert back is not None
+        assert back.phase_names() == ["prefill", "decode"]
+        # the decode view derives from the snapshot, nothing recaptured
+        assert back.view(phase="decode").summary != {}
+        assert back.view(phase="prefill").summary == {}
+        # a phase the session never captured must miss
+        assert cache.get(key, phase="bwd") is None
 
 
 class TestReporter:

@@ -169,14 +169,16 @@ class TestHierarchicalPlacement:
     def test_dcn_link_rows_match_billed_cross_bytes(self, kind, topo_name):
         """THE acceptance criterion: the link matrix's DCN row/col sums
         (each device's uplink/downlink bytes) equal the cross-pod bytes
-        ``collective_time`` bills -- its DCN-tier seconds times the
-        per-chip DCN share.  On a single pod both sides are zero."""
+        ``collective_time`` bills -- its DCN-tier *bandwidth* seconds times
+        the per-chip DCN share (links carry bytes, so the latency term is
+        excluded from the recovery).  On a single pod both sides are
+        zero."""
         topo = TOPOLOGIES[topo_name]
         op = mk_op(kind, weight=3.0)
         lu = comm_matrix.link_utilization_for_ops([op], topo, "hierarchical")
         lm = lu.matrix()
         ici_s, dcn_s = cost_models.collective_time_split(
-            op, topo, "hierarchical")
+            op, topo, "hierarchical", include_latency=False)
         cross_per_rank = dcn_s * topo.ring_bw_per_chip(True) * op.weight
         for d in range(topo.num_devices):
             assert lm[d + 1, 0] == pytest.approx(cross_per_rank), \
@@ -201,8 +203,9 @@ class TestHierarchicalPlacement:
         np.testing.assert_allclose(hier, ring)
         # billing agrees with the placement: flat ring payload at the
         # per-chip DCN share, no phantom ICI/DCN decomposition
+        # (bandwidth term -- the latency hops ride on DCN too)
         ici_s, dcn_s = cost_models.collective_time_split(
-            op, TWO_POD, "hierarchical")
+            op, TWO_POD, "hierarchical", include_latency=False)
         per_rank = cost_models.wire_bytes_per_rank(
             kind, op.payload_bytes, len(group), "ring")
         assert ici_s == 0.0
@@ -445,10 +448,12 @@ class TestWrapAwareRouting:
     def test_bidirectional_ring_matches_cost_model(self):
         """The over-count fix: a ring over consecutive torus neighbours now
         streams both directions, so the bottleneck link carries HALF the
-        per-rank bytes and contention_time equals collective_time (before:
-        2x on size>2 axes)."""
+        per-rank bytes and contention_time equals collective_time's
+        bandwidth term (before: 2x on size>2 axes; the latency hops are a
+        separate, link-free term)."""
         op = mk_op("all-reduce")
-        t_flat = cost_models.collective_time(op, ONE_POD, "ring")
+        t_flat = cost_models.collective_time(op, ONE_POD, "ring",
+                                             include_latency=False)
         t_link = cost_models.contention_time([op], ONE_POD, "ring")
         assert t_link == pytest.approx(t_flat)
 
@@ -457,7 +462,8 @@ class TestWrapAwareRouting:
         the full per-rank bytes at both cables' bandwidth."""
         pair = MeshTopology(axis_names=("data",), axis_sizes=(2,))
         op = mk_op("all-reduce", group=[0, 1])
-        t_flat = cost_models.collective_time(op, pair, "ring")
+        t_flat = cost_models.collective_time(op, pair, "ring",
+                                             include_latency=False)
         t_link = cost_models.contention_time([op], pair, "ring")
         assert t_link == pytest.approx(t_flat)
 
@@ -536,41 +542,51 @@ class TestOverlapModel:
 
 
 class TestCollectiveTimeFaithful:
-    """The requested algorithm is billed, even across DCN (satellite fix)."""
+    """The requested algorithm is billed, even across DCN (satellite fix).
+
+    Bandwidth terms are pinned with ``include_latency=False``; the default
+    (latency-inclusive) billing is pinned separately in
+    :class:`TestLatencyTerms`.
+    """
 
     def _op(self, group):
         return mk_op("all-reduce", group=group)
 
     def test_intra_pod_uses_ici(self):
         op = self._op([0, 1, 2, 3])    # pod 0 only
-        t = cost_models.collective_time(op, TWO_POD, "ring")
+        t = cost_models.collective_time(op, TWO_POD, "ring",
+                                        include_latency=False)
         per_rank = cost_models.wire_bytes_per_rank(
             "all-reduce", op.payload_bytes, 4, "ring")
         assert t == pytest.approx(per_rank / TWO_POD.ring_bw_per_chip(False))
 
     def test_ring_across_dcn_pays_full_payload_on_dcn(self):
         op = self._op(list(range(8)))
-        t = cost_models.collective_time(op, TWO_POD, "ring")
+        t = cost_models.collective_time(op, TWO_POD, "ring",
+                                        include_latency=False)
         per_rank = cost_models.wire_bytes_per_rank(
             "all-reduce", op.payload_bytes, 8, "ring")
         assert t == pytest.approx(per_rank / TWO_POD.ring_bw_per_chip(True))
 
     def test_tree_across_dcn_pays_full_payload_on_dcn(self):
         op = self._op(list(range(8)))
-        t = cost_models.collective_time(op, TWO_POD, "tree")
+        t = cost_models.collective_time(op, TWO_POD, "tree",
+                                        include_latency=False)
         assert t == pytest.approx(
             2.0 * op.payload_bytes / TWO_POD.ring_bw_per_chip(True))
 
     def test_hierarchical_across_dcn_splits_tiers(self):
         op = self._op(list(range(8)))
         s = op.payload_bytes
-        t = cost_models.collective_time(op, TWO_POD, "hierarchical")
+        t = cost_models.collective_time(op, TWO_POD, "hierarchical",
+                                        include_latency=False)
         p, m = 2, 4
         intra = 2.0 * (m - 1) * s / m / TWO_POD.ring_bw_per_chip(False)
         cross = 2.0 * (p - 1) * (s / m) / p / TWO_POD.ring_bw_per_chip(True)
         assert t == pytest.approx(intra + cross)
         # the point of hierarchy: strictly faster than ring across DCN
-        assert t < cost_models.collective_time(op, TWO_POD, "ring")
+        assert t < cost_models.collective_time(op, TWO_POD, "ring",
+                                               include_latency=False)
 
     def test_algorithms_differ_across_dcn(self):
         op = self._op(list(range(8)))
@@ -584,3 +600,55 @@ class TestCollectiveTimeFaithful:
         t1 = cost_models.total_time([op1], TWO_POD, "ring")
         t16 = cost_models.total_time([op16], TWO_POD, "ring")
         assert t16 == pytest.approx(16 * t1)
+
+
+class TestLatencyTerms:
+    """The schedule's per-phase ``latency_hops``, billed by default at the
+    tier's per-hop latency (tentpole: ``latency_model`` hops finally wired
+    into ``collective_time_split``)."""
+
+    def test_default_includes_latency(self):
+        """collective_time == bandwidth term + hops * per-hop latency, with
+        ring hops matching the closed-form ``latency_model``."""
+        op = mk_op("all-reduce")           # single-axis 8-ring on ONE_POD
+        bw = cost_models.collective_time(op, ONE_POD, "ring",
+                                         include_latency=False)
+        full = cost_models.collective_time(op, ONE_POD, "ring")
+        hops = cost_models.latency_model("all-reduce", 8, "ring")
+        assert full == pytest.approx(
+            bw + hops * ONE_POD.hw.ici_hop_latency_s)
+
+    def test_tree_latency_is_logarithmic(self):
+        op = mk_op("all-reduce")
+        bw = cost_models.collective_time(op, ONE_POD, "tree",
+                                         include_latency=False)
+        full = cost_models.collective_time(op, ONE_POD, "tree")
+        hops = cost_models.latency_model("all-reduce", 8, "tree")
+        assert full == pytest.approx(
+            bw + hops * ONE_POD.hw.ici_hop_latency_s)
+
+    def test_hierarchical_latency_splits_tiers(self):
+        """Intra-pod hops pay ICI latency, the cross-pod exchange pays DCN
+        latency -- and the TWO_POD intra subgroups (2x2, per-axis) pay
+        2*(2-1)+2*(2-1) = 4 ICI hops instead of the flattened ring's 6."""
+        op = mk_op("all-reduce")
+        i_bw, d_bw = cost_models.collective_time_split(
+            op, TWO_POD, "hierarchical", include_latency=False)
+        i, d = cost_models.collective_time_split(op, TWO_POD,
+                                                 "hierarchical")
+        assert i - i_bw == pytest.approx(4 * TWO_POD.hw.ici_hop_latency_s)
+        assert d - d_bw == pytest.approx(2 * TWO_POD.hw.dcn_hop_latency_s)
+
+    def test_per_axis_reduces_latency_hops(self):
+        """A multi-axis group's per-axis schedule pays 2*sum(size-1) serial
+        hops -- strictly fewer than the flattened ring's 2*(n-1)."""
+        from repro.core.decompose import decompose
+        mesh44 = MeshTopology(axis_names=("data", "model"),
+                              axis_sizes=(4, 4))
+        op = mk_op("all-reduce", group=list(range(16)))
+        sched = decompose(op, "ring", mesh44)
+        assert sched.latency_hops("ici") == 2 * (3 + 3)
+        flat = decompose(op, "ring", None)
+        assert flat.latency_hops() == 2 * 15
+        assert flat.latency_hops() == cost_models.latency_model(
+            "all-reduce", 16, "ring")

@@ -329,13 +329,13 @@ class TestCompatContract:
 
 
 @pytest.mark.compile
-class TestSchemaV4RoundTrip:
+class TestSchemaRoundTrip:
     def test_phases_survive_save_load(self, phased_session, tmp_path):
         rep = phased_session.report()
-        p = str(tmp_path / "v4.json")
+        p = str(tmp_path / "v5.json")
         rep.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v4"
+        assert d["schema"] == "repro.comm_report.v5"
         assert [ph["name"] for ph in d["phases"]] == ["fwd", "bwd", "optim"]
         assert all("phase" in op for op in d["ops"])
         back = CommReport.load(p)
@@ -346,7 +346,8 @@ class TestSchemaV4RoundTrip:
 
     @pytest.mark.parametrize("old_schema", ["repro.comm_report.v1",
                                             "repro.comm_report.v2",
-                                            "repro.comm_report.v3"])
+                                            "repro.comm_report.v3",
+                                            "repro.comm_report.v4"])
     def test_older_schemas_still_load(self, phased_session, tmp_path,
                                       old_schema):
         rep = phased_session.report()

@@ -27,6 +27,13 @@ class TestRegistry:
         assert {"paper", "gnmt", "resnet"} <= names
         assert set(configs.ARCH_IDS) <= names
 
+    def test_serve_config_is_multi_phase(self):
+        """The serve config builds prefill/decode captures (a multi-phase
+        session cell) instead of a single monitored function."""
+        assert "serve" in sweep.available_configs()
+        spec = sweep.available_configs()["serve"]
+        assert "prefill/decode" in spec.description
+
     def test_unknown_config_rejected(self):
         with pytest.raises(KeyError):
             sweep.run_sweep(["nope"], ["4x2"], ["ring"])
@@ -69,6 +76,59 @@ class TestSweepRuns:
         # the sibling ring entry satisfies hierarchical without compiling
         assert res.compiles == 0
         assert any("derive" in l and "hierarchical" in l for l in logs)
+
+    def test_captures_build_monitors_one_session(self, mesh8):
+        """A builder returning {"captures": ...} is monitored as ONE
+        multi-phase session: phase-tagged ops, per-phase views, one
+        snapshot per cell."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        ws = NamedSharding(mesh8, P(None, "model"))
+        xs = NamedSharding(mesh8, P("data", None))
+        w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+
+        def fwd(w, x):
+            return ((x @ w) ** 2).mean()
+
+        built = {"captures": [
+            {"phase": "prefill", "name": "fwd", "fn": fwd, "args": (w, x),
+             "kwargs": {"in_shardings": (ws, xs)}},
+            {"phase": "decode", "name": "bwd",
+             "fn": jax.value_and_grad(fwd), "args": (w, x),
+             "kwargs": {"in_shardings": (ws, xs)}},
+        ]}
+        rep = sweep._monitor_cell(built, mesh8, "serve@4x2", "ring")
+        assert rep.phase_names() == ["prefill", "decode"]
+        assert {op.phase for op in rep.compiled_ops} <= \
+            {"prefill", "decode"}
+        res = sweep.SweepResult(reports=[rep], failures=[], cache_hits=0,
+                                compiles=1)
+        table = res.summary_table(by_phase=True)
+        assert "prefill" in table and "decode" in table
+
+    def test_phase_keyed_cell_reuses_session_snapshot(self, tmp_path,
+                                                      mesh8):
+        """Satellite: a sweep cell keyed with phase= hits the cached
+        whole-session snapshot instead of recapturing."""
+        from repro.core import ReportCache, cache_key
+        import jax
+        import jax.numpy as jnp
+
+        built = {"captures": [
+            {"phase": "prefill", "fn": lambda x: x.sum(),
+             "args": (jax.ShapeDtypeStruct((8, 8), jnp.float32),)},
+        ]}
+        rep = sweep._monitor_cell(built, mesh8, "serve@4x2", "ring")
+        cache = ReportCache(root=str(tmp_path / "cache"))
+        key = cache_key("serve/v1", "4x2:data,model", "ring")
+        cache.put(key, rep)
+        hit = cache.get(cache_key("serve/v1", "4x2:data,model", "ring",
+                                  phase="prefill"), phase="prefill")
+        assert hit is not None and hit.phase_names() == ["prefill"]
+        assert cache.get(key, phase="decode") is None   # never captured
 
     def test_unrequested_sibling_spares_compile(self, tmp_path):
         cache = ReportCache(root=str(tmp_path / "cache"))
