@@ -94,6 +94,8 @@ def _cmd_sweep(args) -> int:
         print(f"error: unknown config(s) {unknown}; known: "
               f"{sorted(registry)}", file=sys.stderr)
         return 2
+    if args.scale_curve:
+        return _cmd_scale_curve(args, sweep_mod)
     result = sweep_mod.run_sweep(
         _split(args.configs), _split(args.meshes), _split(args.algorithms),
         cache=_cache_from(args), use_cache=not args.no_cache)
@@ -116,6 +118,47 @@ def _cmd_sweep(args) -> int:
     with open(summary_path, "w") as f:
         f.write(table + "\n")
     result.artifacts["summary"] = summary_path
+    print()
+    for fmt, path in sorted(result.artifacts.items()):
+        print(f"[{fmt}] {path}")
+    if result.failures:
+        print(f"\n{len(result.failures)} cell(s) failed:", file=sys.stderr)
+        for f in result.failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def _cmd_scale_curve(args, sweep_mod) -> int:
+    """``sweep --scale-curve``: base-mesh monitoring + fleet projection."""
+    from repro import scale
+    from repro.core.export import csv_exporter, html_exporter
+
+    try:
+        device_counts = [int(p) for p in _split(args.scale_points)]
+    except ValueError:
+        print(f"error: --scale-points wants comma-separated ints, got "
+              f"{args.scale_points!r}", file=sys.stderr)
+        return 2
+    result, points = sweep_mod.run_scale_curve(
+        _split(args.configs), _split(args.meshes), _split(args.algorithms),
+        device_counts=device_counts,
+        cache=_cache_from(args), use_cache=not args.no_cache)
+    if not result.reports:
+        print("no cell finished; failures:", file=sys.stderr)
+        for f in result.failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    table = scale.scale_table(points)
+    print()
+    print(f"== scale curves: {len(points)} points over "
+          f"{len(result.reports)} base cells ==")
+    print(table)
+    rows = [p.row() for p in points]
+    result.artifacts["scale_csv"] = csv_exporter.export_scale_csv(
+        rows, os.path.join(args.out, "scale_curve.csv"))
+    result.artifacts["scale_html"] = html_exporter.export_scale_html(
+        rows, os.path.join(args.out, "scale_curve.html"))
     print()
     for fmt, path in sorted(result.artifacts.items()):
         print(f"[{fmt}] {path}")
@@ -245,6 +288,14 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--by-phase", action="store_true", dest="by_phase",
                    help="expand each cell into one row per session phase "
                         "(statistics from that phase's CommView)")
+    p.add_argument("--scale-curve", action="store_true", dest="scale_curve",
+                   help="monitor each cell at its base mesh, then project "
+                        "onto synthetic fleet topologies per --scale-points "
+                        "device count (sparse matrices throughout; emits "
+                        "scale_curve.csv + scale_curve.html)")
+    p.add_argument("--scale-points", default="256,1024,4096,16384",
+                   dest="scale_points",
+                   help="comma list of fleet device counts for --scale-curve")
     p.add_argument("--formats", default="json,csv,html,perfetto")
     p.add_argument("--out", default=os.path.join("artifacts", "sweep"))
     p.add_argument("--devices", type=int, default=8)

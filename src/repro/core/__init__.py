@@ -17,6 +17,8 @@ from .decompose import (CollectiveSchedule, CommPhase,
 from .cost_models import (ALGORITHMS, collective_time, contention_time,
                           device_send_bytes, table1_allreduce_bytes,
                           validate_algorithm, wire_bytes_per_rank)
+from .sparse import (SPARSE_DEVICE_THRESHOLD, SparseCommMatrix, from_dense,
+                     is_sparse)
 from .topology import HardwareSpec, Link, MeshTopology, V5E
 from .views import CommView
 from .monitor import CommReport, monitor_fn, roofline_of
@@ -38,6 +40,7 @@ __all__ = [
     "ALGORITHMS", "validate_algorithm",
     "wire_bytes_per_rank", "collective_time", "table1_allreduce_bytes",
     "contention_time", "device_send_bytes",
+    "SPARSE_DEVICE_THRESHOLD", "SparseCommMatrix", "from_dense", "is_sparse",
     "HardwareSpec", "Link", "MeshTopology", "V5E",
     "CommView", "CommReport", "monitor_fn", "roofline_of",
     "Capture", "MonitorSession",

@@ -51,6 +51,7 @@ import numpy as np
 from .events import CollectiveOp, HostTransfer
 from . import cost_models, decompose as decompose_mod
 from .decompose import HierarchicalFallbackWarning, decompose  # noqa: F401
+from .sparse import SparseAccumulator, SparseCommMatrix, is_sparse
 from .topology import DCN_FABRIC, Link, MeshTopology
 
 
@@ -267,7 +268,8 @@ def matrix_for_ops(
     algorithm: str = "ring",
     kinds: Optional[set[str]] = None,
     topo: Optional[MeshTopology] = None,
-) -> np.ndarray:
+    sparse: bool = False,
+):
     """Bytes-sent matrix, shape ``(d+1, d+1)``; row/col 0 = host.
 
     ``topo`` enables topology-faithful placement (per-axis ring phases for
@@ -280,34 +282,61 @@ def matrix_for_ops(
     into buffers and flushed with one ``np.add.at`` per
     ``_FLUSH_EDGES``-sized batch -- see :func:`matrix_for_ops_reference`
     for the legacy oracle this is property-tested against.
+
+    ``sparse=True`` returns a :class:`~repro.core.sparse.SparseCommMatrix`
+    instead of the dense array -- element-exact (property-tested), built
+    without ever allocating ``(d+1)^2`` floats, which is what makes
+    fleet-scale device counts (``sweep --scale-curve``, 16k devices)
+    tractable.
     """
     cost_models.validate_algorithm(algorithm)
     return _accumulate_edges(
         ((op, op_edge_arrays(op, algorithm, topo))
          for op in ops if kinds is None or op.kind in kinds),
-        num_devices)
+        num_devices, sparse=sparse)
 
 
 def matrix_for_schedules(
     ops, schedules, num_devices: int,
     kinds: Optional[set[str]] = None,
-) -> np.ndarray:
+    sparse: bool = False,
+):
     """Bytes-sent matrix from pre-built schedules (aligned with ``ops``).
 
     The entry point for callers that already hold the ops' decomposition
     schedules (e.g. a :class:`~repro.core.views.CommView`'s memoized IR):
     identical accumulation to :func:`matrix_for_ops` without re-running
-    :func:`~repro.core.decompose.decompose` per op.
+    :func:`~repro.core.decompose.decompose` per op.  ``sparse=True``
+    builds the COO :class:`~repro.core.sparse.SparseCommMatrix` form.
     """
     return _accumulate_edges(
         ((op, schedule_edge_arrays(sched))
          for op, sched in zip(ops, schedules)
          if kinds is None or op.kind in kinds),
-        num_devices)
+        num_devices, sparse=sparse)
 
 
-def _accumulate_edges(pairs, num_devices: int) -> np.ndarray:
+def _accumulate_edges_sparse(pairs, num_devices: int) -> SparseCommMatrix:
+    """Sparse twin of :func:`_accumulate_edges`: same per-op COO edges,
+    accumulated into a bounded-memory :class:`SparseAccumulator` -- no
+    ``(d+1)^2`` allocation anywhere on this path."""
+    acc = SparseAccumulator(num_devices)
+    for op, (src, dst, val) in pairs:
+        if src.size == 0:
+            continue
+        w = getattr(op, "weight", 1.0)
+        keep = (src < num_devices) & (dst < num_devices)
+        if not keep.all():
+            src, dst, val = src[keep], dst[keep], val[keep]
+        acc.add(src + 1, dst + 1, val * w if w != 1.0 else val)
+    return acc.build()
+
+
+def _accumulate_edges(pairs, num_devices: int,
+                      sparse: bool = False):
     """Buffered COO accumulation over ``(op, (src, dst, val))`` pairs."""
+    if sparse:
+        return _accumulate_edges_sparse(pairs, num_devices)
     mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
     cap = _FLUSH_EDGES
     buf_src = np.empty(cap, dtype=np.intp)
@@ -441,7 +470,16 @@ def matrix_for_ops_reference(
     return mat
 
 
-def add_host_transfers(mat: np.ndarray, transfers: Iterable[HostTransfer]) -> np.ndarray:
+def add_host_transfers(mat, transfers: Iterable[HostTransfer]):
+    """Accumulate host row/col traffic into a dense or sparse matrix."""
+    if is_sparse(mat):
+        transfers = list(transfers)
+        src = np.array([0 if t.direction == "h2d" else t.device + 1
+                        for t in transfers], dtype=np.int64)
+        dst = np.array([t.device + 1 if t.direction == "h2d" else 0
+                        for t in transfers], dtype=np.int64)
+        val = np.array([t.nbytes for t in transfers], dtype=np.float64)
+        return mat.add_entries(src, dst, val)
     for t in transfers:
         if t.direction == "h2d":
             mat[0, t.device + 1] += t.nbytes
@@ -452,15 +490,16 @@ def add_host_transfers(mat: np.ndarray, transfers: Iterable[HostTransfer]) -> np
 
 def per_primitive_matrices(
     ops: list[CollectiveOp], num_devices: int, algorithm: str = "ring",
-    topo: Optional[MeshTopology] = None,
-) -> dict[str, np.ndarray]:
+    topo: Optional[MeshTopology] = None, sparse: bool = False,
+) -> dict:
     """Paper Fig. 3: one matrix per collective primitive (ops partitioned
     by kind once instead of re-filtering the whole stream per kind)."""
     by_kind: dict[str, list[CollectiveOp]] = {}
     for op in ops:
         by_kind.setdefault(op.kind, []).append(op)
     return {
-        k: matrix_for_ops(by_kind[k], num_devices, algorithm, topo=topo)
+        k: matrix_for_ops(by_kind[k], num_devices, algorithm, topo=topo,
+                          sparse=sparse)
         for k in sorted(by_kind)
     }
 
@@ -541,6 +580,23 @@ class LinkUtilization:
                 mat[0, link.dst + 1] += nbytes
         return mat
 
+    def sparse_matrix(self) -> SparseCommMatrix:
+        """The per-link utilization matrix in COO form -- same layout as
+        :meth:`matrix` (row/col 0 = DCN tier) with O(links) memory, which
+        is what the exporters read at fleet scale."""
+        src = np.empty(len(self.bytes_by_link), dtype=np.int64)
+        dst = np.empty(len(self.bytes_by_link), dtype=np.int64)
+        val = np.empty(len(self.bytes_by_link), dtype=np.float64)
+        for n, (link, nbytes) in enumerate(self.bytes_by_link.items()):
+            if link.kind == "ici":
+                src[n], dst[n] = link.src + 1, link.dst + 1
+            elif link.dst == DCN_FABRIC:
+                src[n], dst[n] = link.src + 1, 0
+            else:
+                src[n], dst[n] = 0, link.dst + 1
+            val[n] = nbytes
+        return SparseCommMatrix(self.topo.num_devices, src, dst, val)
+
     def summary(self) -> dict:
         """Per link-kind aggregates for tables and serialization."""
         out: dict[str, dict] = {}
@@ -582,8 +638,14 @@ class LinkUtilization:
             "busiest bytes", "bottleneck ms"])
 
 
-def project_links(mat: np.ndarray, topo: MeshTopology) -> LinkUtilization:
+def project_links(mat, topo: MeshTopology) -> LinkUtilization:
     """Route a logical ``(d+1)^2`` matrix onto physical links.
+
+    ``mat`` may be the dense ``np.ndarray`` form or a
+    :class:`~repro.core.sparse.SparseCommMatrix` -- both project to the
+    identical link view (the sparse path iterates its coalesced COO
+    entries instead of ``argwhere`` over a dense block, and never
+    materializes the dense array).  Anything else raises ``TypeError``.
 
     The host row/col (index 0) is skipped -- host transfers ride PCIe, not
     the ICI/DCN fabric.  Each device-to-device entry is routed by
@@ -598,22 +660,35 @@ def project_links(mat: np.ndarray, topo: MeshTopology) -> LinkUtilization:
     single collapsed link (``MeshTopology.links`` docstring); a hop outside
     the enumeration would silently invent fabric, so it raises.
     """
+    if is_sparse(mat):
+        srcs, dsts, vals = mat.device_entries()
+        entries = zip(srcs.tolist(), dsts.tolist(), vals.tolist())
+    elif isinstance(mat, np.ndarray):
+        dev = mat[1:, 1:]
+        entries = ((int(i), int(j), float(dev[i, j]))
+                   for i, j in np.argwhere(dev > 0))
+    else:
+        raise TypeError(
+            "project_links expects a dense (d+1)x(d+1) np.ndarray or a "
+            f"SparseCommMatrix, not {type(mat).__name__}")
     bytes_by_link: dict[Link, float] = {l: 0.0 for l in topo.links()}
-    dev = np.asarray(mat, dtype=np.float64)[1:, 1:]
-    for i, j in np.argwhere(dev > 0):
-        for link in topo.route(int(i), int(j)):
+    for i, j, nbytes in entries:
+        for link in topo.route(i, j):
             if link not in bytes_by_link:
                 raise ValueError(
                     f"route({i}, {j}) emitted {link.name}, which is not an "
                     "enumerated physical link of the topology")
-            bytes_by_link[link] += dev[i, j]
+            bytes_by_link[link] += nbytes
     return LinkUtilization(topo=topo, bytes_by_link=bytes_by_link)
 
 
 def link_utilization_for_ops(
     ops: list[CollectiveOp], topo: MeshTopology, algorithm: str = "ring",
-    kinds: Optional[set[str]] = None,
+    kinds: Optional[set[str]] = None, sparse: bool = False,
 ) -> LinkUtilization:
-    """Place ``ops``' schedules and project onto physical links."""
-    mat = matrix_for_ops(ops, topo.num_devices, algorithm, kinds, topo=topo)
+    """Place ``ops``' schedules and project onto physical links
+    (``sparse=True`` routes the COO form, never building the dense
+    matrix)."""
+    mat = matrix_for_ops(ops, topo.num_devices, algorithm, kinds, topo=topo,
+                         sparse=sparse)
     return project_links(mat, topo)

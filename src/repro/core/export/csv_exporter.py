@@ -1,24 +1,35 @@
 """CSV export: communication matrices + per-primitive summary rows.
 
-Two products:
+Three products:
 
-* ``export_matrix_csv`` -- one ``(d+1) x (d+1)`` matrix as CSV (paper Fig. 2/3
-  data), host row/column first, identical to ``reporter.matrix_to_csv``;
+* ``export_matrix_csv`` -- one ``(d+1) x (d+1)`` matrix as CSV.  Dense
+  matrices keep the square layout (paper Fig. 2/3 data, host row/column
+  first, identical to ``reporter.matrix_to_csv``); sparse COO matrices
+  write long-form ``src,dst,bytes`` rows instead -- the square form is
+  exactly the O(d^2) materialization the sparse path exists to avoid;
 * ``export_summary_csv`` -- long-form rows
   ``config,mesh,algorithm,primitive,calls,payload_bytes,wire_bytes`` across
-  one or many reports -- the sweep's machine-readable comparison table.
+  one or many reports -- the sweep's machine-readable comparison table;
+* ``export_scale_csv`` -- one row per (config, algorithm, device count)
+  from a ``sweep --scale-curve`` run.
 """
 from __future__ import annotations
 
 import os
 
 from .. import reporter
+from ..sparse import is_sparse
 
 
 def export_matrix_csv(report, path: str) -> str:
+    mat = report.matrix
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    if is_sparse(mat):
+        body = "\n".join(["src,dst,bytes"] + mat.to_csv_rows())
+    else:
+        body = reporter.matrix_to_csv(mat)
     with open(path, "w") as f:
-        f.write(reporter.matrix_to_csv(report.matrix) + "\n")
+        f.write(body + "\n")
     return path
 
 
@@ -56,6 +67,25 @@ def export_summary_csv(reports, path: str) -> str:
     for rep in reports:
         for row in summary_rows(rep):
             lines.append(",".join(str(row[c]) for c in _COLUMNS))
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+# stable schema for ``sweep --scale-curve`` output; tests pin the header
+SCALE_COLUMNS = ("config", "algorithm", "devices", "pods", "ops",
+                 "wire_bytes", "ici_ms", "dcn_ms", "overlap_ms",
+                 "bottleneck_link", "bottleneck_ms", "nnz", "build_ms")
+
+
+def export_scale_csv(points, path: str) -> str:
+    """Write scale-curve rows (``repro.scale.ScalePoint.row`` dicts), one
+    per (config, algorithm, device count), sorted for diff-stable goldens."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    lines = [",".join(SCALE_COLUMNS)]
+    for p in sorted(points, key=lambda r: (r["config"], r["algorithm"],
+                                           r["devices"])):
+        lines.append(",".join(str(p[c]) for c in SCALE_COLUMNS))
     with open(path, "w") as f:
         f.write("\n".join(lines) + "\n")
     return path

@@ -25,6 +25,7 @@ import os
 import numpy as np
 
 from .. import reporter
+from ..sparse import is_sparse
 
 # 13-step sequential blue ramp (steps 100..700 of the reference palette);
 # validated single-hue light->dark -- index 0 = near zero, 12 = max.
@@ -107,10 +108,16 @@ def _labels(d: int, block: int) -> list[str]:
     return ["host"] + [f"d{i}" for i in range(d - 1)]
 
 
-def matrix_table(mat: np.ndarray, *, max_devices: int = 32) -> str:
-    """One matrix as an HTML heatmap table (+ legend + raw-value fallback)."""
-    m, block = reporter.coarsen_matrix(np.asarray(mat, dtype=np.float64),
-                                       max_devices=max_devices)
+def matrix_table(mat, *, max_devices: int = 32) -> str:
+    """One matrix as an HTML heatmap table (+ legend + raw-value fallback).
+
+    ``mat`` may be dense or a :class:`~repro.core.sparse.SparseCommMatrix`
+    -- ``coarsen_matrix`` dispatches, so the rendered table is identical
+    either way and the sparse path never builds the ``(d+1)^2`` array.
+    """
+    if not is_sparse(mat):
+        mat = np.asarray(mat, dtype=np.float64)
+    m, block = reporter.coarsen_matrix(mat, max_devices=max_devices)
     d = m.shape[0]
     labels = _labels(d, block)
     vmax = float(m.max())
@@ -202,10 +209,14 @@ def link_section(report) -> str:
         if hasattr(report, "link_utilization") else None
     if lu is None:
         return ""
+    # sparse reports keep the link view sparse too: the COO link matrix is
+    # O(links), the dense one O(d^2)
+    link_mat = (lu.sparse_matrix() if is_sparse(report.matrix)
+                else lu.matrix())
     return ("<div><h3>physical links</h3>"
             "<div class='meta'>row/col 0 = DCN uplink/downlink; "
             "other cells = ICI neighbour links</div>"
-            + matrix_table(lu.matrix()) + _link_summary_table(lu)
+            + matrix_table(link_mat) + _link_summary_table(lu)
             + _overlap_table(report, lu)
             + "</div>")
 
@@ -306,4 +317,93 @@ def export_html(reports, path: str, title: str = "Communication matrices") -> st
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w") as f:
         f.write(render_dashboard(reports, title))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# scale-curve panel (``sweep --scale-curve``): per-config device sweeps
+# ---------------------------------------------------------------------------
+def _scale_svg(rows: list[dict]) -> str:
+    """Inline SVG: overlapped communication time vs device count, both axes
+    log scale (straight lines = power-law scaling)."""
+    pts = [(r["devices"], r["overlap_ms"]) for r in rows
+           if r["overlap_ms"] > 0]
+    if len(pts) < 2:
+        return ""
+    w, h, pad = 260, 120, 24
+    xs = [math.log2(p[0]) for p in pts]
+    ys = [math.log10(p[1]) for p in pts]
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = min(ys), max(ys)
+    xspan = (x1 - x0) or 1.0
+    yspan = (y1 - y0) or 1.0
+    coords = " ".join(
+        f"{pad + (x - x0) / xspan * (w - 2 * pad):.1f},"
+        f"{h - pad - (y - y0) / yspan * (h - 2 * pad):.1f}"
+        for x, y in zip(xs, ys))
+    labels = "".join(
+        f"<text x='{pad + (x - x0) / xspan * (w - 2 * pad):.1f}' "
+        f"y='{h - 6}' font-size='9' fill='currentColor' "
+        f"text-anchor='middle'>{d}</text>"
+        for (d, _), x in zip(pts, xs))
+    return (f"<svg width='{w}' height='{h}' role='img' "
+            "style='color: var(--text-2)'>"
+            f"<polyline points='{coords}' fill='none' "
+            "stroke='#3987e5' stroke-width='2'/>"
+            + "".join(f"<circle cx='{c.split(',')[0]}' "
+                      f"cy='{c.split(',')[1]}' r='2.5' fill='#3987e5'/>"
+                      for c in coords.split())
+            + labels
+            + f"<text x='{pad}' y='12' font-size='9' "
+              "fill='currentColor'>overlap ms vs devices "
+              "(log-log)</text></svg>")
+
+
+def render_scale_curve(points: list[dict],
+                       title: str = "Fleet scale curves") -> str:
+    """Standalone dashboard for ``sweep --scale-curve`` output: one panel
+    per (config, algorithm) with the per-device-count scaling table and a
+    log-log time-to-solution sparkline.  ``points`` are
+    :meth:`repro.scale.ScalePoint.row` dicts."""
+    groups: dict[tuple, list[dict]] = {}
+    for p in points:
+        groups.setdefault((p["config"], p["algorithm"]), []).append(p)
+    sections = []
+    for (config, algorithm), rows in sorted(groups.items()):
+        rows = sorted(rows, key=lambda r: r["devices"])
+        body = ["<table class='sum'><tr><th>devices</th><th>pods</th>"
+                "<th>wire bytes</th><th>ici ms</th><th>dcn ms</th>"
+                "<th>overlap ms</th><th>bottleneck link</th>"
+                "<th>bottleneck ms</th><th>nnz</th></tr>"]
+        for r in rows:
+            body.append(
+                f"<tr><td>{r['devices']:,}</td><td>{r['pods']}</td>"
+                f"<td>{reporter.human_bytes(r['wire_bytes'])}</td>"
+                f"<td>{r['ici_ms']:.3f}</td><td>{r['dcn_ms']:.3f}</td>"
+                f"<td>{r['overlap_ms']:.3f}</td>"
+                f"<td>{html.escape(r['bottleneck_link'])}</td>"
+                f"<td>{r['bottleneck_ms']:.3f}</td>"
+                f"<td>{r['nnz']:,}</td></tr>")
+        body.append("</table>")
+        sections.append(
+            f"<h2>{html.escape(config)} &middot; "
+            f"{html.escape(algorithm)}</h2>\n"
+            + _scale_svg(rows) + "\n" + "\n".join(body))
+    return (
+        "<!doctype html>\n<html lang='en'>\n<head>\n<meta charset='utf-8'>\n"
+        f"<title>{html.escape(title)}</title>\n"
+        "<meta name='viewport' content='width=device-width, initial-scale=1'>"
+        f"\n<style>{_CSS}</style>\n</head>\n<body>\n"
+        f"<h1>{html.escape(title)}</h1>\n"
+        "<div class='meta'>sparse COO matrices per device count; "
+        "time-to-solution = tier-overlapped collective ms; bottleneck = "
+        "busiest physical link's contention-aware ms.</div>\n"
+        + "\n".join(sections) + "\n</body>\n</html>\n")
+
+
+def export_scale_html(points: list[dict], path: str,
+                      title: str = "Fleet scale curves") -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(render_scale_curve(points, title))
     return path

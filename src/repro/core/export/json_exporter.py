@@ -1,4 +1,4 @@
-"""JSON export: the schema-``v5`` report dict, verbatim, on disk."""
+"""JSON export: the schema-``v6`` report dict, verbatim, on disk."""
 from __future__ import annotations
 
 import json
@@ -9,7 +9,7 @@ from . import serialize
 
 def export_json(report, path: str, *, include_hlo: bool = False,
                 include_schedules: bool = False) -> str:
-    """Write one report as schema-v5 JSON.  Returns ``path``.
+    """Write one report as schema-v6 JSON.  Returns ``path``.
 
     ``include_hlo=True`` persists the compiled HLO text (gzip+base64) so
     ``roofline_of`` works on the loaded report.  ``include_schedules=True``

@@ -1,4 +1,4 @@
-"""Lossless CommReport <-> plain-dict serialization (schema ``v5``).
+"""Lossless CommReport <-> plain-dict serialization (schema ``v6``).
 
 This is the substrate for everything under :mod:`repro.core.export`: the JSON
 exporter writes the dict verbatim, the on-disk report cache
@@ -43,6 +43,17 @@ demand (``CommReport.schedule_summaries()``), and every older file loads
 unchanged: missing phase tags default to ``""`` (a single anonymous
 phase), missing ``hlo_gz`` just means no offline roofline, missing
 ``schedules`` just means re-derive.
+
+Schema **v6** adds the sparse (COO) matrix encoding for fleet-scale
+reports: ``matrix`` / ``per_primitive`` values may now be either the
+legacy dense nested list or a ``{"format": "coo", "side", "src", "dst",
+"val"}`` dict (:func:`matrix_to_jsonable`), whichever the in-memory
+report held -- a sparse :class:`~repro.core.sparse.SparseCommMatrix`
+round-trips as sparse, a dense ndarray as dense, and loading restores
+the same representation (:func:`matrix_from_jsonable`).  Sparse reports
+also drop the derived dense ``link_matrix`` from the link section (it is
+O(d^2) too) and keep only the nonzero per-link ``links`` rows; v1...v5
+files, always dense lists, load unchanged.
 """
 from __future__ import annotations
 
@@ -55,14 +66,17 @@ import numpy as np
 
 from ..events import (CollectiveOp, HostTransfer, PhaseRecord, Shape,
                       TraceEvent)
+from ..sparse import SparseCommMatrix, is_sparse
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v5"
+SCHEMA = "repro.comm_report.v6"
+SCHEMA_V5 = "repro.comm_report.v5"
 SCHEMA_V4 = "repro.comm_report.v4"
 SCHEMA_V3 = "repro.comm_report.v3"
 SCHEMA_V2 = "repro.comm_report.v2"
 SCHEMA_V1 = "repro.comm_report.v1"
-ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2,
+                    SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +194,41 @@ def topo_from_dict(d: Optional[dict]) -> Optional[MeshTopology]:
 
 
 # ---------------------------------------------------------------------------
+# matrices: dense nested-list vs sparse COO dict (schema v6)
+# ---------------------------------------------------------------------------
+def matrix_to_jsonable(mat):
+    """Dense ndarray -> nested list (the v1...v5 spelling); sparse
+    :class:`SparseCommMatrix` -> ``{"format": "coo", ...}`` dict whose
+    size is O(nnz), never O(d^2)."""
+    if is_sparse(mat):
+        return {
+            "format": "coo",
+            "side": mat.side,
+            "src": mat.src.tolist(),
+            "dst": mat.dst.tolist(),
+            "val": mat.val.tolist(),
+        }
+    return np.asarray(mat).tolist()
+
+
+def matrix_from_jsonable(j):
+    """The inverse: the COO dict form restores a ``SparseCommMatrix``
+    (already coalesced on write), anything else the dense float64 array."""
+    if isinstance(j, dict):
+        fmt = j.get("format")
+        if fmt != "coo":
+            raise ValueError(f"unknown matrix format {fmt!r}; expected 'coo'")
+        return SparseCommMatrix(
+            int(j["side"]) - 1,
+            np.asarray(j["src"], dtype=np.int64),
+            np.asarray(j["dst"], dtype=np.int64),
+            np.asarray(j["val"], dtype=np.float64),
+            coalesced=True,
+        )
+    return np.asarray(j, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
 # whole-report round-trip
 # ---------------------------------------------------------------------------
 def _jsonable_cost(cost: dict) -> dict:
@@ -188,19 +237,32 @@ def _jsonable_cost(cost: dict) -> dict:
 
 
 def _link_section(report) -> dict:
-    """Schema v2+v3 physical-link view (empty when the report has no topo)."""
+    """Schema v2+v3 physical-link view (empty when the report has no topo).
+
+    For sparse (fleet-scale) reports the dense ``link_matrix`` is omitted
+    -- it is the same O(d^2) array the sparse path avoids -- and ``links``
+    keeps only the rows that actually carried bytes; both are derived
+    data, recomputed from ``ops`` + ``topo`` on load either way.
+    """
     lu = None
     if getattr(report, "topo", None) is not None \
             and hasattr(report, "link_utilization"):
         lu = report.link_utilization()
     if lu is None:
         return {}
-    out = {
-        "link_matrix": lu.matrix().tolist(),
-        "links": lu.rows(),
-        "link_summary": lu.summary(),
-        "link_tiers": lu.tier_summary(),
-    }
+    if is_sparse(getattr(report, "matrix", None)):
+        out = {
+            "links": [r for r in lu.rows() if r.get("bytes", 0) > 0],
+            "link_summary": lu.summary(),
+            "link_tiers": lu.tier_summary(),
+        }
+    else:
+        out = {
+            "link_matrix": lu.matrix().tolist(),
+            "links": lu.rows(),
+            "link_summary": lu.summary(),
+            "link_tiers": lu.tier_summary(),
+        }
     if hasattr(report, "collective_seconds_split"):
         ici_s, dcn_s = report.collective_seconds_split()
         out["overlap"] = {
@@ -248,7 +310,7 @@ def _schedule_section(report, include_schedules: bool) -> dict:
 
 def report_to_dict(report, *, include_hlo: bool = False,
                    include_schedules: bool = False) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v5``)."""
+    """``CommReport`` -> JSON-serializable dict (schema ``v6``)."""
     return {
         "schema": SCHEMA,
         **_link_section(report),
@@ -263,8 +325,8 @@ def report_to_dict(report, *, include_hlo: bool = False,
         "traced_summary": report.traced_summary,
         "ops": [op_to_dict(op) for op in report.compiled_ops],
         "traced": [event_to_dict(e) for e in report.traced],
-        "matrix": np.asarray(report.matrix).tolist(),
-        "per_primitive": {k: np.asarray(m).tolist()
+        "matrix": matrix_to_jsonable(report.matrix),
+        "per_primitive": {k: matrix_to_jsonable(m)
                           for k, m in report.per_primitive.items()},
         "cost": _jsonable_cost(report.cost),
         "memory_stats": report.memory_stats,
@@ -277,7 +339,7 @@ def report_to_dict(report, *, include_hlo: bool = False,
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1`` ... ``v5``) -> ``CommReport``.
+    """Dict (schema ``v1`` ... ``v6``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
     needed for matrices, tables, exports and cost models; the live
@@ -305,8 +367,8 @@ def report_from_dict(d: dict):
         compiled_ops=[op_from_dict(o) for o in d.get("ops", [])],
         traced_summary=d.get("traced_summary", {}),
         compiled_summary=d.get("summary", {}),
-        matrix=np.asarray(d["matrix"], dtype=np.float64),
-        per_primitive={k: np.asarray(m, dtype=np.float64)
+        matrix=matrix_from_jsonable(d["matrix"]),
+        per_primitive={k: matrix_from_jsonable(m)
                        for k, m in d.get("per_primitive", {}).items()},
         cost=d.get("cost", {}),
         memory_stats=d.get("memory_stats"),

@@ -31,6 +31,7 @@ import numpy as np
 
 from . import cost_models, hlo_parser, reporter, roofline
 from .events import CollectiveOp, HostTransfer, PhaseRecord, TraceEvent
+from .sparse import is_sparse
 from .topology import MeshTopology, V5E
 from .views import CommView, build_view
 
@@ -70,7 +71,9 @@ class CommReport:
     compiled_ops: list[CollectiveOp]
     traced_summary: dict
     compiled_summary: dict
-    matrix: np.ndarray                      # (d+1)x(d+1) bytes, row/col 0 host
+    # (d+1)x(d+1) bytes, row/col 0 host: a dense ndarray, or the COO
+    # SparseCommMatrix form at fleet scale (sparse sessions / loaded v6)
+    matrix: np.ndarray
     per_primitive: dict[str, np.ndarray]
     cost: dict
     memory_stats: Optional[dict]
@@ -96,10 +99,13 @@ class CommReport:
             self._views: dict = {}
         key = (alg, phase)
         if key not in self._views:
+            # a sparse snapshot keeps every derived binding sparse; dense
+            # snapshots leave the per-binding auto cutover in charge
             v = build_view(
                 self.compiled_ops, self.num_devices, alg, self.topo,
                 self.host_transfers, phase=phase,
-                known_phases=self.phase_names(), label=self.name)
+                known_phases=self.phase_names(), label=self.name,
+                sparse=True if is_sparse(self.matrix) else None)
             if phase is None and alg == self.algorithm:
                 v._memo.update(matrix=self.matrix,
                                per_primitive=self.per_primitive,
@@ -319,6 +325,7 @@ def monitor_fn(
     static_argnums=(),
     algorithm: str = "ring",
     host_transfers: Optional[list[HostTransfer]] = None,
+    sparse: Optional[bool] = None,
     **kwargs,
 ) -> CommReport:
     """Monitor one function end-to-end: a single-capture, single-phase
@@ -348,7 +355,8 @@ def monitor_fn(
     """
     from .session import MonitorSession
 
-    session = MonitorSession(mesh=mesh, name=name, algorithm=algorithm)
+    session = MonitorSession(mesh=mesh, name=name, algorithm=algorithm,
+                             sparse=sparse)
     with session:
         session.capture(
             fn, *args, name=name,

@@ -124,14 +124,20 @@ def phase_diff_table(a_name: str, a_summary: dict,
 _SHADES = " .:-=+*#%@"
 
 
-def coarsen_matrix(mat: np.ndarray, max_devices: int = 32) -> tuple[np.ndarray, int]:
+def coarsen_matrix(mat, max_devices: int = 32) -> tuple[np.ndarray, int]:
     """Block-sum the device block of a (d+1)x(d+1) matrix down to at most
     ``max_devices`` rows/cols (host row/col 0 stays exact).
 
     Returns ``(matrix, block)`` where ``block`` is the number of devices per
     aggregated row (1 when no coarsening happened).  Shared by the ASCII and
     HTML heatmap renderers so both stay screen-sized at production scale.
+    Accepts the dense array or a :class:`~repro.core.sparse.
+    SparseCommMatrix` (coarsened directly from its COO entries -- the
+    fleet-scale path never round-trips through the dense form).
     """
+    from .sparse import SparseCommMatrix
+    if isinstance(mat, SparseCommMatrix):
+        return mat.coarsen(max_devices)
     m = np.asarray(mat, dtype=np.float64)
     d = m.shape[0]
     if d <= max_devices + 1:

@@ -109,11 +109,16 @@ class MonitorSession:
     """
 
     def __init__(self, mesh=None, name: str = "session",
-                 algorithm: str = "ring"):
+                 algorithm: str = "ring",
+                 sparse: Optional[bool] = None):
         cost_models.validate_algorithm(algorithm)
         self.mesh = mesh
         self.name = name
         self.algorithm = algorithm
+        # matrix representation for every view/snapshot of this session:
+        # True = COO SparseCommMatrix, False = dense, None = auto by
+        # device count (views.SPARSE_DEVICE_THRESHOLD)
+        self.sparse = sparse
         self.topo = MeshTopology.from_mesh(mesh) if mesh is not None else None
         self.num_devices = (int(np.prod(mesh.devices.shape))
                             if mesh is not None else jax.device_count())
@@ -280,7 +285,8 @@ class MonitorSession:
             self._views[key] = build_view(
                 self.compiled_ops, self.num_devices, alg, self.topo,
                 self.host_transfers, phase=phase,
-                known_phases=self.phase_names(), label=self.name)
+                known_phases=self.phase_names(), label=self.name,
+                sparse=self.sparse)
         return self._views[key]
 
     def _merged_cost(self) -> dict:

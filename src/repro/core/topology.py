@@ -91,6 +91,35 @@ class MeshTopology:
             dcn_axes=tuple(dcn_axes),
         )
 
+    @classmethod
+    def fleet(cls, num_devices: int, pod_side: int = 16,
+              hw: HardwareSpec = V5E) -> "MeshTopology":
+        """Synthetic fleet topology for scale curves (``sweep
+        --scale-curve``): up to ``pod_side**2`` devices is one 2D torus pod
+        (squarest ``data x model`` factorization); beyond that, full
+        ``pod_side x pod_side`` pods joined by a DCN ``pod`` axis --
+        16384 devices is ``(64, 16, 16)`` over ``(pod, data, model)``.
+
+        No jax mesh exists at these device counts; this is the pure
+        topology model the sparse matrix/link path is projected onto.
+        """
+        if num_devices < 1:
+            raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+        pod = pod_side * pod_side
+        if num_devices <= pod:
+            side = max(1, math.isqrt(num_devices))
+            while num_devices % side:
+                side -= 1
+            return cls(axis_names=("data", "model"),
+                       axis_sizes=(num_devices // side, side), hw=hw)
+        if num_devices % pod:
+            raise ValueError(
+                f"multi-pod fleet sizes must be multiples of {pod} "
+                f"({pod_side}x{pod_side} pods), got {num_devices}")
+        return cls(axis_names=("pod", "data", "model"),
+                   axis_sizes=(num_devices // pod, pod_side, pod_side),
+                   hw=hw)
+
     @property
     def num_devices(self) -> int:
         return int(math.prod(self.axis_sizes))

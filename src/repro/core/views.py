@@ -26,12 +26,14 @@ import numpy as np
 from . import comm_matrix, cost_models, hlo_parser
 from .decompose import schedules_for_ops
 from .events import CollectiveOp, HostTransfer
+from .sparse import SPARSE_DEVICE_THRESHOLD
 from .topology import MeshTopology
 
 
 def build_view(ops, num_devices: int, algorithm: str,
                topo: Optional[MeshTopology], host_transfers,
-               *, phase: Optional[str], known_phases, label: str):
+               *, phase: Optional[str], known_phases, label: str,
+               sparse: Optional[bool] = None):
     """Construct the :class:`CommView` for one ``(algorithm, phase)``
     binding -- the shared filter/validation behind both
     ``MonitorSession.view`` and ``CommReport.view`` (one implementation,
@@ -39,6 +41,8 @@ def build_view(ops, num_devices: int, algorithm: str,
 
     ``phase=None`` binds everything; a named phase filters ops and host
     transfers by their tag and must be one of ``known_phases``.
+    ``sparse`` is the matrix-representation mode (None = auto by device
+    count, see :class:`CommView`).
     """
     if phase is not None:
         known = list(known_phases)
@@ -49,7 +53,7 @@ def build_view(ops, num_devices: int, algorithm: str,
         host_transfers = [t for t in host_transfers if t.phase == phase]
     return CommView(ops, num_devices, algorithm=algorithm, topo=topo,
                     host_transfers=host_transfers,
-                    label=f"{label}:{phase or 'all'}")
+                    label=f"{label}:{phase or 'all'}", sparse=sparse)
 
 
 class CommView:
@@ -65,7 +69,7 @@ class CommView:
                  algorithm: str = "ring",
                  topo: Optional[MeshTopology] = None,
                  host_transfers: Iterable[HostTransfer] = (),
-                 label: str = ""):
+                 label: str = "", sparse: Optional[bool] = None):
         cost_models.validate_algorithm(algorithm)
         self.ops = list(ops)
         self.num_devices = int(num_devices)
@@ -73,7 +77,18 @@ class CommView:
         self.topo = topo
         self.host_transfers = list(host_transfers)
         self.label = label
+        # matrix representation: True = COO SparseCommMatrix, False =
+        # dense ndarray, None = auto (sparse above the device-count
+        # cutover -- the dense array is O(d^2) memory)
+        self.sparse = sparse
         self._memo: dict = {}
+
+    @property
+    def use_sparse(self) -> bool:
+        """The resolved matrix representation for this view."""
+        if self.sparse is None:
+            return self.num_devices > SPARSE_DEVICE_THRESHOLD
+        return bool(self.sparse)
 
     def __repr__(self) -> str:
         tag = f" {self.label!r}" if self.label else ""
@@ -92,27 +107,34 @@ class CommView:
             return self
         return CommView(self.ops, self.num_devices, algorithm=algorithm,
                         topo=self.topo, host_transfers=self.host_transfers,
-                        label=self.label)
+                        label=self.label, sparse=self.sparse)
 
     # -- byte accounting ---------------------------------------------------
     @property
-    def matrix(self) -> np.ndarray:
-        """``(d+1)^2`` bytes-sent matrix (host transfers in row/col 0)."""
+    def matrix(self):
+        """``(d+1)^2`` bytes-sent matrix (host transfers in row/col 0).
+
+        A dense ``np.ndarray`` or, when :attr:`use_sparse` resolves true,
+        the byte-identical COO :class:`~repro.core.sparse.
+        SparseCommMatrix` -- every downstream consumer (link projection,
+        heatmaps, exporters) accepts both.
+        """
         def build():
             mat = comm_matrix.matrix_for_schedules(
-                self.ops, self.schedules(), self.num_devices)
+                self.ops, self.schedules(), self.num_devices,
+                sparse=self.use_sparse)
             if self.host_transfers:
                 comm_matrix.add_host_transfers(mat, self.host_transfers)
             return mat
         return self._cached("matrix", build)
 
     @property
-    def per_primitive(self) -> dict[str, np.ndarray]:
+    def per_primitive(self) -> dict:
         """Paper Fig. 3: one matrix per collective primitive."""
         def build():
             return {k: comm_matrix.matrix_for_schedules(
                         self.ops, self.schedules(), self.num_devices,
-                        kinds={k})
+                        kinds={k}, sparse=self.use_sparse)
                     for k in sorted({op.kind for op in self.ops})}
         return self._cached("per_primitive", build)
 

@@ -392,6 +392,34 @@ class SweepResult:
         return format_table(rows, header)
 
 
+def run_scale_curve(
+    config_names: list[str],
+    mesh_specs: list[str] = DEFAULT_MESHES,
+    algorithms: list[str] = ("ring",),
+    *,
+    device_counts: Optional[list[int]] = None,
+    cache: Optional[ReportCache] = None,
+    use_cache: bool = True,
+    log: Callable[[str], None] = print,
+):
+    """``sweep --scale-curve``: monitor each cell once at its (small) base
+    mesh -- cache rules identical to :func:`run_sweep` -- then project the
+    compiled ops onto synthetic fleet topologies per device count
+    (:mod:`repro.scale`), all sparse, no recompilation.
+
+    Returns ``(SweepResult, list[ScalePoint])``.
+    """
+    from repro import scale
+
+    result = run_sweep(config_names, mesh_specs, algorithms,
+                       cache=cache, use_cache=use_cache, log=log)
+    points = scale.scale_curve(
+        result.reports,
+        device_counts if device_counts else scale.DEFAULT_SCALE_POINTS,
+        log=log)
+    return result, points
+
+
 def run_sweep(
     config_names: list[str],
     mesh_specs: list[str] = DEFAULT_MESHES,

@@ -106,11 +106,11 @@ class TestSchemaSections:
 
     pytestmark = pytest.mark.compile  # module fixture compiles
 
-    def test_v5_writes_link_sections(self, report, tmp_path):
-        p = str(tmp_path / "v5.json")
+    def test_v6_writes_link_sections(self, report, tmp_path):
+        p = str(tmp_path / "v6.json")
         report.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v5"
+        assert d["schema"] == "repro.comm_report.v6"
         assert len(d["link_matrix"]) == report.num_devices + 1
         assert d["links"], "per-link rows missing"
         for row in d["links"]:
@@ -119,18 +119,18 @@ class TestSchemaSections:
             assert row["kind"] in ("ici", "dcn")
         assert "ici" in d["link_summary"]
 
-    def test_v5_writes_phase_section(self, report, tmp_path):
+    def test_v6_writes_phase_section(self, report, tmp_path):
         """monitor_fn is a single-phase session: its snapshot carries one
         'main' phase record and phase tags on every op."""
-        p = str(tmp_path / "v5.json")
+        p = str(tmp_path / "v6.json")
         report.save(p)
         d = json.loads(open(p).read())
         assert [ph["name"] for ph in d["phases"]] == ["main"]
         assert d["phases"][0]["num_captures"] == 1
         assert all(op["phase"] == "main" for op in d["ops"])
 
-    def test_v5_writes_overlap_sections(self, report, tmp_path):
-        p = str(tmp_path / "v5.json")
+    def test_v6_writes_overlap_sections(self, report, tmp_path):
+        p = str(tmp_path / "v6.json")
         report.save(p)
         d = json.loads(open(p).read())
         assert "ici" in d["link_tiers"]
@@ -146,7 +146,8 @@ class TestSchemaSections:
     @pytest.mark.parametrize("old_schema", ["repro.comm_report.v1",
                                             "repro.comm_report.v2",
                                             "repro.comm_report.v3",
-                                            "repro.comm_report.v4"])
+                                            "repro.comm_report.v4",
+                                            "repro.comm_report.v5"])
     def test_old_file_loads_and_rederives_links(self, report, tmp_path,
                                                 old_schema):
         """Files written by previous schemas (no link/overlap/phase/
@@ -194,6 +195,117 @@ class TestSchemaSections:
         text = open(p).read()
         assert "physical links" in text
         assert "link kind" in text
+
+
+def sparse_hand_report() -> CommReport:
+    """The hand-built golden report in sparse (COO) form, with a topology
+    so the link section is exercised too."""
+    from repro.core import comm_matrix, hlo_parser
+    from repro.core.topology import MeshTopology
+    op = CollectiveOp(kind="all-reduce", name="%ar.1",
+                      result_shapes=[Shape("f32", (256,))],
+                      replica_groups=[[0, 1, 2, 3]], op_name="psum")
+    return CommReport(
+        name="golden_sparse", num_devices=4, traced=[], compiled_ops=[op],
+        traced_summary={}, compiled_summary=hlo_parser.summarize([op]),
+        matrix=comm_matrix.add_host_transfers(
+            comm_matrix.matrix_for_ops([op], 4, sparse=True),
+            [HostTransfer("h2d", 0, 64)]),
+        per_primitive=comm_matrix.per_primitive_matrices([op], 4,
+                                                         sparse=True),
+        cost={"flops": 1.0}, memory_stats=None,
+        trace_seconds=0.01, compile_seconds=0.02,
+        topo=MeshTopology(axis_names=("data",), axis_sizes=(4,)),
+        host_transfers=[HostTransfer("h2d", 0, 64)])
+
+
+class TestSparseSerialization:
+    """Schema v6: sparse matrices round-trip as COO dicts, never dense."""
+
+    def test_sparse_round_trip(self, tmp_path):
+        from repro.core.sparse import is_sparse
+        rep = sparse_hand_report()
+        p = str(tmp_path / "s.json")
+        rep.save(p)
+        back = CommReport.load(p)
+        assert is_sparse(back.matrix)
+        np.testing.assert_array_equal(back.matrix.to_dense(),
+                                      rep.matrix.to_dense())
+        assert set(back.per_primitive) == set(rep.per_primitive)
+        for k in back.per_primitive:
+            assert is_sparse(back.per_primitive[k])
+            np.testing.assert_array_equal(
+                back.per_primitive[k].to_dense(),
+                rep.per_primitive[k].to_dense())
+        assert back.compiled_summary == json.loads(
+            json.dumps(rep.compiled_summary))
+
+    def test_sparse_file_layout(self, tmp_path):
+        """The on-disk form is the COO dict -- O(nnz), not a nested list --
+        and the derived link section drops its dense matrix."""
+        rep = sparse_hand_report()
+        p = str(tmp_path / "s.json")
+        rep.save(p)
+        d = json.loads(open(p).read())
+        assert d["schema"] == "repro.comm_report.v6"
+        assert d["matrix"]["format"] == "coo"
+        assert len(d["matrix"]["src"]) == rep.matrix.nnz
+        assert all(m["format"] == "coo"
+                   for m in d["per_primitive"].values())
+        assert "link_matrix" not in d
+        assert d["links"] and all(r["bytes"] > 0 for r in d["links"])
+
+    def test_dense_report_stays_dense(self, tmp_path):
+        """A dense report's file keeps the v1...v5 nested-list spelling."""
+        rep = hand_report()
+        p = str(tmp_path / "d.json")
+        rep.save(p)
+        d = json.loads(open(p).read())
+        assert isinstance(d["matrix"], list)
+        back = CommReport.load(p)
+        assert isinstance(back.matrix, np.ndarray)
+
+    def test_unknown_matrix_format_rejected(self, tmp_path):
+        rep = sparse_hand_report()
+        p = str(tmp_path / "s.json")
+        rep.save(p)
+        d = json.loads(open(p).read())
+        d["matrix"]["format"] = "csr"
+        with open(p, "w") as f:
+            json.dump(d, f)
+        with pytest.raises(ValueError, match="unknown matrix format"):
+            CommReport.load(p)
+
+    def test_loaded_sparse_view_stays_sparse(self, tmp_path):
+        """CommReport.view on a loaded sparse snapshot keeps derived
+        bindings sparse (no dense rebuild on algorithm rebind)."""
+        from repro.core.sparse import is_sparse
+        rep = sparse_hand_report()
+        p = str(tmp_path / "s.json")
+        rep.save(p)
+        back = CommReport.load(p)
+        assert back.view().use_sparse
+        assert is_sparse(back.view("tree").matrix)
+
+    def test_sparse_matrix_csv_long_form(self, tmp_path):
+        rep = sparse_hand_report()
+        p = str(tmp_path / "m.csv")
+        export.export_matrix_csv(rep, p)
+        lines = open(p).read().strip().splitlines()
+        assert lines[0] == "src,dst,bytes"
+        assert len(lines) == 1 + rep.matrix.nnz
+        assert any(line.startswith("host,gpu0,") for line in lines)
+
+    def test_sparse_html_renders(self, tmp_path):
+        rep = sparse_hand_report()
+        p = str(tmp_path / "s.html")
+        export.export_html(rep, p)
+        text = open(p).read()
+        assert "golden_sparse" in text and "physical links" in text
+
+    def test_sparse_heatmap_renders(self):
+        out = sparse_hand_report().heatmap()
+        assert "max cell" in out
 
 
 class TestGolden:

@@ -1,0 +1,229 @@
+"""Scale-curve engine + sparse fleet-scale guarantees.
+
+Pins the ``sweep --scale-curve`` output contract (CSV schema, monotone
+bottleneck growth), the projection rules of :mod:`repro.scale`, the
+16384-device no-dense-materialization bound, and the ``project_links``
+representation dispatch (clear ``TypeError`` on anything else).
+"""
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro import scale
+from repro.core import comm_matrix
+from repro.core.events import CollectiveOp, Shape
+from repro.core.export import csv_exporter, html_exporter
+from repro.core.sparse import SparseCommMatrix
+from repro.core.topology import DCN_FABRIC, MeshTopology
+
+
+def ddp_ops(num_ops=8, base=8):
+    """Deterministic DDP-shaped base stream (whole-mesh AllReduce +
+    AllGather) -- same shape the paper configs project."""
+    return [CollectiveOp(
+        kind="all-reduce" if i % 3 else "all-gather", name=f"d{i}",
+        result_shapes=[Shape("f32", (4096 + 512 * i,))],
+        replica_groups=[list(range(base))], weight=float(1 + i % 4))
+        for i in range(num_ops)]
+
+
+class FakeReport:
+    """The slice of CommReport the scale engine reads."""
+
+    def __init__(self, ops, base=8, algorithm="ring", config="ddp_test"):
+        self.compiled_ops = ops
+        self.num_devices = base
+        self.algorithm = algorithm
+        self.name = config
+        self.meta = {"config": config}
+
+
+# ---------------------------------------------------------------------------
+# fleet topologies
+# ---------------------------------------------------------------------------
+class TestFleetTopology:
+    def test_single_pod_sizes(self):
+        t = MeshTopology.fleet(256)
+        assert t.axis_sizes == (16, 16) and t.num_pods == 1
+
+    def test_multi_pod_sizes(self):
+        for d, pods in ((1024, 4), (4096, 16), (16384, 64)):
+            t = MeshTopology.fleet(d)
+            assert t.num_devices == d
+            assert t.num_pods == pods
+            assert t.axis_names == ("pod", "data", "model")
+            assert t.devices_per_pod == 256
+
+    def test_rejects_bad_sizes(self):
+        with pytest.raises(ValueError):
+            MeshTopology.fleet(0)
+        with pytest.raises(ValueError):
+            MeshTopology.fleet(300)     # > one pod, not a pod multiple
+
+
+# ---------------------------------------------------------------------------
+# projection rules
+# ---------------------------------------------------------------------------
+class TestScaleOps:
+    def test_group_block_expansion(self):
+        op = CollectiveOp(kind="all-reduce", name="x",
+                          result_shapes=[Shape("f32", (8,))],
+                          replica_groups=[[0, 1], [2, 3]])
+        out = scale.scale_op(op, 4)
+        assert out.replica_groups == [[0, 1, 2, 3, 4, 5, 6, 7],
+                                      [8, 9, 10, 11, 12, 13, 14, 15]]
+        # group count preserved, size scaled, still a partition
+        assert len(out.replica_groups) == len(op.replica_groups)
+
+    def test_permute_pairs_scale_injectively(self):
+        op = CollectiveOp(kind="collective-permute", name="p",
+                          result_shapes=[Shape("f32", (8,))],
+                          replica_groups=[],
+                          source_target_pairs=[(0, 1), (1, 0)])
+        out = scale.scale_op(op, 16)
+        assert out.source_target_pairs == [(0, 16), (16, 0)]
+        assert all(s != t for s, t in out.source_target_pairs)
+
+    def test_a2a_groups_stay_pod_sized(self):
+        op = CollectiveOp(kind="all-to-all", name="a",
+                          result_shapes=[Shape("f32", (8,))],
+                          replica_groups=[list(range(8))])
+        out = scale.scale_op(op, 2048)     # 8 -> 16384 devices
+        assert all(len(g) <= scale.POD_DEVICES for g in out.replica_groups)
+        assert sum(len(g) for g in out.replica_groups) == 16384
+
+    def test_factor_one_is_identity(self):
+        op = ddp_ops(1)[0]
+        assert scale.scale_op(op, 1) is op
+
+    def test_rejects_non_multiple(self):
+        with pytest.raises(ValueError):
+            scale.scale_ops(ddp_ops(), 8, 100)
+        with pytest.raises(ValueError):
+            scale.scale_ops(ddp_ops(), 8, 4)
+
+
+# ---------------------------------------------------------------------------
+# the curve: CSV schema golden + monotone growth
+# ---------------------------------------------------------------------------
+EXPECTED_HEADER = ("config,algorithm,devices,pods,ops,wire_bytes,ici_ms,"
+                   "dcn_ms,overlap_ms,bottleneck_link,bottleneck_ms,nnz,"
+                   "build_ms")
+
+
+@pytest.fixture(scope="module")
+def curve_points():
+    rep = FakeReport(ddp_ops())
+    return scale.scale_curve([rep], (256, 1024, 4096))
+
+
+class TestScaleCurve:
+    def test_csv_schema_golden(self, curve_points, tmp_path):
+        path = csv_exporter.export_scale_csv(
+            [p.row() for p in curve_points], str(tmp_path / "sc.csv"))
+        lines = open(path).read().strip().splitlines()
+        assert lines[0] == EXPECTED_HEADER
+        assert len(lines) == 1 + len(curve_points)
+        for line in lines[1:]:
+            cells = line.split(",")
+            assert len(cells) == len(EXPECTED_HEADER.split(","))
+            # typed columns parse: devices/pods/ops/nnz int, times float
+            assert int(cells[2]) in (256, 1024, 4096)
+            int(cells[3]), int(cells[4]), int(cells[11])
+            float(cells[5]), float(cells[6]), float(cells[7])
+            float(cells[8]), float(cells[10]), float(cells[12])
+        # rows sorted by (config, algorithm, devices) for stable diffs
+        devices = [int(line.split(",")[2]) for line in lines[1:]]
+        assert devices == sorted(devices)
+
+    def test_monotone_bottleneck_and_overlap(self, curve_points):
+        pts = sorted(curve_points, key=lambda p: p.devices)
+        bn = [p.bottleneck_ms for p in pts]
+        ov = [p.overlap_ms for p in pts]
+        wire = [p.wire_bytes for p in pts]
+        assert all(b1 >= b0 * (1 - 1e-9) for b0, b1 in zip(bn, bn[1:]))
+        assert all(o1 >= o0 * (1 - 1e-9) for o0, o1 in zip(ov, ov[1:]))
+        assert all(w1 > w0 for w0, w1 in zip(wire, wire[1:]))
+
+    def test_points_are_sparse_and_labeled(self, curve_points):
+        for p in curve_points:
+            assert p.config == "ddp_test" and p.algorithm == "ring"
+            assert p.nnz > 0 and p.nnz < (p.devices + 1) ** 2
+            assert p.bottleneck_link != "-"
+
+    def test_skips_non_multiples(self):
+        logged = []
+        pts = scale.scale_curve([FakeReport(ddp_ops(), base=8)], (100,),
+                                log=logged.append)
+        assert pts == [] and any("skip" in m for m in logged)
+
+    def test_html_panel(self, curve_points, tmp_path):
+        path = html_exporter.export_scale_html(
+            [p.row() for p in curve_points], str(tmp_path / "sc.html"))
+        doc = open(path).read()
+        assert "ddp_test" in doc and "<svg" in doc
+        assert "bottleneck link" in doc
+        for p in curve_points:
+            assert f"{p.devices:,}" in doc
+
+    def test_table_renders(self, curve_points):
+        out = scale.scale_table(curve_points)
+        assert "bottleneck link" in out and "ddp_test" in out
+
+
+# ---------------------------------------------------------------------------
+# 16384 devices: no dense (d+1)^2 materialization anywhere on the path
+# ---------------------------------------------------------------------------
+class TestFleetScaleSmoke:
+    def test_16k_point_peak_memory_bounded(self):
+        rep = FakeReport(ddp_ops(num_ops=6))
+        tracemalloc.start()
+        p = scale.scale_point(rep, 16384)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        peak_mb = peak / 2**20
+        # the dense (16385)^2 float64 matrix alone is ~2100 MiB
+        assert peak_mb < 300, (
+            f"16k-device scale point peaked at {peak_mb:.0f} MiB -- "
+            "something materialized a dense fleet-scale array")
+        assert p.devices == 16384 and p.pods == 64
+        assert p.nnz > 0 and p.dcn_ms > 0
+        assert p.bottleneck_link.startswith(("dcn:", "ici:"))
+
+
+# ---------------------------------------------------------------------------
+# project_links representation dispatch (satellite fix + regression)
+# ---------------------------------------------------------------------------
+class TestProjectLinksDispatch:
+    def test_rejects_other_types_with_clear_error(self):
+        topo = MeshTopology(axis_names=("data",), axis_sizes=(4,))
+        with pytest.raises(TypeError, match=(
+                r"project_links expects a dense \(d\+1\)x\(d\+1\) "
+                r"np\.ndarray or a SparseCommMatrix, not list")):
+            comm_matrix.project_links([[0.0] * 5] * 5, topo)
+        with pytest.raises(TypeError, match="not NoneType"):
+            comm_matrix.project_links(None, topo)
+
+    def test_accepts_both_representations(self):
+        topo = MeshTopology(axis_names=("data",), axis_sizes=(4,))
+        dense = np.zeros((5, 5))
+        dense[1, 2] = 64.0
+        sp = SparseCommMatrix(4, np.array([1]), np.array([2]),
+                              np.array([64.0]))
+        lu_d = comm_matrix.project_links(dense, topo)
+        lu_s = comm_matrix.project_links(sp, topo)
+        assert lu_d.total_bytes() == lu_s.total_bytes() == 64.0
+
+    def test_sparse_dcn_projection(self):
+        """Cross-pod sparse entries charge DCN uplink + downlink."""
+        topo = MeshTopology(axis_names=("pod", "data"), axis_sizes=(2, 2))
+        sp = SparseCommMatrix(4, np.array([1]), np.array([3]),
+                              np.array([128.0]))     # dev 0 -> dev 2
+        lu = comm_matrix.project_links(sp, topo)
+        up = [l for l in lu.bytes_by_link
+              if l.kind == "dcn" and l.dst == DCN_FABRIC and l.src == 0]
+        down = [l for l in lu.bytes_by_link
+                if l.kind == "dcn" and l.src == DCN_FABRIC and l.dst == 2]
+        assert lu.bytes_by_link[up[0]] == 128.0
+        assert lu.bytes_by_link[down[0]] == 128.0

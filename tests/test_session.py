@@ -332,10 +332,10 @@ class TestCompatContract:
 class TestSchemaRoundTrip:
     def test_phases_survive_save_load(self, phased_session, tmp_path):
         rep = phased_session.report()
-        p = str(tmp_path / "v5.json")
+        p = str(tmp_path / "v6.json")
         rep.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v5"
+        assert d["schema"] == "repro.comm_report.v6"
         assert [ph["name"] for ph in d["phases"]] == ["fwd", "bwd", "optim"]
         assert all("phase" in op for op in d["ops"])
         back = CommReport.load(p)
