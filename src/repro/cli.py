@@ -7,6 +7,9 @@ Subcommands:
   (``python -m repro monitor gnmt --mesh 8 --formats html``);
 * ``sweep``    -- the config-sweep engine: configs x meshes x algorithms,
   cached, with comparative JSON/CSV/HTML/Perfetto artifacts;
+* ``lint``     -- static anti-pattern analysis over a config's (or a saved
+  report's) captured collectives, with modeled savings and CI exit codes
+  (``--fail-on warn|error``);
 * ``report``   -- re-export a saved report (``CommReport.save`` / cache
   entry) into any format without recompiling anything;
 * ``configs``  -- list the sweepable configs;
@@ -106,7 +109,8 @@ def _cmd_sweep(args) -> int:
         return 1
 
     table = result.summary_table(by_link=args.by_link,
-                                 by_phase=args.by_phase)
+                                 by_phase=args.by_phase,
+                                 lint=args.lint)
     print()
     print(f"== sweep summary: {len(result.reports)} cells "
           f"({result.compiles} compiled, {result.cache_hits} cache hits) ==")
@@ -167,6 +171,63 @@ def _cmd_scale_curve(args, sweep_mod) -> int:
         for f in result.failures:
             print(f"  {f}", file=sys.stderr)
         return 1
+    return 0
+
+
+def _cmd_lint(args) -> int:
+    """``repro lint <config-or-report.json>``: print findings, exit 0 when
+    clean (or below ``--fail-on``), 1 when findings reach the threshold,
+    2 on usage errors (unknown config / algorithm / path)."""
+    import json as json_mod
+    from repro.core import reporter
+    from repro.core.lint import max_severity, severity_rank
+
+    algs = _split(args.algorithms)
+    if args.target.endswith(".json"):
+        # a saved report / cache entry / sweep document: lint offline --
+        # the HLO rules run when the file was saved with include_hlo=True,
+        # persisted v7 findings are served as-is for the default binding
+        from repro.core import export
+        reports = export.load_json_reports(args.target)
+        bindings = [(rep, alg) for rep in reports
+                    for alg in (algs or [rep.algorithm])]
+    else:
+        _ensure_devices(args.devices)
+        from repro import sweep as sweep_mod
+        registry = sweep_mod.available_configs()
+        if args.target not in registry:
+            print(f"error: unknown config {args.target!r}; known: "
+                  f"{sorted(registry)}", file=sys.stderr)
+            return 2
+        result = sweep_mod.run_sweep(
+            [args.target], [args.mesh], algs or ["ring"],
+            cache=_cache_from(args), use_cache=not args.no_cache,
+            log=lambda m: print(m, file=sys.stderr))
+        if result.failures:
+            print(f"error: {result.failures[0]['error']}", file=sys.stderr)
+            return 1
+        bindings = [(rep, rep.algorithm) for rep in result.reports]
+
+    all_findings = []
+    docs = []
+    for rep, alg in bindings:
+        findings = rep.lint(alg)
+        all_findings += findings
+        if args.as_json:
+            docs.append({"name": rep.name, "algorithm": alg,
+                         "max_severity": max_severity(findings),
+                         "findings": [f.to_dict() for f in findings]})
+        else:
+            print(reporter.lint_table(
+                findings, title=f"{rep.name} [{alg}]: lint findings"))
+            print()
+    if args.as_json:
+        print(json_mod.dumps(docs[0] if len(docs) == 1 else docs, indent=1))
+    if args.fail_on is not None:
+        threshold = severity_rank(args.fail_on)
+        if any(severity_rank(f.severity) >= threshold
+               for f in all_findings):
+            return 1
     return 0
 
 
@@ -288,6 +349,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--by-phase", action="store_true", dest="by_phase",
                    help="expand each cell into one row per session phase "
                         "(statistics from that phase's CommView)")
+    p.add_argument("--lint", action="store_true",
+                   help="add static-lint columns (finding count at worst "
+                        "severity + total modeled savings ms) per cell")
     p.add_argument("--scale-curve", action="store_true", dest="scale_curve",
                    help="monitor each cell at its base mesh, then project "
                         "onto synthetic fleet topologies per --scale-points "
@@ -301,6 +365,27 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--devices", type=int, default=8)
     _add_cache_opts(p)
     p.set_defaults(func=_cmd_sweep)
+
+    p = sub.add_parser("lint", help="static anti-pattern analysis with "
+                                    "modeled savings (CI exit codes)")
+    p.add_argument("target",
+                   help="a sweep-config name or a saved report .json "
+                        "(CommReport.save / cache entry / sweep document)")
+    p.add_argument("--mesh", default="4x2",
+                   help="mesh spec for config targets, e.g. 8, 4x2, 2x2x2")
+    p.add_argument("--algorithms", default="",
+                   help="comma list of ring,tree,hierarchical; default: "
+                        "the report's own binding (ring for configs)")
+    p.add_argument("--fail-on", choices=["warn", "error"], default=None,
+                   dest="fail_on",
+                   help="exit 1 when any finding is at or above this "
+                        "severity (default: always exit 0 when the "
+                        "analysis ran)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable findings JSON on stdout")
+    p.add_argument("--devices", type=int, default=8)
+    _add_cache_opts(p)
+    p.set_defaults(func=_cmd_lint)
 
     p = sub.add_parser("report", help="re-export a saved report")
     p.add_argument("path", help="a CommReport.save JSON file")

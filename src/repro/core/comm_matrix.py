@@ -43,7 +43,6 @@ it).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Iterable, Optional
 
 import numpy as np
@@ -433,11 +432,12 @@ def _legacy_op_edges(op: CollectiveOp, algorithm: str = "ring",
                 continue
             if op.kind in cost_models.HIERARCHICAL_KINDS \
                     and topo.group_crosses_dcn(group):
-                warnings.warn(HierarchicalFallbackWarning(
+                decompose_mod.warn_fallback_once(
+                    op.kind, n,
                     f"hierarchical {op.kind} over cross-pod group of {n} "
                     "cannot decompose (uneven pod split); placing flat "
-                    "ring edges and billing the same fallback"),
-                    stacklevel=2)
+                    "ring edges and billing the same fallback",
+                    stacklevel=1)
         per_rank = cost_models.wire_bytes_per_rank(
             op.kind, s, n, algorithm, pods=1)
         edges.extend(_ring_edges(group, per_rank))

@@ -72,6 +72,33 @@ class HierarchicalFallbackWarning(UserWarning):
     and billing/timing/placement all follow that same fallback."""
 
 
+# One warning per (op kind, group size): a large capture decomposes the same
+# shape hundreds of times across matrix / billing / timing / lint paths, and
+# identical repeats would drown every other diagnostic.
+# ``MonitorSession.__init__`` resets the set, so each session warns afresh.
+_FALLBACK_SEEN: set[tuple[str, int]] = set()
+
+
+def reset_fallback_warnings() -> None:
+    """Forget which (kind, group size) hierarchical fallbacks already
+    warned; the next occurrence of each warns again."""
+    _FALLBACK_SEEN.clear()
+
+
+def warn_fallback_once(kind: str, n: int, message: str,
+                       stacklevel: int = 3) -> bool:
+    """Emit a :class:`HierarchicalFallbackWarning` once per (kind, group
+    size) since the last :func:`reset_fallback_warnings`.  Returns whether
+    the warning fired (deduplicated repeats return False)."""
+    key = (kind, int(n))
+    if key in _FALLBACK_SEEN:
+        return False
+    _FALLBACK_SEEN.add(key)
+    warnings.warn(HierarchicalFallbackWarning(message),
+                  stacklevel=stacklevel + 1)
+    return True
+
+
 def validate_algorithm(algorithm: str) -> str:
     """Reject unknown collective algorithms with a clear error.
 
@@ -552,11 +579,12 @@ def group_phases(kind: str, payload: float, group, algorithm: str,
         if dec is not None:
             return _hierarchical_phases(kind, s, dec, topo, stream)
         if warn:
-            warnings.warn(HierarchicalFallbackWarning(
+            warn_fallback_once(
+                kind, n,
                 f"hierarchical {kind} over cross-pod group of {n} cannot "
                 "decompose (uneven pod split); scheduling flat ring phases "
-                "-- placement, billing and timing all share this fallback"),
-                stacklevel=3)
+                "-- placement, billing and timing all share this fallback",
+                stacklevel=2)
         return _flat_phases(kind, s, arr, algorithm, True, stream)
 
     if not crosses and kind in AXIS_DECOMPOSABLE_KINDS \
@@ -680,11 +708,12 @@ def decompose(op: CollectiveOp, algorithm: str = "ring",
                 stream += 1
                 continue
             if warn:
-                warnings.warn(HierarchicalFallbackWarning(
+                warn_fallback_once(
+                    op.kind, n,
                     f"hierarchical {op.kind} over cross-pod group of {n} "
                     "cannot decompose (uneven pod split); scheduling flat "
                     "ring phases -- placement, billing and timing all "
-                    "share this fallback"), stacklevel=2)
+                    "share this fallback", stacklevel=1)
             flat.setdefault((n, True), []).append(group)
             continue
         if not crosses and op.kind in AXIS_DECOMPOSABLE_KINDS \

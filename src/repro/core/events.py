@@ -72,6 +72,8 @@ class CollectiveOp:
     op_name: str = ""                    # metadata op_name (jax source op)
     weight: float = 1.0                  # execution count (while trip counts)
     phase: str = ""                      # session phase ("" = unphased/legacy)
+    operand_names: list[str] = dataclasses.field(default_factory=list)
+    use_global_device_ids: bool = False  # replica_groups hold global ids
 
     # ------------------------------------------------------------------
     # Byte accounting.  The compiled module is per-device: result shapes are

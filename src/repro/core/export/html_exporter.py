@@ -221,11 +221,47 @@ def link_section(report) -> str:
             + "</div>")
 
 
+_SEV_BADGE = {"error": "#c0392b", "warn": "#b9770e", "info": "#2874a6"}
+
+
+def lint_panel(report) -> str:
+    """The static-lint findings panel: one row per finding with severity,
+    flagged ops, modeled savings and the suggested fix.  Empty string when
+    the report carries no findings (clean capture, or no lint surface)."""
+    findings = report.lint() if hasattr(report, "lint") else []
+    if not findings:
+        return ""
+    rows = ["<div><h3>lint findings</h3>",
+            "<div class='meta'>static anti-patterns with savings modeled "
+            "by the decomposition engine (current vs suggested "
+            "schedule)</div>",
+            "<table class='sum'><tr><th>rule</th><th>severity</th>"
+            "<th>phase</th><th>ops</th><th>est. savings</th>"
+            "<th>DCN bytes saved</th><th>suggested fix</th></tr>"]
+    for f in findings:
+        ops = ",".join(f.op_names)
+        if len(ops) > 60:
+            ops = ops[:57] + f"...({len(f.op_names)} ops)"
+        color = _SEV_BADGE.get(f.severity, "inherit")
+        rows.append(
+            f"<tr><td>{html.escape(f.rule_id)}</td>"
+            f"<td style='color:{color}'>{html.escape(f.severity)}</td>"
+            f"<td>{html.escape(f.phase or '-')}</td>"
+            f"<td title='{html.escape(f.message)}'>{html.escape(ops)}</td>"
+            f"<td>{f.est_savings_s * 1e3:.3f} ms</td>"
+            f"<td>{reporter.human_bytes(f.est_dcn_bytes_saved)}</td>"
+            f"<td>{html.escape(f.suggested_fix)}</td></tr>")
+    rows.append("</table></div>")
+    return "\n".join(rows)
+
+
 def _matrices_section(report) -> str:
-    """The whole-report artifact set: summary + combined/per-primitive/link
-    heatmaps (the body of the "all phases" view)."""
+    """The whole-report artifact set: summary + lint findings +
+    combined/per-primitive/link heatmaps (the body of the "all phases"
+    view)."""
     parts = [
         _summary_table(report.compiled_summary),
+        lint_panel(report),
         "<div class='grid'>",
         "<div><h3>all primitives</h3>" + matrix_table(report.matrix)
         + "</div>",

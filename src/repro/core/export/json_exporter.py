@@ -1,4 +1,4 @@
-"""JSON export: the schema-``v6`` report dict, verbatim, on disk."""
+"""JSON export: the schema-``v7`` report dict, verbatim, on disk."""
 from __future__ import annotations
 
 import json
@@ -8,18 +8,22 @@ from . import serialize
 
 
 def export_json(report, path: str, *, include_hlo: bool = False,
-                include_schedules: bool = False) -> str:
-    """Write one report as schema-v6 JSON.  Returns ``path``.
+                include_schedules: bool = False,
+                include_lint: bool = False) -> str:
+    """Write one report as schema-v7 JSON.  Returns ``path``.
 
     ``include_hlo=True`` persists the compiled HLO text (gzip+base64) so
     ``roofline_of`` works on the loaded report.  ``include_schedules=True``
     adds the optional per-op decomposition-schedule summaries.
+    ``include_lint=True`` adds (and loaders restore) the default binding's
+    lint findings.
     """
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w") as f:
         json.dump(serialize.report_to_dict(
             report, include_hlo=include_hlo,
-            include_schedules=include_schedules), f, indent=1)
+            include_schedules=include_schedules,
+            include_lint=include_lint), f, indent=1)
     return path
 
 

@@ -54,6 +54,16 @@ the same representation (:func:`matrix_from_jsonable`).  Sparse reports
 also drop the derived dense ``link_matrix`` from the link section (it is
 O(d^2) too) and keep only the nonzero per-link ``links`` rows; v1...v5
 files, always dense lists, load unchanged.
+
+Schema **v7** adds the static-lint surface: two new per-op keys
+(``operand_names`` and ``use_global_device_ids``, both defaulted on load
+so v1...v6 files read back unchanged) and the *optional* ``lint`` section
+-- the default binding's :class:`~repro.core.lint.LintFinding` records,
+written by ``save(..., include_lint=True)``.  Unlike the purely derived
+sections, persisted findings ARE restored on load
+(``report._lint_findings``): the HLO def-use rules need the module text,
+so a file saved without ``hlo_gz`` could not reproduce them from the op
+list alone.
 """
 from __future__ import annotations
 
@@ -69,14 +79,15 @@ from ..events import (CollectiveOp, HostTransfer, PhaseRecord, Shape,
 from ..sparse import SparseCommMatrix, is_sparse
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v6"
+SCHEMA = "repro.comm_report.v7"
+SCHEMA_V6 = "repro.comm_report.v6"
 SCHEMA_V5 = "repro.comm_report.v5"
 SCHEMA_V4 = "repro.comm_report.v4"
 SCHEMA_V3 = "repro.comm_report.v3"
 SCHEMA_V2 = "repro.comm_report.v2"
 SCHEMA_V1 = "repro.comm_report.v1"
-ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2,
-                    SCHEMA_V1)
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V6, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3,
+                    SCHEMA_V2, SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +115,8 @@ def op_to_dict(op: CollectiveOp) -> dict:
         "op_name": op.op_name,
         "weight": op.weight,
         "phase": op.phase,
+        "operand_names": list(op.operand_names),
+        "use_global_device_ids": op.use_global_device_ids,
         "payload_bytes": op.payload_bytes,
         "group_size": op.group_size,
         "num_groups": op.num_groups,
@@ -122,6 +135,8 @@ def op_from_dict(d: dict) -> CollectiveOp:
         op_name=d.get("op_name", ""),
         weight=float(d.get("weight", 1.0)),
         phase=d.get("phase", ""),
+        operand_names=list(d.get("operand_names", [])),
+        use_global_device_ids=bool(d.get("use_global_device_ids", False)),
     )
 
 
@@ -308,14 +323,29 @@ def _schedule_section(report, include_schedules: bool) -> dict:
     return {"schedules": report.schedule_summaries()}
 
 
+def _lint_section(report, include_lint: bool) -> dict:
+    """Optional schema-v7 findings of the report's default binding.
+
+    Written on request (``save(..., include_lint=True)``) and RESTORED on
+    load -- the def-use rules read the module text, which most saved files
+    do not carry, so persisted findings are the only way a plain file can
+    serve ``lint()`` without re-capture.
+    """
+    if not include_lint or not hasattr(report, "lint"):
+        return {}
+    return {"lint": [f.to_dict() for f in report.lint()]}
+
+
 def report_to_dict(report, *, include_hlo: bool = False,
-                   include_schedules: bool = False) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v6``)."""
+                   include_schedules: bool = False,
+                   include_lint: bool = False) -> dict:
+    """``CommReport`` -> JSON-serializable dict (schema ``v7``)."""
     return {
         "schema": SCHEMA,
         **_link_section(report),
         **_hlo_section(report, include_hlo),
         **_schedule_section(report, include_schedules),
+        **_lint_section(report, include_lint),
         "phases": [phase_to_dict(p)
                    for p in getattr(report, "phases", []) or []],
         "name": report.name,
@@ -339,7 +369,7 @@ def report_to_dict(report, *, include_hlo: bool = False,
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1`` ... ``v6``) -> ``CommReport``.
+    """Dict (schema ``v1`` ... ``v7``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
     needed for matrices, tables, exports and cost models; the live
@@ -390,4 +420,8 @@ def report_from_dict(d: dict):
         report._hlo_texts = texts
         if len(texts) == 1:
             report._hlo_text = texts[0]
+    if "lint" in d:
+        from ..lint import LintFinding   # deferred: keep leaf import light
+        report._lint_findings = [LintFinding.from_dict(x)
+                                 for x in d["lint"]]
     return report

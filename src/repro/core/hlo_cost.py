@@ -26,7 +26,8 @@ import re
 from typing import Optional
 
 from .events import DTYPE_BYTES, CollectiveOp
-from .hlo_parser import _SHAPE_RE, parse_hlo_collectives
+from .hlo_parser import (_SHAPE_RE, _call_args, _operand_names,
+                         _split_top_level, parse_hlo_collectives)
 
 _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
@@ -69,54 +70,9 @@ def _first_shape_dims(type_text: str) -> Optional[list[int]]:
     return [int(d) for d in m.group(2).split(",") if d]
 
 
-# ----------------------------------------------------------------------------
-# Operand parsing that survives both HLO spellings.  New jax prints
-# ``dot(%a, %b)``; jax 0.4.x prints typed operands ``dot(f32[8,8]{1,0} %a,
-# (s32[], f32[4]) %b)`` whose layouts/tuple types contain commas and parens,
-# so naive ``split(",")`` / ``[^)]*`` parsing silently yields garbage names.
-# ----------------------------------------------------------------------------
-def _split_top_level(text: str) -> list[str]:
-    """Split on commas at bracket depth 0 (wrt ``()[]{}``)."""
-    parts: list[str] = []
-    cur: list[str] = []
-    depth = 0
-    for ch in text:
-        if ch in "([{":
-            depth += 1
-        elif ch in ")]}":
-            depth -= 1
-        if ch == "," and depth == 0:
-            parts.append("".join(cur))
-            cur = []
-        else:
-            cur.append(ch)
-    if cur:
-        parts.append("".join(cur))
-    return [p.strip() for p in parts if p.strip()]
-
-
-def _operand_names(args_text: str) -> list[str]:
-    """Operand names from a call's argument text (last token per operand,
-    ``%`` stripped -- drops any inline type annotation)."""
-    return [p.split()[-1].lstrip("%") for p in _split_top_level(args_text)]
-
-
-def _call_args(line: str, opcode: str) -> str:
-    """Balanced-paren argument text of ``opcode(...)`` in ``line``
-    ('' when absent)."""
-    idx = line.find(opcode + "(")
-    if idx < 0:
-        return ""
-    start = idx + len(opcode) + 1
-    depth = 1
-    for i in range(start, len(line)):
-        if line[i] == "(":
-            depth += 1
-        elif line[i] == ")":
-            depth -= 1
-            if depth == 0:
-                return line[start:i]
-    return line[start:]
+# The operand-parsing helpers (_split_top_level / _operand_names /
+# _call_args) live in hlo_parser and are re-imported above: the collective
+# parser needs them too, and hlo_cost already imports from hlo_parser.
 
 
 def split_computations(hlo: str):

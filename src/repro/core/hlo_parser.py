@@ -9,6 +9,11 @@ replica groups (explicit or iota form) and metadata.
 The parser is line-oriented and regex-based; HLO prints one instruction per
 line.  Async pairs (``all-gather-start``/``-done``) are counted once at the
 ``-start``.
+
+A malformed replica-group list (ragged explicit groups, an iota form whose
+group shape does not tile its source) raises :class:`HLOParseError` carrying
+the offending instruction text -- silently dropping groups would make every
+downstream byte count quietly wrong.
 """
 from __future__ import annotations
 
@@ -18,6 +23,11 @@ from typing import Iterable
 import numpy as np
 
 from .events import COLLECTIVE_KINDS, CollectiveOp, Shape
+
+
+class HLOParseError(ValueError):
+    """An HLO instruction the parser recognizes but cannot interpret
+    (malformed replica groups, ...).  Carries the op text in the message."""
 
 # ----------------------------------------------------------------------------
 # Shape parsing
@@ -48,31 +58,104 @@ _GROUPS_IOTA_RE = re.compile(
 
 
 def parse_replica_groups(line: str) -> list[list[int]]:
+    """Replica groups of one instruction line ([] when the attribute is
+    absent).  Raises :class:`HLOParseError` (with the op text) on malformed
+    lists: ragged explicit groups, or an iota form whose group shape does
+    not hold exactly the source's elements / whose permutation does not
+    match the source rank."""
     m = _GROUPS_IOTA_RE.search(line)
     if m:
         group_shape = [int(x) for x in m.group(1).split(",")]
         src_dims = [int(x) for x in m.group(2).split(",")]
+        if int(np.prod(group_shape)) != int(np.prod(src_dims)):
+            raise HLOParseError(
+                f"iota replica_groups [{m.group(1)}]<=[{m.group(2)}] do not "
+                f"tile: {np.prod(group_shape)} != {np.prod(src_dims)} "
+                f"elements in op: {line.strip()}")
         v = np.arange(int(np.prod(src_dims))).reshape(src_dims)
         if m.group(3):
             perm = [int(x) for x in m.group(3).split(",")]
+            if sorted(perm) != list(range(len(src_dims))):
+                raise HLOParseError(
+                    f"iota replica_groups transpose T({m.group(3)}) is not "
+                    f"a permutation of the {len(src_dims)}-d source in op: "
+                    f"{line.strip()}")
             v = v.transpose(perm)
         v = v.reshape(group_shape)
         return [list(map(int, row)) for row in v]
     m = _GROUPS_EXPLICIT_RE.search(line)
     if m:
         inner = m.group(1)
-        groups = re.findall(r"\{([0-9,\s]*)\}", inner)
-        return [
+        groups = [
             [int(x) for x in g.replace(" ", "").split(",") if x != ""]
-            for g in groups
+            for g in re.findall(r"\{([0-9,\s]*)\}", inner)
         ]
+        sizes = {len(g) for g in groups}
+        if len(sizes) > 1:
+            raise HLOParseError(
+                f"ragged replica_groups (sizes {sorted(sizes)}) in op: "
+                f"{line.strip()}")
+        return groups
     return []
 
 
 _PAIRS_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
 _CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+_GLOBAL_IDS_RE = re.compile(r"use_global_device_ids=true")
 _DIMS_RE = re.compile(r"dimensions=\{([0-9,]*)\}")
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+# ----------------------------------------------------------------------------
+# Operand parsing that survives both HLO spellings.  New jax prints
+# ``all-reduce(%a, %b)``; jax 0.4.x prints typed operands
+# ``all-reduce(f32[8,8]{1,0} %a, (s32[], f32[4]) %b)`` whose layouts and
+# tuple-shaped types contain commas and parens, so naive ``split(",")``
+# parsing silently yields garbage names.  These helpers are shared with
+# :mod:`repro.core.hlo_cost` (which re-imports them).
+# ----------------------------------------------------------------------------
+def _split_top_level(text: str) -> list[str]:
+    """Split on commas at bracket depth 0 (wrt ``()[]{}``)."""
+    parts: list[str] = []
+    cur: list[str] = []
+    depth = 0
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _operand_names(args_text: str) -> list[str]:
+    """Operand names from a call's argument text (last token per operand,
+    ``%`` stripped -- drops any inline type annotation)."""
+    return [p.split()[-1].lstrip("%") for p in _split_top_level(args_text)]
+
+
+def _call_args(line: str, opcode: str) -> str:
+    """Balanced-paren argument text of ``opcode(...)`` in ``line``
+    ('' when absent)."""
+    idx = line.find(opcode + "(")
+    if idx < 0:
+        return ""
+    start = idx + len(opcode) + 1
+    depth = 1
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:i]
+    return line[start:]
 
 # instruction: [ROOT] %name = <result-type> opcode(
 _INSTR_RE = re.compile(
@@ -126,6 +209,11 @@ def parse_hlo_collectives(hlo_text: str) -> list[CollectiveOp]:
         cm = _CHANNEL_RE.search(line)
         dm = _DIMS_RE.search(line)
         om = _OPNAME_RE.search(line)
+        # operand names via the balanced-paren walk: tuple-shaped operands
+        # (async starts, variadic all-reduces) contain depth-1 commas that
+        # a naive split would shred
+        args = _call_args(line, kind + ("-start" if _start else ""))
+        operands = _operand_names(args) if args.strip() else []
         ops.append(
             CollectiveOp(
                 kind=kind,
@@ -138,6 +226,8 @@ def parse_hlo_collectives(hlo_text: str) -> list[CollectiveOp]:
                 else (),
                 source_target_pairs=pairs,
                 op_name=om.group(1) if om else "",
+                operand_names=operands,
+                use_global_device_ids=bool(_GLOBAL_IDS_RE.search(line)),
             )
         )
     return ops

@@ -105,13 +105,24 @@ class CommReport:
                 self.compiled_ops, self.num_devices, alg, self.topo,
                 self.host_transfers, phase=phase,
                 known_phases=self.phase_names(), label=self.name,
-                sparse=True if is_sparse(self.matrix) else None)
+                sparse=True if is_sparse(self.matrix) else None,
+                hlo_texts=self._all_hlo_texts())
             if phase is None and alg == self.algorithm:
                 v._memo.update(matrix=self.matrix,
                                per_primitive=self.per_primitive,
                                summary=self.compiled_summary)
             self._views[key] = v
         return self._views[key]
+
+    def _all_hlo_texts(self) -> list[str]:
+        """Compiled module texts (one per capture) when the report carries
+        them -- live sessions always do; loaded files only when saved with
+        ``include_hlo=True``.  Empty list otherwise."""
+        texts = getattr(self, "_hlo_texts", None)
+        if texts:
+            return [t for t in texts if t]
+        single = getattr(self, "_hlo_text", None)
+        return [single] if single else []
 
     def phase_names(self) -> list[str]:
         """Phase order of the originating session (op-tag order for files
@@ -279,9 +290,31 @@ class CommReport:
         face, also written by ``save(..., include_schedules=True)``."""
         return self.view(algorithm).schedule_summaries()
 
+    # -- static lint ---------------------------------------------------------
+    def lint(self, algorithm: Optional[str] = None,
+             phase: Optional[str] = None) -> list:
+        """Static anti-pattern findings
+        (:class:`~repro.core.lint.LintFinding`) for the ``(algorithm,
+        phase)`` binding -- lazy and memoized via :meth:`view`.  A report
+        loaded from a schema-v7 file saved with ``include_lint=True``
+        serves its persisted default-binding findings without re-analysis
+        (and without needing the HLO text back)."""
+        alg = algorithm or self.algorithm
+        if phase is None and alg == self.algorithm:
+            cached = getattr(self, "_lint_findings", None)
+            if cached is not None:
+                return cached
+        return self.view(alg, phase=phase).lint()
+
+    def lint_table(self, algorithm: Optional[str] = None) -> str:
+        """Terminal rendering of :meth:`lint` (reporter.lint_table)."""
+        return reporter.lint_table(
+            self.lint(algorithm), title=f"{self.name}: lint findings")
+
     def save(self, path: str, *, include_hlo: bool = False,
-             include_schedules: bool = False):
-        """Write the full report as schema-v5 JSON (see ``load``).
+             include_schedules: bool = False,
+             include_lint: bool = False):
+        """Write the full report as schema-v7 JSON (see ``load``).
 
         The file is a lossless round-trip: ops, traced events, matrices,
         summaries, topology, phase records and timings all survive.  It is
@@ -295,16 +328,20 @@ class CommReport:
         ``include_schedules=True`` adds the optional schema-v5
         ``schedules`` section: one decomposition-schedule summary per op
         (phase kind / tier / structure / axis / bytes / latency hops).
+        ``include_lint=True`` adds the schema-v7 ``lint`` section: the
+        default binding's :meth:`lint` findings, served back by loaded
+        reports without re-analysis.
         """
         from .export import export_json
         export_json(self, path, include_hlo=include_hlo,
-                    include_schedules=include_schedules)
+                    include_schedules=include_schedules,
+                    include_lint=include_lint)
 
     @classmethod
     def load(cls, path: str) -> "CommReport":
         """Read a report written by :meth:`save` (or the report cache).
 
-        Accepts schema v1-v5.  Loaded reports render, diff, export and
+        Accepts schema v1-v7.  Loaded reports render, diff, export and
         feed the cost models exactly like fresh ones; ``roofline_of``
         additionally needs the compiled HLO, which is present when the
         file was saved with ``include_hlo=True`` (otherwise a live

@@ -97,6 +97,35 @@ def _signed_bytes(n: float) -> str:
     return ("-" if n < 0 else "+") + human_bytes(abs(n))
 
 
+# ---------------------------------------------------------------------------
+# static lint findings — the advisor's table
+# ---------------------------------------------------------------------------
+def lint_table(findings, title: str = "") -> str:
+    """Findings table (:class:`~repro.core.lint.LintFinding` records):
+    rule, severity, ops, modeled savings -- already sorted errors-first by
+    the lint pass."""
+    if not findings:
+        out = "(no lint findings)"
+        return f"== {title} ==\n{out}" if title else out
+    rows = []
+    for f in findings:
+        ops = ",".join(f.op_names)
+        if len(ops) > 40:
+            ops = ops[:37] + f"...({len(f.op_names)} ops)"
+        rows.append([
+            f.rule_id, f.severity, f.phase or "-", ops,
+            f"{f.est_savings_s * 1e3:.3f} ms",
+            human_bytes(f.est_dcn_bytes_saved),
+            f.suggested_fix,
+        ])
+    out = format_table(rows, ["Rule", "Severity", "Phase", "Ops",
+                              "Est. Savings", "DCN Bytes Saved",
+                              "Suggested Fix"])
+    if title:
+        out = f"== {title} ==\n{out}"
+    return out
+
+
 def phase_diff_table(a_name: str, a_summary: dict,
                      b_name: str, b_summary: dict) -> str:
     """Primitive-by-primitive comparison of two phases' compiled

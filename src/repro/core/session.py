@@ -43,7 +43,7 @@ from typing import Any, Iterable, Optional
 import jax
 import numpy as np
 
-from . import cost_models, hlo_cost
+from . import cost_models, decompose, hlo_cost
 from .events import (CollectiveOp, HostTransfer, PhaseRecord, TraceEvent)
 from .interceptor import CollectiveInterceptor, traced_summary
 from .topology import MeshTopology
@@ -112,6 +112,9 @@ class MonitorSession:
                  algorithm: str = "ring",
                  sparse: Optional[bool] = None):
         cost_models.validate_algorithm(algorithm)
+        # a fresh session warns afresh: hierarchical-fallback warnings are
+        # deduplicated per (kind, group size) per session, not per process
+        decompose.reset_fallback_warnings()
         self.mesh = mesh
         self.name = name
         self.algorithm = algorithm
@@ -286,7 +289,8 @@ class MonitorSession:
                 self.compiled_ops, self.num_devices, alg, self.topo,
                 self.host_transfers, phase=phase,
                 known_phases=self.phase_names(), label=self.name,
-                sparse=self.sparse)
+                sparse=self.sparse,
+                hlo_texts=[c.hlo_text for c in self.captures])
         return self._views[key]
 
     def _merged_cost(self) -> dict:

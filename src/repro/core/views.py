@@ -33,7 +33,7 @@ from .topology import MeshTopology
 def build_view(ops, num_devices: int, algorithm: str,
                topo: Optional[MeshTopology], host_transfers,
                *, phase: Optional[str], known_phases, label: str,
-               sparse: Optional[bool] = None):
+               sparse: Optional[bool] = None, hlo_texts=()):
     """Construct the :class:`CommView` for one ``(algorithm, phase)``
     binding -- the shared filter/validation behind both
     ``MonitorSession.view`` and ``CommReport.view`` (one implementation,
@@ -42,7 +42,10 @@ def build_view(ops, num_devices: int, algorithm: str,
     ``phase=None`` binds everything; a named phase filters ops and host
     transfers by their tag and must be one of ``known_phases``.
     ``sparse`` is the matrix-representation mode (None = auto by device
-    count, see :class:`CommView`).
+    count, see :class:`CommView`).  ``hlo_texts`` are the captures'
+    compiled modules (one string each) -- the def-use ground truth the
+    :meth:`CommView.lint` rules read; views without them still lint, on
+    the schedule-only rules.
     """
     if phase is not None:
         known = list(known_phases)
@@ -53,7 +56,8 @@ def build_view(ops, num_devices: int, algorithm: str,
         host_transfers = [t for t in host_transfers if t.phase == phase]
     return CommView(ops, num_devices, algorithm=algorithm, topo=topo,
                     host_transfers=host_transfers,
-                    label=f"{label}:{phase or 'all'}", sparse=sparse)
+                    label=f"{label}:{phase or 'all'}", sparse=sparse,
+                    hlo_texts=hlo_texts)
 
 
 class CommView:
@@ -69,7 +73,8 @@ class CommView:
                  algorithm: str = "ring",
                  topo: Optional[MeshTopology] = None,
                  host_transfers: Iterable[HostTransfer] = (),
-                 label: str = "", sparse: Optional[bool] = None):
+                 label: str = "", sparse: Optional[bool] = None,
+                 hlo_texts: Iterable[str] = ()):
         cost_models.validate_algorithm(algorithm)
         self.ops = list(ops)
         self.num_devices = int(num_devices)
@@ -77,6 +82,8 @@ class CommView:
         self.topo = topo
         self.host_transfers = list(host_transfers)
         self.label = label
+        # compiled module text per capture -- def-use input for lint()
+        self.hlo_texts = [t for t in hlo_texts if t]
         # matrix representation: True = COO SparseCommMatrix, False =
         # dense ndarray, None = auto (sparse above the device-count
         # cutover -- the dense array is O(d^2) memory)
@@ -107,7 +114,8 @@ class CommView:
             return self
         return CommView(self.ops, self.num_devices, algorithm=algorithm,
                         topo=self.topo, host_transfers=self.host_transfers,
-                        label=self.label, sparse=self.sparse)
+                        label=self.label, sparse=self.sparse,
+                        hlo_texts=self.hlo_texts)
 
     # -- byte accounting ---------------------------------------------------
     @property
@@ -209,3 +217,17 @@ class CommView:
         """Contention-aware bound: the bottleneck link's bytes/bandwidth."""
         lu = self.link_utilization()
         return 0.0 if lu is None else lu.bottleneck_seconds()
+
+    # -- static lint ---------------------------------------------------------
+    def lint(self) -> list:
+        """Static anti-pattern findings for this binding (lazy, memoized
+        like every other artifact): a list of
+        :class:`~repro.core.lint.LintFinding`, errors first, then by
+        modeled savings.  HLO def-use rules run only when the view carries
+        :attr:`hlo_texts`; schedule rules always run (savings are zero
+        without a topology)."""
+        from .lint import lint_ops   # deferred: lint imports decompose
+
+        return self._cached("lint", lambda: lint_ops(
+            self.ops, topo=self.topo, algorithm=self.algorithm,
+            hlo_texts=self.hlo_texts))

@@ -109,22 +109,30 @@ def _data_axis_size(mesh) -> int:
 
 
 def _build_paper(mesh):
-    """Paper §4 microbenchmark: DDP 2-layer MLP, bucketed AllReduce."""
+    """Paper §4 microbenchmark: DDP 2-layer MLP, bucketed AllReduce.
+
+    On a 3-axis (pod,data,model) mesh the replica axis spans ``("pod",
+    "data")`` so the gradient AllReduce crosses the DCN boundary -- the
+    multi-pod shape the lint pass's flat-ring rule prices.
+    """
     import jax
     import jax.numpy as jnp
     from repro.train import ddp
 
     d = 256
     n_data = _data_axis_size(mesh)
-    b = 4 * n_data
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axis = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    n_repl = n_data * sizes.get("pod", 1)
+    b = 4 * n_repl
 
     def loss_fn(params, batch):
         h = jnp.tanh(batch["x"] @ params["w1"] + params["b1"])
         pred = h @ params["w2"]
         return ((pred - batch["y"]) ** 2).mean(), {}
 
-    step = ddp.make_ddp_train_step(loss_fn, mesh, mode="bucketed",
-                                   bucket_mb=1.0)
+    step = ddp.make_ddp_train_step(loss_fn, mesh, axis_name=axis,
+                                   mode="bucketed", bucket_mb=1.0)
     f32 = jnp.float32
     params = {"w1": jax.ShapeDtypeStruct((d, 4 * d), f32),
               "b1": jax.ShapeDtypeStruct((4 * d,), f32),
@@ -283,7 +291,8 @@ def _registry() -> dict[str, SweepSpec]:
 
     specs = [
         SweepSpec("paper", "paper §4 DDP microbenchmark (2-layer MLP, "
-                  "bucketed AllReduce)", "v1:d=256,bucket=1", _build_paper),
+                  "bucketed AllReduce)", "v2:d=256,bucket=1,pod-dp",
+                  _build_paper),
         SweepSpec("gnmt", "paper §4.1 GNMT machine translation, DDP epoch "
                   "(broadcast + AllReduce + AllGather)",
                   "v1:d=64,layers=2,steps=4", _build_gnmt),
@@ -337,14 +346,19 @@ class SweepResult:
     artifacts: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def summary_table(self, by_link: bool = False,
-                      by_phase: bool = False) -> str:
+                      by_phase: bool = False,
+                      lint: bool = False) -> str:
         """One row per cell; ``by_link=True`` adds the physical-link view
         (busiest link, its contention-aware bottleneck ms, and the
         tier-overlapped communication time ici ∥ dcn -- the ``--by-link``
         CLI columns).  ``by_phase=True`` expands each cell into one row per
         session phase (single-phase reports keep one row, labelled with
         their phase), with all statistics computed from that phase's
-        :class:`~repro.core.views.CommView`."""
+        :class:`~repro.core.views.CommView`.  ``lint=True`` appends the
+        static-analysis columns: finding count (worst severity) and the
+        total modeled savings across findings (the ``--lint`` CLI
+        columns)."""
+        from repro.core.lint import max_severity
         rows = []
         for rep in self.reports:
             targets = [(None, rep.view())]
@@ -382,6 +396,13 @@ class SweepResult:
                     row[-1:-1] = ([bn[0].name, f"{bn[1] * 1e3:.3f}",
                                    f"{overlap * 1e3:.3f}"]
                                   if bn else ["-", "-", "-"])
+                if lint:
+                    findings = rep.lint(phase=ph)
+                    sev = max_severity(findings)
+                    row[-1:-1] = [
+                        f"{len(findings)}" + (f" ({sev})" if sev else ""),
+                        f"{sum(f.est_savings_s for f in findings) * 1e3:.3f}",
+                    ]
                 rows.append(row)
         header = ["config", "mesh", "algorithm"] \
             + (["phase"] if by_phase else []) \
@@ -389,6 +410,8 @@ class SweepResult:
                "dominant primitive", "source"]
         if by_link:
             header[-1:-1] = ["busiest link", "link ms", "overlap ms"]
+        if lint:
+            header[-1:-1] = ["lint findings", "lint savings ms"]
         return format_table(rows, header)
 
 

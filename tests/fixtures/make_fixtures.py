@@ -1,0 +1,126 @@
+"""Regenerate the committed lint-CI fixtures.
+
+Two saved multi-phase session reports mirroring the examples --
+``examples/translation.py`` (GNMT fwd/bwd/optim on an 8-way data mesh) and
+``examples/serve_lm.py`` (qwen3 reduced prefill/decode on a 4x2 mesh) --
+written with ``include_hlo=True`` (so the def-use lint rules can re-run
+offline) and ``include_lint=True`` (so ``python -m repro lint <file>``
+serves the v7 findings as saved).  The CI fast job gates on
+``--fail-on error`` over both files.
+
+Run:  PYTHONPATH=src python tests/fixtures/make_fixtures.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import make_mesh, shard_map
+from repro.core import MonitorSession
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def translation_report():
+    from repro.data import SyntheticSeq2Seq
+    from repro.models.gnmt import GNMT
+    from repro.optim import OptConfig, init_opt_state, apply_updates
+    from repro.train import ddp
+
+    mesh = make_mesh((8,), ("data",))
+    model = GNMT(vocab=64, d=128, layers=2)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    data = SyntheticSeq2Seq(vocab_size=64, src_len=12, tgt_len=12,
+                            global_batch=32)
+    ocfg = OptConfig(peak_lr=3e-3, warmup_steps=10, decay_steps=500)
+    opt = jax.eval_shape(lambda: init_opt_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params), ocfg))
+
+    def fwd(params, batch):
+        loss, _ = model.loss_fn(params, batch)
+        return jax.lax.pmean(loss, "data")
+
+    def bwd(params, batch):
+        (_, _), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        grads, _ = ddp.allreduce_bucketed(grads, "data", bucket_mb=1.0)
+        return grads
+
+    def optim(params, grads, opt, i):
+        params, opt, _ = apply_updates(params, grads, opt, ocfg, i)
+        return params, opt
+
+    def dp(fn, in_specs, out_specs):
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    batch = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                         data.batch_at(0))
+    session = MonitorSession(mesh=mesh, name="GNMT-MT")
+    with session:
+        with session.phase("fwd"):
+            session.capture(dp(fwd, (P(), P("data")), P()), params, batch)
+        with session.phase("bwd"):
+            session.capture(dp(bwd, (P(), P("data")), P()), params, batch)
+        with session.phase("optim"):
+            session.capture(
+                dp(optim, (P(), P(), P(), P()), (P(), P())),
+                params, params, opt,
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return session.report()
+
+
+def serve_report():
+    from repro import configs
+    from repro.models import build_model
+    from repro.parallel import Sharder
+    from repro.serve import ServeConfig, cache_shardings
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    shd = Sharder(mesh)
+    cfg = configs.config("qwen3_8b", reduced=True)
+    model = build_model(cfg)
+    batch, prompt_len, max_len = 8, 32, 56
+    scfg = ServeConfig(max_len=max_len, batch=batch)
+    cache_sh = cache_shardings(model, scfg, shd)
+    sess = MonitorSession(mesh=mesh, name=f"serve[{cfg.name}]")
+    with sess:
+        with sess.phase("prefill"):
+            sess.capture(
+                lambda p, b: model.prefill(p, b, shd, max_len=max_len),
+                model.shapes(),
+                {"tokens": jax.ShapeDtypeStruct((batch, prompt_len),
+                                                jnp.int32)},
+                name="prefill", out_shardings=(None, cache_sh))
+        with sess.phase("decode"):
+            sess.capture(
+                lambda p, c, b: model.decode_step(p, c, b, shd),
+                model.shapes(), model.cache_shapes(batch, max_len),
+                {"tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)},
+                name="decode", in_shardings=(None, cache_sh, None),
+                out_shardings=(None, cache_sh))
+    return sess.report()
+
+
+def main():
+    for stem, build in (("translation_report", translation_report),
+                        ("serve_report", serve_report)):
+        rep = build()
+        path = os.path.join(HERE, f"{stem}.json")
+        rep.save(path, include_hlo=True, include_lint=True)
+        findings = rep.lint()
+        print(f"{stem}: {len(rep.compiled_ops)} collectives, "
+              f"{len(findings)} lint findings -> {path}")
+        for f in findings:
+            print(f"  [{f.severity}] {f.rule_id}: {f.op_names}")
+
+
+if __name__ == "__main__":
+    main()

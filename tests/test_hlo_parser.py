@@ -5,7 +5,8 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core import hlo_parser
-from repro.core.hlo_parser import parse_hlo_collectives, parse_replica_groups
+from repro.core.hlo_parser import (HLOParseError, parse_hlo_collectives,
+                                   parse_replica_groups)
 from repro.compat import shard_map
 
 
@@ -61,6 +62,62 @@ class TestSyntheticLines:
                "%ag-done = f32[16]{0} all-gather-done(%ag-start)")
         ops = parse_hlo_collectives(hlo)
         assert len(ops) == 1
+
+
+class TestHardening:
+    """Malformed attributes raise (with the op text); the channel /
+    global-ids / operand attributes round-trip."""
+
+    def test_ragged_explicit_groups_raise_with_op_text(self):
+        line = ("%ar.9 = f32[8]{0} all-reduce(%p), "
+                "replica_groups={{0,1,2},{3,4}}, to_apply=%sum")
+        with pytest.raises(HLOParseError, match=r"ragged.*%ar\.9"):
+            parse_replica_groups(line)
+        with pytest.raises(HLOParseError):
+            parse_hlo_collectives(line)
+
+    def test_non_tiling_iota_raises(self):
+        with pytest.raises(HLOParseError, match="do not tile"):
+            parse_replica_groups("replica_groups=[4,3]<=[8]")
+
+    def test_bad_iota_transpose_raises(self):
+        with pytest.raises(HLOParseError, match="not a permutation"):
+            parse_replica_groups("replica_groups=[2,4]<=[4,2]T(0,2)")
+
+    def test_channel_and_global_ids_parsed(self):
+        line = ("%ar = f32[8]{0} all-reduce(%p), channel_id=5, "
+                "replica_groups={{0,1,2,3}}, use_global_device_ids=true, "
+                "to_apply=%sum")
+        (op,) = parse_hlo_collectives(line)
+        assert op.channel_id == 5
+        assert op.use_global_device_ids is True
+        (plain,) = parse_hlo_collectives(
+            "%ar = f32[8]{0} all-reduce(%p), replica_groups={{0,1}}, "
+            "to_apply=%sum")
+        assert plain.channel_id is None
+        assert plain.use_global_device_ids is False
+
+    def test_operand_names_plain(self):
+        line = ("%ar = (f32[10]{0}, f32[4]{0}) all-reduce(%a, %b), "
+                "replica_groups={{0,1,2,3}}, to_apply=%sum")
+        (op,) = parse_hlo_collectives(line)
+        assert op.operand_names == ["a", "b"]
+
+    def test_operand_names_typed_and_tuple_shaped(self):
+        """jax 0.4.x prints typed operands whose tuple shapes and layouts
+        contain commas/parens -- naive splitting would yield garbage."""
+        line = ("%ar = (f32[10]{0}, (s32[], f32[4])) all-reduce("
+                "f32[10]{1,0} %a, (s32[], f32[4]) %b.2), "
+                "replica_groups={{0,1,2,3}}, to_apply=%sum")
+        (op,) = parse_hlo_collectives(line)
+        assert op.operand_names == ["a", "b.2"]
+
+    def test_async_start_operands_parsed(self):
+        hlo = ("%ag-start = (f32[4]{0}, f32[16]{0}) all-gather-start(%x), "
+               "replica_groups={{0,1,2,3}}, dimensions={0}\n"
+               "%ag-done = f32[16]{0} all-gather-done(%ag-start)")
+        (op,) = parse_hlo_collectives(hlo)
+        assert op.operand_names == ["x"]
 
 
 class TestRealModule:

@@ -20,7 +20,7 @@ Property-style (grid-parametrized, no compilation, no optional deps):
 import numpy as np
 import pytest
 
-from repro.core import comm_matrix, cost_models
+from repro.core import comm_matrix, cost_models, decompose
 from repro.core.comm_matrix import HierarchicalFallbackWarning
 from repro.core.events import CollectiveOp, HostTransfer, Shape
 from repro.core.topology import DCN_FABRIC, MeshTopology
@@ -196,6 +196,7 @@ class TestHierarchicalPlacement:
         the same case (one shared predicate)."""
         group = [0, 1, 2, 4, 5]        # 3 in pod 0, 2 in pod 1
         op = mk_op(kind, group=group)
+        decompose.reset_fallback_warnings()   # warnings dedup per session
         with pytest.warns(HierarchicalFallbackWarning):
             hier = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
                                               topo=TWO_POD)
@@ -218,6 +219,7 @@ class TestHierarchicalPlacement:
         from repro.core import hlo_parser
         group = [0, 1, 2, 4, 5]
         op = mk_op("all-gather", group=group)
+        decompose.reset_fallback_warnings()   # warnings dedup per session
         with pytest.warns(HierarchicalFallbackWarning):
             mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
                                              topo=TWO_POD)

@@ -1,0 +1,443 @@
+"""Static lint pass: one positive + one negative golden case per rule,
+the savings invariant, the clean-config assertion, schema-v7 lint
+round-trip, and the fallback-warning dedup."""
+import json
+import warnings
+
+import pytest
+
+from repro.core import hlo_cost
+from repro.core.decompose import (HierarchicalFallbackWarning, decompose,
+                                  reset_fallback_warnings)
+from repro.core.events import CollectiveOp, Shape
+from repro.core.lint import (RULES, LintFinding, lint_ops, max_severity,
+                             severity_rank)
+from repro.core.topology import MeshTopology
+
+TOPO_FLAT = MeshTopology(axis_names=("data",), axis_sizes=(8,))
+TOPO_PODS = MeshTopology(axis_names=("pod", "data"), axis_sizes=(2, 4))
+
+
+def _ar(name, dims=(1024, 1024), dtype="f32", groups=None, **kw):
+    return CollectiveOp(
+        kind="all-reduce", name=name,
+        result_shapes=[Shape(dtype, dims)],
+        replica_groups=groups or [[0, 1, 2, 3, 4, 5, 6, 7]], **kw)
+
+
+def _findings(rule_id, findings):
+    return [f for f in findings if f.rule_id == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# hand-written HLO for the def-use rules
+# ---------------------------------------------------------------------------
+HLO_AG_SLICE = """\
+HloModule m
+
+ENTRY %main (p0: f32[128,64]) -> f32[16,64] {
+  %p0 = f32[128,64] parameter(0)
+  %ag = f32[1024,64] all-gather(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  ROOT %sl = f32[16,64] slice(%ag), slice={[0:16], [0:64]}
+}
+"""
+
+# negative: the gathered tensor feeds real compute, not just a slice
+HLO_AG_USED = """\
+HloModule m
+
+ENTRY %main (p0: f32[128,64]) -> f32[1024,64] {
+  %p0 = f32[128,64] parameter(0)
+  %ag = f32[1024,64] all-gather(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  ROOT %neg = f32[1024,64] negate(%ag)
+}
+"""
+
+HLO_DUP = """\
+HloModule m
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64]) -> (f32[64], f32[64]) {
+  %p0 = f32[64] parameter(0)
+  %ar1 = f32[64] all-reduce(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum
+  %ar2 = f32[64] all-reduce(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum
+  ROOT %t = (f32[64], f32[64]) tuple(%ar1, %ar2)
+}
+"""
+
+# negative: same shape/groups but distinct operands -- two real transfers
+HLO_NO_DUP = """\
+HloModule m
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64], p1: f32[64]) -> (f32[64], f32[64]) {
+  %p0 = f32[64] parameter(0)
+  %p1 = f32[64] parameter(1)
+  %ar1 = f32[64] all-reduce(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum
+  %ar2 = f32[64] all-reduce(%p1), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum
+  ROOT %t = (f32[64], f32[64]) tuple(%ar1, %ar2)
+}
+"""
+
+HLO_DTYPE = """\
+HloModule m
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: bf16[4096]) -> bf16[4096] {
+  %p0 = bf16[4096] parameter(0)
+  %cv = f32[4096] convert(%p0)
+  %ar = f32[4096] all-reduce(%cv), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum
+  ROOT %back = bf16[4096] convert(%ar)
+}
+"""
+
+# negative: genuinely f32 on both sides -- the wire width is needed
+HLO_DTYPE_OK = """\
+HloModule m
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[4096]) -> f32[4096] {
+  %p0 = f32[4096] parameter(0)
+  %ar = f32[4096] all-reduce(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%sum
+  ROOT %neg = f32[4096] negate(%ar)
+}
+"""
+
+
+def _hlo_case(text):
+    """(ops, hlo_texts) pair for one hand-written module."""
+    return hlo_cost.analyze_hlo(text).collectives, [text]
+
+
+# ---------------------------------------------------------------------------
+# rule 1: small-ar-bucketing
+# ---------------------------------------------------------------------------
+class TestSmallArBucketing:
+    def test_latency_bound_run_flags(self):
+        ops = [_ar(f"%ar.{i}", dims=(8,)) for i in range(4)]
+        got = _findings("small-ar-bucketing",
+                        lint_ops(ops, topo=TOPO_FLAT))
+        assert len(got) == 1
+        f = got[0]
+        assert f.op_names == [op.name for op in ops]
+        assert f.severity == "warn"
+        assert f.est_savings_s > 0.0
+
+    def test_bandwidth_bound_run_clean(self):
+        ops = [_ar(f"%ar.{i}") for i in range(4)]      # 4 MiB each
+        assert not _findings("small-ar-bucketing",
+                             lint_ops(ops, topo=TOPO_FLAT))
+
+    def test_different_groups_break_the_run(self):
+        ops = [_ar("%ar.0", dims=(8,), groups=[[0, 1, 2, 3]]),
+               _ar("%ar.1", dims=(8,), groups=[[4, 5, 6, 7]])]
+        assert not _findings("small-ar-bucketing",
+                             lint_ops(ops, topo=TOPO_FLAT))
+
+
+# ---------------------------------------------------------------------------
+# rule 2: flat-ring-multipod
+# ---------------------------------------------------------------------------
+class TestFlatRingMultipod:
+    def test_pod_spanning_ring_flags_error(self):
+        got = _findings("flat-ring-multipod",
+                        lint_ops([_ar("%ar.0")], topo=TOPO_PODS,
+                                 algorithm="ring"))
+        assert len(got) == 1
+        f = got[0]
+        assert f.severity == "error"
+        assert f.est_savings_s > 0.0
+        assert f.est_dcn_bytes_saved > 0.0
+        assert "hierarchical" in f.suggested_fix
+
+    def test_hierarchical_binding_clean(self):
+        assert not lint_ops([_ar("%ar.0")], topo=TOPO_PODS,
+                            algorithm="hierarchical")
+
+    def test_single_pod_clean(self):
+        assert not _findings("flat-ring-multipod",
+                             lint_ops([_ar("%ar.0")], topo=TOPO_FLAT))
+
+
+# ---------------------------------------------------------------------------
+# rule 3: allgather-then-slice
+# ---------------------------------------------------------------------------
+class TestAllgatherThenSlice:
+    def test_slice_only_consumer_flags(self):
+        ops, texts = _hlo_case(HLO_AG_SLICE)
+        got = _findings("allgather-then-slice",
+                        lint_ops(ops, topo=TOPO_FLAT, hlo_texts=texts))
+        assert len(got) == 1
+        f = got[0]
+        assert f.op_names == ["ag"]
+        assert f.est_savings_s > 0.0
+
+    def test_real_consumer_clean(self):
+        ops, texts = _hlo_case(HLO_AG_USED)
+        assert not _findings("allgather-then-slice",
+                             lint_ops(ops, topo=TOPO_FLAT,
+                                      hlo_texts=texts))
+
+
+# ---------------------------------------------------------------------------
+# rule 4: redundant-collective
+# ---------------------------------------------------------------------------
+class TestRedundantCollective:
+    def test_identical_pair_flags_error(self):
+        ops, texts = _hlo_case(HLO_DUP)
+        got = _findings("redundant-collective",
+                        lint_ops(ops, topo=TOPO_FLAT, hlo_texts=texts))
+        assert len(got) == 1
+        f = got[0]
+        assert f.severity == "error"
+        assert sorted(f.op_names) == ["ar1", "ar2"]
+        assert f.est_savings_s > 0.0
+        # savings = (k-1)/k of current for k=2 duplicates
+        assert f.est_savings_s == pytest.approx(f.est_current_s / 2)
+
+    def test_distinct_operands_clean(self):
+        ops, texts = _hlo_case(HLO_NO_DUP)
+        assert not _findings("redundant-collective",
+                             lint_ops(ops, topo=TOPO_FLAT,
+                                      hlo_texts=texts))
+
+
+# ---------------------------------------------------------------------------
+# rule 5: dcn-permute
+# ---------------------------------------------------------------------------
+def _permute(pairs, name="%cp.0"):
+    return CollectiveOp(kind="collective-permute", name=name,
+                        result_shapes=[Shape("f32", (65536,))],
+                        replica_groups=[],
+                        source_target_pairs=list(pairs))
+
+
+class TestDcnPermute:
+    def test_packable_cross_pod_pairs_flag(self):
+        # {0,4} and {1,5} each fit in a 4-device pod; the default device
+        # order routes both exchanges over DCN
+        op = _permute([(0, 4), (4, 0), (1, 5), (5, 1)])
+        got = _findings("dcn-permute", lint_ops([op], topo=TOPO_PODS))
+        assert len(got) == 1
+        assert got[0].est_savings_s > 0.0
+
+    def test_unpackable_component_clean(self):
+        # one 8-cycle: the component needs all 8 devices > pod capacity 4
+        op = _permute([(i, (i + 1) % 8) for i in range(8)])
+        assert not _findings("dcn-permute",
+                             lint_ops([op], topo=TOPO_PODS))
+
+    def test_intra_pod_pairs_clean(self):
+        op = _permute([(0, 1), (1, 0), (4, 5), (5, 4)])
+        assert not _findings("dcn-permute",
+                             lint_ops([op], topo=TOPO_PODS))
+
+
+# ---------------------------------------------------------------------------
+# rule 6: wire-dtype-waste
+# ---------------------------------------------------------------------------
+class TestWireDtypeWaste:
+    def test_bf16_sandwich_flags(self):
+        ops, texts = _hlo_case(HLO_DTYPE)
+        got = _findings("wire-dtype-waste",
+                        lint_ops(ops, topo=TOPO_FLAT, hlo_texts=texts))
+        assert len(got) == 1
+        assert got[0].op_names == ["ar"]
+        assert got[0].est_savings_s >= 0.0
+
+    def test_true_f32_clean(self):
+        ops, texts = _hlo_case(HLO_DTYPE_OK)
+        assert not _findings("wire-dtype-waste",
+                             lint_ops(ops, topo=TOPO_FLAT,
+                                      hlo_texts=texts))
+
+
+# ---------------------------------------------------------------------------
+# cross-rule properties
+# ---------------------------------------------------------------------------
+def _all_scenario_findings():
+    out = []
+    out += lint_ops([_ar(f"%ar.{i}", dims=(8,)) for i in range(4)],
+                    topo=TOPO_FLAT)
+    out += lint_ops([_ar("%ar.0")], topo=TOPO_PODS, algorithm="ring")
+    out += lint_ops([_ar("%ar.0")], topo=TOPO_PODS, algorithm="tree")
+    out += lint_ops([_permute([(0, 4), (4, 0)])], topo=TOPO_PODS)
+    for text in (HLO_AG_SLICE, HLO_DUP, HLO_DTYPE):
+        ops, texts = _hlo_case(text)
+        out += lint_ops(ops, topo=TOPO_FLAT, hlo_texts=texts)
+        out += lint_ops(ops, topo=TOPO_PODS, hlo_texts=texts)
+        out += lint_ops(ops, topo=None, hlo_texts=texts)   # topo-free
+    return out
+
+
+class TestInvariants:
+    def test_savings_bounded_by_current(self):
+        """The finding invariant: 0 <= est_savings_s <= est_current_s (a
+        fix can at best eliminate the op's whole modeled time), and DCN
+        bytes saved are never negative."""
+        findings = _all_scenario_findings()
+        assert findings
+        for f in findings:
+            assert 0.0 <= f.est_savings_s <= f.est_current_s + 1e-15, f
+            assert f.est_dcn_bytes_saved >= 0.0, f
+
+    def test_sorted_errors_first_then_savings(self):
+        findings = _all_scenario_findings()
+        ranks = [(-severity_rank(f.severity), -f.est_savings_s)
+                 for f in findings]
+        # within one lint_ops call the order holds; across concatenated
+        # scenario lists only the per-finding fields are checked here
+        for f in findings:
+            assert f.severity in ("info", "warn", "error")
+
+    def test_rule_registry_matches_emitted_ids(self):
+        ids = {r.rule_id for r in RULES}
+        assert {f.rule_id for f in _all_scenario_findings()} <= ids
+
+    def test_max_severity(self):
+        assert max_severity([]) is None
+        fs = [LintFinding("r", "warn", [], "", ""),
+              LintFinding("r", "error", [], "", "")]
+        assert max_severity(fs) == "error"
+
+    def test_finding_dict_round_trip(self):
+        for f in _all_scenario_findings():
+            assert LintFinding.from_dict(
+                json.loads(json.dumps(f.to_dict()))) == f
+
+
+# ---------------------------------------------------------------------------
+# whole-report integration: pod mesh DDP step end to end
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def pod_report():
+    import jax
+    import jax.numpy as jnp
+    from repro.compat import make_mesh
+    from repro.core import monitor_fn
+    from repro.train import ddp
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return ((pred - batch["y"]) ** 2).mean(), {}
+
+    step = ddp.make_ddp_train_step(loss_fn, mesh,
+                                   axis_name=("pod", "data"),
+                                   mode="bucketed", bucket_mb=1.0)
+    f32 = jnp.float32
+    params = {"w": jax.ShapeDtypeStruct((256, 256), f32)}
+    mom = {"w": jax.ShapeDtypeStruct((256, 256), f32)}
+    batch = {"x": jax.ShapeDtypeStruct((16, 256), f32),
+             "y": jax.ShapeDtypeStruct((16, 256), f32)}
+    return monitor_fn(step, params, mom, batch, mesh=mesh, name="podtoy")
+
+
+class TestReportLint:
+    pytestmark = pytest.mark.compile
+
+    def test_flat_ring_flags_hierarchical_clean(self, pod_report):
+        findings = pod_report.lint()
+        assert "flat-ring-multipod" in {f.rule_id for f in findings}
+        assert max_severity(findings) == "error"
+        hier = pod_report.rebound("hierarchical").lint()
+        assert max_severity(hier) not in ("error",)
+
+    def test_lint_memoized_per_view(self, pod_report):
+        v = pod_report.view()
+        assert v.lint() is v.lint()
+
+    def test_lint_table_renders(self, pod_report):
+        out = pod_report.lint_table()
+        assert "flat-ring-multipod" in out and "error" in out
+
+    def test_schema_v7_round_trip(self, pod_report, tmp_path):
+        p = str(tmp_path / "r.json")
+        pod_report.save(p, include_lint=True)
+        d = json.loads(open(p).read())
+        assert d["schema"] == "repro.comm_report.v7"
+        assert d["lint"], "lint section missing"
+        from repro.core import CommReport
+        back = CommReport.load(p)
+        assert [f.to_dict() for f in back.lint()] == \
+            [f.to_dict() for f in pod_report.lint()]
+
+    def test_save_without_lint_has_no_section(self, pod_report, tmp_path):
+        p = str(tmp_path / "r.json")
+        pod_report.save(p)
+        assert "lint" not in json.loads(open(p).read())
+
+    def test_html_export_has_findings_panel(self, pod_report, tmp_path):
+        from repro.core.export import html_exporter
+        html = html_exporter.export_html(
+            pod_report, str(tmp_path / "r.html"))
+        text = open(html).read()
+        assert "flat-ring-multipod" in text
+
+
+class TestCleanConfig:
+    pytestmark = pytest.mark.compile
+
+    def test_serve_config_is_clean(self, tmp_path):
+        """The serve workload (prefill/decode on a single-pod 4x2 mesh)
+        triggers no rule -- the zero-findings baseline the CI gate relies
+        on."""
+        from repro import sweep as sweep_mod
+        from repro.core.report_cache import ReportCache
+        res = sweep_mod.run_sweep(
+            ["serve"], ["4x2"], ["ring"],
+            cache=ReportCache(root=str(tmp_path)), log=lambda m: None)
+        assert not res.failures
+        assert res.reports[0].lint() == []
+
+
+# ---------------------------------------------------------------------------
+# hierarchical-fallback warning dedup (decompose.warn_fallback_once)
+# ---------------------------------------------------------------------------
+def _decompose_warns(op, topo) -> bool:
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        decompose(op, "hierarchical", topo)
+    return any(issubclass(x.category, HierarchicalFallbackWarning)
+               for x in w)
+
+
+class TestFallbackWarningDedup:
+    def test_warns_once_per_kind_and_size(self):
+        reset_fallback_warnings()
+        op5 = _ar("%ar.0", groups=[[0, 1, 2, 3, 4]])
+        assert _decompose_warns(op5, TOPO_PODS)
+        assert not _decompose_warns(op5, TOPO_PODS)       # deduped
+        # a different (kind, size) key warns afresh
+        ag5 = CollectiveOp(kind="all-gather", name="%ag.0",
+                           result_shapes=[Shape("f32", (40,))],
+                           replica_groups=[[0, 1, 2, 3, 4]])
+        assert _decompose_warns(ag5, TOPO_PODS)
+
+    def test_reset_rearms(self):
+        reset_fallback_warnings()
+        op5 = _ar("%ar.0", groups=[[0, 1, 2, 3, 4]])
+        assert _decompose_warns(op5, TOPO_PODS)
+        reset_fallback_warnings()
+        assert _decompose_warns(op5, TOPO_PODS)
