@@ -98,6 +98,32 @@ def multiaxis_ops(num_ops: int, seed: int = 1) -> list[CollectiveOp]:
         weight=float(rng.integers(1, 65))) for i in range(num_ops)]
 
 
+def irregular_a2a_ops(num_ops: int, num_devices: int,
+                      seed: int = 2) -> list[CollectiveOp]:
+    """Skewed all-to-all stream: every op carries a per-rank byte vector
+    with one hot rank (the MoE hot-expert shape), exercising the
+    irregular placement path (per-source edge weights instead of one
+    uniform block per group)."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    for i in range(num_ops):
+        gsize = int(rng.choice((4, 8, 16)))
+        devs = rng.permutation(num_devices)
+        groups = [sorted(int(d) for d in devs[k:k + gsize])
+                  for k in range(0, num_devices, gsize)]
+        total = float(rng.integers(1 << 10, 1 << 20))
+        vec = rng.random(gsize) + 0.1
+        vec[int(rng.integers(gsize))] *= 8.0          # the hot expert
+        vec = vec / vec.sum() * total
+        ops.append(CollectiveOp(
+            kind="all-to-all", name=f"ia{i}",
+            result_shapes=[Shape("f32", (1,))],
+            replica_groups=groups,
+            weight=float(rng.integers(1, 65)),
+            bytes_per_rank_vec=[float(x) for x in vec]))
+    return ops
+
+
 def _baseline_guard(metrics: dict[str, float]) -> None:
     """Fast-CI perf guard: on the acceptance cell the COO path must stay
     within 1.5x of the recorded ``artifacts/BENCH_matrix.json`` baseline.
@@ -182,6 +208,23 @@ def main():
                  "per-axis"])
     record("matrix_build/256dev_16x16/2000ops/coo_ms", t_ma * 1e3,
            "per_axis_schedule_build")
+
+    # irregular-a2a case: skewed per-rank byte vectors through the COO
+    # path; the legacy loop cannot price vectors, so correctness is pinned
+    # against the billing model's group totals instead
+    ia_ops = irregular_a2a_ops(2000, 256)
+    ia_mat = comm_matrix.matrix_for_ops(ia_ops, 256)
+    expect_total = sum(
+        cost_models.wire_bytes_group_total(
+            op.kind, op.payload_bytes, op.group_size, "ring",
+            vec=op.byte_vector()) * op.num_groups * op.weight
+        for op in ia_ops)
+    np.testing.assert_allclose(ia_mat.sum(), expect_total, rtol=1e-9)
+    t_ia = _time(lambda: comm_matrix.matrix_for_ops(ia_ops, 256))
+    rows.append(["256 (skewed)", "2,000", "-", f"{t_ia * 1e3:.1f}",
+                 "irregular"])
+    record("matrix_build/256dev/2000ops_irregular/coo_ms", t_ia * 1e3,
+           "per_rank_vector_build")
 
     print(format_table(rows, ["devices", "ops", "loop ms", "COO ms",
                               "speedup"]))

@@ -90,28 +90,58 @@ def _tree_placement(group, kind: str,
 
 
 def _phase_edges(ph) -> list[tuple[int, int, float]]:
-    """Scalar edges of ONE schedule phase."""
+    """Scalar edges of ONE schedule phase.
+
+    Vector phases (``bytes_per_rank`` is an ndarray, see
+    :class:`~repro.core.decompose.CommPhase`) place per-position amounts:
+    ring members stream half their own per-rank bytes to each neighbour,
+    a2a members send ``per_rank / (n-1)`` to each peer, and ``pair_bytes``
+    overrides the uniform per-pair payload of ``structure="pairs"``.
+    """
     if ph.structure == "pairs":
         if ph.pairs is None:
             return []
+        if ph.pair_bytes is not None:
+            return [(int(a), int(b), float(v))
+                    for (a, b), v in zip(ph.pairs.tolist(),
+                                         ph.pair_bytes.tolist())]
         return [(int(a), int(b), ph.payload) for a, b in ph.pairs]
     if ph.groups is None:
         return []
     G = np.atleast_2d(ph.groups)
+    B = ph.byte_matrix()
     out: list[tuple[int, int, float]] = []
     if ph.structure == "ring":
-        for row in G:
-            out += _ring_edges(row.tolist(), ph.bytes_per_rank)
+        if B is not None:
+            for row, brow in zip(G, B):
+                members = row.tolist()
+                n = len(members)
+                for i, per in enumerate(brow.tolist()):
+                    out.append((members[i], members[(i + 1) % n],
+                                0.5 * per))
+                    out.append((members[i], members[(i - 1) % n],
+                                0.5 * per))
+        else:
+            for row in G:
+                out += _ring_edges(row.tolist(), ph.bytes_per_rank)
     elif ph.structure == "tree":
         for row in G:
             out += _tree_placement(row.tolist(), ph.kind, ph.payload)
     elif ph.structure == "a2a":
         n = G.shape[1]
-        block = ph.payload / (n * n)
-        for row in G:
-            members = row.tolist()
-            out += [(a, b, block) for a in members for b in members
-                    if a != b]
+        if B is not None:
+            for row, brow in zip(G, B):
+                members = row.tolist()
+                per_peer = (brow / (n - 1)).tolist()
+                out += [(a, b, per_peer[i])
+                        for i, a in enumerate(members)
+                        for b in members if a != b]
+        else:
+            block = ph.payload / (n * n)
+            for row in G:
+                members = row.tolist()
+                out += [(a, b, block) for a in members for b in members
+                        if a != b]
     return out
 
 
@@ -167,19 +197,24 @@ def _ring_neighbor_idx(n: int) -> np.ndarray:
     return idx
 
 
-def _ring_edges_arr(rings, per_rank: float):
+def _ring_edges_arr(rings, per_rank):
     """Bidirectional ring edges for a batch of rings (one per row).
 
     The array form of :func:`_ring_edges`: each member streams half its
     per-rank bytes to each neighbour (cached neighbour-index gather along
     the row axis); on a 2-member ring both halves land on the same peer
-    and accumulate.
+    and accumulate.  ``per_rank`` may be an ndarray (1-D positional or
+    ``(k, n)``): each member then streams half its *own* amount.
     """
     r = np.asarray(rings, dtype=np.intp)
     if r.ndim == 1:
         r = r[None, :]
     src = np.tile(r, (1, 2)).ravel()
     dst = r[:, _ring_neighbor_idx(r.shape[1])].ravel()
+    if isinstance(per_rank, np.ndarray):
+        B = np.broadcast_to(np.asarray(per_rank, dtype=np.float64),
+                            r.shape)
+        return src, dst, np.tile(0.5 * B, (1, 2)).ravel()
     return src, dst, np.full(src.size, 0.5 * per_rank)
 
 
@@ -202,8 +237,11 @@ def _tree_edges_arr(groups, kind: str, s: float):
             np.concatenate([np.tile(up[mu], k), np.tile(down[md], k)]))
 
 
-def _a2a_edges_arr(groups, block: float):
-    """Uniform pairwise exchange for a batch of same-size groups."""
+def _a2a_edges_arr(groups, block: float, per_src=None):
+    """Pairwise exchange for a batch of same-size groups: uniform
+    ``block`` bytes per ordered pair, or -- when ``per_src`` (1-D
+    positional or ``(k, n)``) is given -- each source's own
+    ``per_src / (n-1)`` to every peer (skewed all-to-all)."""
     G = np.asarray(groups, dtype=np.intp)
     if G.ndim == 1:
         G = G[None, :]
@@ -211,6 +249,11 @@ def _a2a_edges_arr(groups, block: float):
     src = np.repeat(G, n, axis=1).ravel()
     dst = np.tile(G, (1, n)).ravel()
     keep = src != dst
+    if per_src is not None:
+        B = np.broadcast_to(np.asarray(per_src, dtype=np.float64),
+                            G.shape)
+        vals = np.repeat(B / (n - 1), n, axis=1).ravel()[keep]
+        return src[keep], dst[keep], vals
     return src[keep], dst[keep], np.full(k * n * (n - 1), block)
 
 
@@ -220,6 +263,9 @@ def _phase_edge_arrays(ph):
     if ph.structure == "pairs":
         if ph.pairs is None:
             return _EMPTY_EDGES
+        if ph.pair_bytes is not None:
+            return (ph.pairs[:, 0], ph.pairs[:, 1],
+                    np.asarray(ph.pair_bytes, dtype=np.float64))
         return (ph.pairs[:, 0], ph.pairs[:, 1],
                 np.full(len(ph.pairs), ph.payload))
     if ph.groups is None:
@@ -230,6 +276,9 @@ def _phase_edge_arrays(ph):
         return _tree_edges_arr(ph.groups, ph.kind, ph.payload)
     if ph.structure == "a2a":
         n = int(np.atleast_2d(ph.groups).shape[1])
+        if isinstance(ph.bytes_per_rank, np.ndarray):
+            return _a2a_edges_arr(ph.groups, 0.0,
+                                  per_src=ph.bytes_per_rank)
         return _a2a_edges_arr(ph.groups, ph.payload / (n * n))
     return _EMPTY_EDGES
 

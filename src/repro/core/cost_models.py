@@ -37,17 +37,19 @@ from typing import Iterable, Optional
 import numpy as np
 
 from . import decompose as _dec
-from .decompose import (ALGORITHMS, HIERARCHICAL_KINDS,  # noqa: F401
-                        HierarchicalFallbackWarning, effective_pods,
-                        hier_phases, hierarchical_decomposition,
-                        tree_children, tree_subtree_sizes,
-                        validate_algorithm)
+from .decompose import (A2A_KINDS, ALGORITHMS,  # noqa: F401
+                        HIERARCHICAL_KINDS, HierarchicalFallbackWarning,
+                        a2a_decomposition, effective_byte_vector,
+                        effective_pods, hier_phases,
+                        hierarchical_decomposition, tree_children,
+                        tree_subtree_sizes, validate_algorithm)
 from .events import CollectiveOp
 from .topology import MeshTopology
 
 
 def wire_bytes_per_rank(kind: str, payload: float, n: int,
-                        algorithm: str = "ring", *, pods: int = 1) -> float:
+                        algorithm: str = "ring", *, pods: int = 1,
+                        vec=None) -> float:
     """Bytes *sent* by one rank for one collective (paper Table 1 analogue).
 
     ``payload`` is S (the full logical payload per group), ``n`` the group
@@ -69,15 +71,33 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int,
 
     (``m = n/pods``; ring entries are the ``pods=1`` degenerate case:
     ``2(n-1)/n*S`` for all-reduce, ``(n-1)/n*S`` for the one-phase kinds,
-    ``(n-1)/n^2*S`` for all-to-all.)  Receives mirror sends for the
-    symmetric entries; tree entries report the non-root (dominant) cost,
-    with :func:`device_send_bytes` resolving per-role amounts.
+    ``(n-1)/n^2*S`` for all-to-all; hierarchical all-to-all pays
+    ``2(m-1)S/(p m^2)`` intra-pod plus ``(p-1)S/(p^2 m)`` over DCN.)
+    Receives mirror sends for the symmetric entries; tree entries report
+    the non-root (dominant) cost, with :func:`device_send_bytes`
+    resolving per-role amounts.
+
+    ``vec`` is an optional per-rank byte vector (irregular collectives):
+    a uniform vector collapses to the cached scalar path bitwise; a
+    genuinely skewed one bills the **straggler** -- the max over the
+    per-device send totals of the vector schedule.
     """
     if n <= 1:
         return 0.0
     validate_algorithm(algorithm)
-    return _per_rank_cached(kind, float(payload), n, algorithm,
-                            int(pods))
+    vec = effective_byte_vector(kind, vec, n)
+    if vec is None:
+        return _per_rank_cached(kind, float(payload), n, algorithm,
+                                int(pods))
+    phases = _dec.group_phases(kind, float(vec.sum()),
+                               np.arange(n, dtype=np.intp), algorithm,
+                               topo=None, pods=int(pods), warn=False,
+                               vec=vec)
+    totals: dict[int, float] = {}
+    for ph in phases:
+        for d, b in ph.send_bytes().items():
+            totals[d] = totals.get(d, 0.0) + b
+    return float(max(totals.values(), default=0.0))
 
 
 @functools.lru_cache(maxsize=8192)
@@ -95,12 +115,14 @@ def _per_rank_cached(kind: str, payload: float, n: int, algorithm: str,
 
 def wire_bytes_received_per_rank(kind: str, payload: float, n: int,
                                  algorithm: str = "ring", *,
-                                 pods: int = 1) -> float:
-    return wire_bytes_per_rank(kind, payload, n, algorithm, pods=pods)
+                                 pods: int = 1, vec=None) -> float:
+    return wire_bytes_per_rank(kind, payload, n, algorithm, pods=pods,
+                               vec=vec)
 
 
 def wire_bytes_group_total(kind: str, payload: float, n: int,
-                           algorithm: str = "ring", *, pods: int = 1) -> float:
+                           algorithm: str = "ring", *, pods: int = 1,
+                           vec=None) -> float:
     """Bytes on the wire summed over every rank of ONE group.
 
     The per-device sum over the group's schedule: for the symmetric (ring,
@@ -108,12 +130,22 @@ def wire_bytes_group_total(kind: str, payload: float, n: int,
     resolve true per-role amounts (a binary tree all-reduce moves
     ``2*(n-1)*S`` total: S up and S down each of its ``n-1`` edges), so
     matrices, summaries and cost models all agree on the same totals.
+    ``vec`` follows :func:`wire_bytes_per_rank`: irregular groups sum
+    their true per-position amounts (cache bypassed; uniform vectors
+    collapse to the cached scalar path).
     """
     if n <= 1:
         return 0.0
     validate_algorithm(algorithm)
-    return _group_total_cached(kind, float(payload), n, algorithm,
-                               int(pods))
+    vec = effective_byte_vector(kind, vec, n)
+    if vec is None:
+        return _group_total_cached(kind, float(payload), n, algorithm,
+                                   int(pods))
+    phases = _dec.group_phases(kind, float(vec.sum()),
+                               np.arange(n, dtype=np.intp), algorithm,
+                               topo=None, pods=int(pods), warn=False,
+                               vec=vec)
+    return float(sum(ph.total_send_bytes() for ph in phases))
 
 
 @functools.lru_cache(maxsize=8192)
@@ -127,7 +159,8 @@ def _group_total_cached(kind: str, payload: float, n: int, algorithm: str,
 
 def device_send_bytes(kind: str, payload: float, group: list[int],
                       algorithm: str = "ring",
-                      topo: Optional[MeshTopology] = None) -> dict[int, float]:
+                      topo: Optional[MeshTopology] = None, *,
+                      vec=None) -> dict[int, float]:
     """Bytes each device of ``group`` sends for one collective execution.
 
     The per-role resolution of :func:`wire_bytes_per_rank` -- the
@@ -136,13 +169,14 @@ def device_send_bytes(kind: str, payload: float, group: list[int],
     schedule, so the contract holds by construction: ring and hierarchical
     phases are symmetric (every rank sends the per-phase amount); tree
     phases depend on the device's position (root sends S per child, a leaf
-    sends S up and nothing down).
+    sends S up and nothing down); vector phases resolve their per-position
+    amounts (``vec`` is positional over ``group``'s order).
     """
     out = {d: 0.0 for d in group}
     if len(group) <= 1:
         return out
     phases = _dec.group_phases(kind, float(payload), group, algorithm,
-                               topo, warn=False)
+                               topo, warn=False, vec=vec)
     for ph in phases:
         for d, b in ph.send_bytes().items():
             out[d] = out.get(d, 0.0) + b

@@ -50,7 +50,7 @@ from typing import Iterable, Optional
 
 import numpy as np
 
-from .events import CollectiveOp
+from .events import CollectiveOp, VECTOR_KINDS
 from .topology import MeshTopology
 
 ALGORITHMS = ("ring", "tree", "hierarchical")
@@ -63,6 +63,11 @@ TREE_KINDS = HIERARCHICAL_KINDS
 # Kinds whose ring form may decompose per torus axis (phase sequences
 # below preserve the Table-1 per-rank totals exactly).
 AXIS_DECOMPOSABLE_KINDS = HIERARCHICAL_KINDS
+# Kinds the hierarchical algorithm decomposes as a two-tier exchange
+# (intra-pod all-to-all, pod-slot DCN exchange, intra-pod distribution);
+# kept separate from :data:`HIERARCHICAL_KINDS` because the ring-chain
+# decomposition and its legacy oracle do not apply to all-to-all.
+A2A_KINDS = ("all-to-all", "ragged-all-to-all")
 
 
 class HierarchicalFallbackWarning(UserWarning):
@@ -152,13 +157,62 @@ def hierarchical_decomposition(
     return p, n // p, subs
 
 
+def a2a_decomposition(
+        kind: str, group: list[int],
+        topo: Optional[MeshTopology]) -> Optional[
+            tuple[int, int, list[list[int]]]]:
+    """``(p, m, subgroups)`` when an all-to-all over ``group`` decomposes
+    into the two-tier exchange (the :data:`A2A_KINDS` twin of
+    :func:`hierarchical_decomposition`, same acceptance rule: the group
+    spans more than one pod and the pods partition it into equal-size
+    subgroups).  ``None`` otherwise -- placement, billing and timing all
+    fall back to the flat all-to-all phase together."""
+    if topo is None or kind not in A2A_KINDS or not group:
+        return None
+    if not topo.group_crosses_dcn(group):
+        return None
+    subs = topo.pod_partition(group)
+    p, n = len(subs), len(group)
+    if p <= 1 or n % p != 0 or any(len(sub) != n // p for sub in subs):
+        return None
+    return p, n // p, subs
+
+
 def effective_pods(kind: str, group: list[int],
                    topo: Optional[MeshTopology]) -> int:
     """``pods`` argument for the Table-1 entries: the decomposition's ``p``
-    when :func:`hierarchical_decomposition` accepts the triple, else 1 (so
-    hierarchical degenerates to ring exactly where the schedule does)."""
+    when :func:`hierarchical_decomposition` (or, for :data:`A2A_KINDS`,
+    :func:`a2a_decomposition`) accepts the triple, else 1 (so hierarchical
+    degenerates to ring exactly where the schedule does)."""
     dec = hierarchical_decomposition(kind, group, topo)
+    if dec is None:
+        dec = a2a_decomposition(kind, group, topo)
     return dec[0] if dec is not None else 1
+
+
+def effective_byte_vector(kind: str, vec, n: int) -> Optional[np.ndarray]:
+    """Validated, genuinely irregular per-rank byte vector, or ``None``.
+
+    The single collapse point of the vector IR: a missing / malformed /
+    wrong-kind / wrong-length vector -- and, crucially, a **uniform**
+    one -- returns ``None``, routing the op down the scalar path with
+    ``payload = sum(vec)``.  A uniform vector's sum is exactly the scalar
+    payload, so uniform-vector ops reproduce scalar matrices, bills and
+    times bitwise; only genuinely skewed vectors ever reach the vector
+    phase constructors.  ``vec[i]`` is positional: the bytes the rank at
+    group position ``i`` injects, applied identically to every replica
+    group of the op.
+    """
+    if vec is None or kind not in VECTOR_KINDS:
+        return None
+    v = np.asarray(vec, dtype=np.float64)
+    if v.ndim != 1 or int(v.size) != int(n) or v.size < 2:
+        return None
+    if not np.all(np.isfinite(v)) or np.any(v < 0) or v.sum() <= 0:
+        return None
+    if float(v.max()) == float(v.min()):
+        return None
+    return v
 
 
 def hier_phases(kind: str) -> float:
@@ -243,18 +297,29 @@ class CommPhase:
     (``""`` for flattened rings, trees and the DCN exchange).  Phases
     sharing a ``stream`` are sequential; distinct streams (disjoint replica
     groups of one op) run concurrently.
+
+    **Irregular phases.**  ``bytes_per_rank`` may be an ndarray instead of
+    a float: 1-D of length ``m`` (positional -- entry ``i`` is what the
+    rank at group position ``i`` sends, applied to every group row) or 2-D
+    of shape ``(k, m)`` (per group row).  Consumers broadcast it to the
+    ``groups`` shape (:meth:`byte_matrix`); timing charges the **max**
+    entry (:meth:`max_bytes_per_rank` -- the straggler rank paces the
+    phase), billing sums the true per-position amounts.  ``pair_bytes``
+    likewise carries per-pair bytes for ``structure="pairs"`` phases whose
+    pairs move different amounts (the hierarchical permute relay).
     """
 
     kind: str                       # semantic step, e.g. "reduce-scatter"
     tier: str                       # "ici" | "dcn"
     groups: Optional[np.ndarray]    # (k, m) device ids, or None for pairs
-    bytes_per_rank: float
+    bytes_per_rank: "float | np.ndarray"
     latency_hops: float
     axis: str = ""                  # torus axis for per-axis ring phases
     structure: str = "ring"         # "ring" | "tree" | "a2a" | "pairs"
     payload: float = 0.0            # logical payload S the phase operates on
     stream: int = 0                 # sequential within, concurrent across
     pairs: Optional[np.ndarray] = None   # (k, 2) for structure "pairs"
+    pair_bytes: Optional[np.ndarray] = None  # per-pair bytes (num_groups-scaled)
 
     @property
     def group_size(self) -> int:
@@ -266,13 +331,33 @@ class CommPhase:
             return int(self.groups.shape[0]) if self.groups.ndim > 1 else 1
         return 0 if self.pairs is None else int(len(self.pairs))
 
+    def max_bytes_per_rank(self) -> float:
+        """Scalar per-rank bill of the phase: the value itself for scalar
+        phases, the **max** entry for vector phases -- the straggler rank
+        every other participant waits on, which is what timing charges."""
+        if isinstance(self.bytes_per_rank, np.ndarray):
+            return float(np.max(self.bytes_per_rank))
+        return float(self.bytes_per_rank)
+
+    def byte_matrix(self) -> Optional[np.ndarray]:
+        """Per-position send bytes broadcast to the ``groups`` shape
+        ``(k, m)``, or ``None`` for scalar phases (1-D vectors are
+        positional: the same row applies to every group)."""
+        if not isinstance(self.bytes_per_rank, np.ndarray) \
+                or self.groups is None:
+            return None
+        G = np.atleast_2d(self.groups)
+        return np.broadcast_to(
+            np.asarray(self.bytes_per_rank, dtype=np.float64), G.shape)
+
     def seconds(self, topo: MeshTopology, *,
                 include_latency: bool = True) -> float:
         """Streaming time of this phase on ``topo``: bytes at the tier's
         per-chip ring bandwidth, plus ``latency_hops`` at the tier's
-        per-hop latency."""
+        per-hop latency.  Vector phases stream their **max** per-rank
+        bytes -- the straggler paces the phase."""
         dcn = self.tier == "dcn"
-        t = self.bytes_per_rank / topo.ring_bw_per_chip(dcn)
+        t = self.max_bytes_per_rank() / topo.ring_bw_per_chip(dcn)
         if include_latency:
             t += self.latency_hops * (topo.hw.dcn_hop_latency_s if dcn
                                       else topo.hw.ici_hop_latency_s)
@@ -281,8 +366,11 @@ class CommPhase:
     def total_send_bytes(self) -> float:
         """Bytes sent by ALL participants of this phase (one execution) --
         the O(1)/vectorized aggregate of :meth:`send_bytes`, for billing
-        paths that never need the per-device resolution."""
+        paths that never need the per-device resolution.  Vector phases
+        sum their true per-position amounts (not ``size * max``)."""
         if self.structure == "pairs" and self.pairs is not None:
+            if self.pair_bytes is not None:
+                return float(np.sum(self.pair_bytes))
             return float(len(self.pairs)) * self.payload
         if self.groups is None:
             return 0.0
@@ -290,12 +378,20 @@ class CommPhase:
         if self.structure == "tree":
             return float(G.shape[0]) * float(
                 tree_send_bytes(self.kind, self.payload, G.shape[1]).sum())
+        B = self.byte_matrix()
+        if B is not None:
+            return float(B.sum())
         return float(G.size) * self.bytes_per_rank
 
     def send_bytes(self) -> dict[int, float]:
         """Bytes each participating device sends during this phase."""
         out: dict[int, float] = {}
         if self.structure == "pairs" and self.pairs is not None:
+            if self.pair_bytes is not None:
+                for src, b in zip(self.pairs[:, 0].tolist(),
+                                  self.pair_bytes.tolist()):
+                    out[src] = out.get(src, 0.0) + b
+                return out
             # payload is the per-edge byte amount (num_groups-scaled)
             for src in self.pairs[:, 0].tolist():
                 out[src] = out.get(src, 0.0) + self.payload
@@ -309,23 +405,35 @@ class CommPhase:
                 for d, b in zip(row.tolist(), per_pos.tolist()):
                     out[d] = out.get(d, 0.0) + b
             return out
+        B = self.byte_matrix()
+        if B is not None:
+            for row, brow in zip(G, B):
+                for d, b in zip(row.tolist(), brow.tolist()):
+                    out[d] = out.get(d, 0.0) + b
+            return out
         for d in G.ravel().tolist():
             out[d] = out.get(d, 0.0) + self.bytes_per_rank
         return out
 
     def to_summary(self) -> dict:
-        """Serializable record (schema-v5 ``schedules`` section)."""
-        return {
+        """Serializable record (schema-v5 ``schedules`` section); vector
+        phases report their max as ``bytes_per_rank`` plus mean and skew."""
+        out = {
             "kind": self.kind,
             "tier": self.tier,
             "structure": self.structure,
             "axis": self.axis,
             "num_groups": self.num_groups,
             "group_size": self.group_size,
-            "bytes_per_rank": float(self.bytes_per_rank),
+            "bytes_per_rank": self.max_bytes_per_rank(),
             "latency_hops": float(self.latency_hops),
             "stream": self.stream,
         }
+        if isinstance(self.bytes_per_rank, np.ndarray):
+            mean = float(np.mean(self.bytes_per_rank))
+            out["bytes_per_rank_mean"] = mean
+            out["skew"] = (out["bytes_per_rank"] / mean) if mean > 0 else 1.0
+        return out
 
 
 @dataclasses.dataclass
@@ -493,15 +601,37 @@ def _ring_phases(kind: str, s: float, axes: list[tuple[str, np.ndarray]],
 
 
 def _flat_phases(kind: str, s: float, arr: np.ndarray, algorithm: str,
-                 crosses: bool, stream: int) -> list[CommPhase]:
+                 crosses: bool, stream: int,
+                 vec: Optional[np.ndarray] = None) -> list[CommPhase]:
     """Phases for a batch of same-size groups with no pod or per-axis
     structure (``arr`` is ``(k, n)``): the ONE place the flat a2a / tree /
     ring byte amounts are written -- both the group-level billing path
     (:func:`group_phases`) and :func:`decompose`'s batched fast path call
-    it, so placement and billing cannot fork."""
+    it, so placement and billing cannot fork.
+
+    ``vec`` (already validated / uniform-collapsed by
+    :func:`effective_byte_vector`) switches the irregular forms: a skewed
+    all-to-all where position ``i`` injects ``vec[i]`` sends
+    ``vec[i] * (n-1)/n`` (``vec[i]/n`` to each peer); an allgatherv ring
+    forwards every shard except the one it receives last
+    (``S - vec[(i+1) % n]``); a v-reduce-scatter is its time reverse
+    (``S - vec[i]``).  Irregular ops keep the single flat ring/a2a phase
+    regardless of ``algorithm`` -- the tree and per-axis decompositions
+    assume equal shards.
+    """
     n = int(arr.shape[-1])
     tier = "dcn" if crosses else "ici"
-    if kind in ("all-to-all", "ragged-all-to-all"):
+    if vec is not None:
+        if kind in A2A_KINDS:
+            return [CommPhase(kind=kind, tier=tier, groups=arr,
+                              bytes_per_rank=vec * (n - 1) / n,
+                              latency_hops=float(n - 1), structure="a2a",
+                              payload=s, stream=stream)]
+        per = s - np.roll(vec, -1) if kind == "all-gather" else s - vec
+        return [CommPhase(kind=kind, tier=tier, groups=arr,
+                          bytes_per_rank=per, latency_hops=float(n - 1),
+                          structure="ring", payload=s, stream=stream)]
+    if kind in A2A_KINDS:
         return [CommPhase(kind=kind, tier=tier, groups=arr,
                           bytes_per_rank=(n - 1) * s / (n * n),
                           latency_hops=float(n - 1), structure="a2a",
@@ -539,7 +669,8 @@ def _subgroup_axes(subs: list[list[int]],
 def group_phases(kind: str, payload: float, group, algorithm: str,
                  topo: Optional[MeshTopology] = None, *,
                  pods: Optional[int] = None, stream: int = 0,
-                 warn: bool = True) -> list[CommPhase]:
+                 warn: bool = True,
+                 vec: Optional[np.ndarray] = None) -> list[CommPhase]:
     """Phase sequence for ONE replica group of one collective.
 
     The group-level heart of :func:`decompose`, also usable abstractly:
@@ -549,12 +680,18 @@ def group_phases(kind: str, payload: float, group, algorithm: str,
     the shared predicate refuses emits a
     :class:`HierarchicalFallbackWarning` (when ``warn``) and returns the
     flat-ring fallback every consumer then shares.
+
+    ``vec`` is an optional per-rank byte vector (positional over the
+    group); it is collapsed by :func:`effective_byte_vector` first, so a
+    uniform vector takes the scalar path bitwise with
+    ``payload = sum(vec)``.
     """
     members = np.asarray(group, dtype=np.intp)   # free if already ndarray
     n = int(members.size)
     if n <= 1:
         return []
-    s = float(payload)
+    vec = effective_byte_vector(kind, vec, n)
+    s = float(payload) if vec is None else float(vec.sum())
     arr = members[None, :]
     group = members.tolist() if topo is not None else members
     crosses = (topo.group_crosses_dcn(group) if topo is not None
@@ -568,8 +705,41 @@ def group_phases(kind: str, payload: float, group, algorithm: str,
                           bytes_per_rank=s, latency_hops=1.0,
                           structure="pairs", payload=s, stream=stream)]
 
+    if algorithm == "hierarchical" and crosses and kind in A2A_KINDS:
+        if topo is not None:
+            dec = a2a_decomposition(kind, group, topo)
+        else:
+            p0, m0 = _hier_split(n, pods or 1)
+            dec = None if p0 <= 1 else (
+                p0, m0, [list(group[i * m0:(i + 1) * m0])
+                         for i in range(p0)])
+        if dec is not None:
+            return _hierarchical_a2a_phases(kind, s, dec, vec, group,
+                                            stream)
+        if warn:
+            warn_fallback_once(
+                kind, n,
+                f"hierarchical {kind} over cross-pod group of {n} cannot "
+                "decompose (uneven pod split); scheduling a flat "
+                "all-to-all phase -- placement, billing and timing all "
+                "share this fallback", stacklevel=2)
+        return _flat_phases(kind, s, arr, algorithm, True, stream, vec=vec)
+
     if algorithm == "hierarchical" and crosses \
             and kind in HIERARCHICAL_KINDS:
+        if vec is not None:
+            # the ring-chain decomposition assumes equal shards; an
+            # irregular gather/scatter stays a flat vector ring
+            if warn:
+                warn_fallback_once(
+                    kind, n,
+                    f"irregular (per-rank vector) {kind} over cross-pod "
+                    f"group of {n} does not decompose hierarchically; "
+                    "scheduling a flat vector ring phase -- placement, "
+                    "billing and timing all share this fallback",
+                    stacklevel=2)
+            return _flat_phases(kind, s, arr, algorithm, True, stream,
+                                vec=vec)
         if topo is not None:
             dec = hierarchical_decomposition(kind, group, topo)
         else:
@@ -587,6 +757,11 @@ def group_phases(kind: str, payload: float, group, algorithm: str,
                 stacklevel=2)
         return _flat_phases(kind, s, arr, algorithm, True, stream)
 
+    if vec is not None:
+        # irregular ops skip the per-axis / tree decompositions (equal
+        # shards assumed there); the flat vector phase carries the skew
+        return _flat_phases(kind, s, arr, algorithm, crosses, stream,
+                            vec=vec)
     if not crosses and kind in AXIS_DECOMPOSABLE_KINDS \
             and algorithm != "tree":
         axes = axis_rings(group, topo)
@@ -646,6 +821,109 @@ def _hierarchical_phases(kind: str, s: float, dec,
     return phases
 
 
+def _hierarchical_a2a_phases(kind: str, s: float, dec,
+                             vec: Optional[np.ndarray], group,
+                             stream: int) -> list[CommPhase]:
+    """Two-tier all-to-all: intra-pod exchange, pod-slot DCN exchange,
+    intra-pod distribution.
+
+    Stage A is an all-to-all inside each pod that re-buckets every rank's
+    payload by destination pod (each rank keeps ``1/p`` of what it holds,
+    so it moves ``(m-1)/m`` of its ``S/p``-sized per-pod buckets); stage B
+    exchanges the re-bucketed data between same-slot ranks across pods
+    (``p``-way all-to-all of the ``S/m`` pod shard); stage C distributes
+    the received shards to their final in-pod destinations (same form as
+    stage A).  Per-rank total ``2(m-1)S/(p m^2) + (p-1)S/(p^2 m)``; DCN
+    carries exactly the flat placement's cross-pod share ``(p-1)/p * S``.
+
+    With a per-rank ``vec``, stages A/C move each rank's own injection
+    (``vec_i * (m-1)/m``) while stage B carries the **pod mean** -- stage
+    A load-balances the pod, so the DCN exchange of pod ``q`` is paced by
+    ``mean(vec over pod q)``: the hierarchical decomposition smooths
+    per-rank skew before it reaches the expensive tier.  Group totals
+    depend only on per-pod sums, so billing and placement agree with the
+    abstract (contiguous-chunk) split used by the Table-1 entries.
+    """
+    p, m, subs = dec
+    sub_arr = np.asarray(subs, dtype=np.intp)            # (p, m)
+    if vec is not None:
+        pos = {int(d): i for i, d in enumerate(group)}
+        vsub = np.asarray(
+            [[vec[pos[int(d)]] for d in sub] for sub in subs],
+            dtype=np.float64)                            # (p, m)
+        total = float(vec.sum())
+        bytes_a = vsub * (m - 1) / m
+        bytes_b = vsub.mean(axis=1) * (p - 1) / p        # (p,) positional
+        pay_a, pay_b = total / p, total / m
+    else:
+        bytes_a = (m - 1) * (s / p) / (m * m)
+        bytes_b = (p - 1) * (s / m) / (p * p)
+        pay_a, pay_b = s / p, s / m
+    cross = CommPhase(
+        kind=kind, tier="dcn", groups=sub_arr.T,         # (m, p) slots
+        bytes_per_rank=bytes_b, latency_hops=float(p - 1),
+        structure="a2a", payload=pay_b, axis="dcn", stream=stream)
+    if m <= 1:
+        return [cross]
+    intra = CommPhase(
+        kind=kind, tier="ici", groups=sub_arr,
+        bytes_per_rank=bytes_a, latency_hops=float(m - 1),
+        structure="a2a", payload=pay_a, stream=stream)
+    return [intra, cross, dataclasses.replace(intra)]
+
+
+def _pod_leaders(topo: MeshTopology) -> dict[int, int]:
+    """Lowest device id per pod: the DCN egress rank of the hierarchical
+    collective-permute relay."""
+    leaders: dict[int, int] = {}
+    for d in range(topo.num_devices):
+        pod = topo.pod_index(d)
+        if pod not in leaders:      # ids ascend, so first seen is the min
+            leaders[pod] = d
+    return leaders
+
+
+def _permute_relay_phases(pairs: np.ndarray, pair_pods: np.ndarray,
+                          per_edge: float, topo: MeshTopology,
+                          stream: int) -> list[CommPhase]:
+    """Pod-leader relay for cross-pod permute pairs under hierarchical.
+
+    Instead of every cross-pod pair occupying its own DCN uplink, traffic
+    funnels through pod leaders: source -> its pod leader (ICI), leader ->
+    destination pod's leader (one aggregated DCN exchange per pod pair),
+    leader -> destination (ICI).  The three hops serialize on one stream;
+    ``pair_bytes`` carries the aggregated per-pair amounts and each
+    phase's ``bytes_per_rank`` is the busiest source's total (the
+    straggler timing charges).  Hops whose source already is the leader
+    (or whose destination is) are elided rather than billed at zero.
+    """
+    leaders = _pod_leaders(topo)
+    hops: list[dict[tuple[int, int], float]] = [{}, {}, {}]
+    for (a, b), (pa, pb) in zip(pairs.tolist(), pair_pods.tolist()):
+        la, lb = leaders[pa], leaders[pb]
+        if a != la:
+            hops[0][(a, la)] = hops[0].get((a, la), 0.0) + per_edge
+        hops[1][(la, lb)] = hops[1].get((la, lb), 0.0) + per_edge
+        if b != lb:
+            hops[2][(lb, b)] = hops[2].get((lb, b), 0.0) + per_edge
+    out: list[CommPhase] = []
+    for tier, hop in zip(("ici", "dcn", "ici"), hops):
+        if not hop:
+            continue
+        p_arr = np.asarray(list(hop.keys()), dtype=np.intp)
+        b_arr = np.asarray(list(hop.values()), dtype=np.float64)
+        by_src: dict[int, float] = {}
+        for (src, _), b in hop.items():
+            by_src[src] = by_src.get(src, 0.0) + b
+        out.append(CommPhase(
+            kind="collective-permute", tier=tier, groups=None,
+            bytes_per_rank=float(max(by_src.values())),
+            latency_hops=1.0, structure="pairs", payload=per_edge,
+            axis="dcn" if tier == "dcn" else "",
+            pairs=p_arr, pair_bytes=b_arr, stream=stream))
+    return out
+
+
 def decompose(op: CollectiveOp, algorithm: str = "ring",
               topo: Optional[MeshTopology] = None, *,
               warn: bool = True) -> CollectiveSchedule:
@@ -677,6 +955,21 @@ def decompose(op: CollectiveOp, algorithm: str = "ring",
                 cross = pods[:, 0] != pods[:, 1]
             else:
                 cross = np.zeros(len(pairs), dtype=bool)
+            if algorithm == "hierarchical" and cross.any():
+                # pod-leader relay for the cross-pod pairs; intra-pod
+                # pairs keep their own concurrent stream as before
+                if (~cross).any():
+                    phases.append(CommPhase(
+                        kind=op.kind, tier="ici", groups=None,
+                        bytes_per_rank=float(op.result_bytes),
+                        latency_hops=1.0, structure="pairs",
+                        payload=float(op.result_bytes) * op.num_groups,
+                        pairs=pairs[~cross], stream=0))
+                phases += _permute_relay_phases(
+                    pairs[cross], pods[cross],
+                    float(op.result_bytes) * op.num_groups, topo,
+                    stream=1)
+                return CollectiveSchedule(op.kind, algorithm, phases)
             for tier, mask, strm in (("ici", ~cross, 0),
                                      ("dcn", cross, 1)):
                 if mask.any():
@@ -689,18 +982,48 @@ def decompose(op: CollectiveOp, algorithm: str = "ring",
         return CollectiveSchedule(op.kind, algorithm, phases)
 
     s = float(op.payload_bytes)
+    vec = effective_byte_vector(op.kind, op.byte_vector(), op.group_size)
     stream = 0
     flat: dict[tuple[int, bool], list] = {}
     for group in op.replica_groups or []:
         n = len(group)
         if n <= 1:
             continue
+        gvec = vec if (vec is not None and vec.size == n) else None
         if topo is None:
             flat.setdefault((n, False), []).append(group)
             continue
         crosses = topo.group_crosses_dcn(group)
         if algorithm == "hierarchical" and crosses \
+                and op.kind in A2A_KINDS:
+            dec = a2a_decomposition(op.kind, group, topo)
+            if dec is not None:
+                phases += _hierarchical_a2a_phases(op.kind, s, dec, gvec,
+                                                   group, stream)
+                stream += 1
+                continue
+            if warn:
+                warn_fallback_once(
+                    op.kind, n,
+                    f"hierarchical {op.kind} over cross-pod group of {n} "
+                    "cannot decompose (uneven pod split); scheduling a "
+                    "flat all-to-all phase -- placement, billing and "
+                    "timing all share this fallback", stacklevel=1)
+            flat.setdefault((n, True), []).append(group)
+            continue
+        if algorithm == "hierarchical" and crosses \
                 and op.kind in HIERARCHICAL_KINDS:
+            if gvec is not None:
+                if warn:
+                    warn_fallback_once(
+                        op.kind, n,
+                        f"irregular (per-rank vector) {op.kind} over "
+                        f"cross-pod group of {n} does not decompose "
+                        "hierarchically; scheduling a flat vector ring "
+                        "phase -- placement, billing and timing all "
+                        "share this fallback", stacklevel=1)
+                flat.setdefault((n, True), []).append(group)
+                continue
             dec = hierarchical_decomposition(op.kind, group, topo)
             if dec is not None:
                 phases += _hierarchical_phases(op.kind, s, dec, topo,
@@ -716,7 +1039,8 @@ def decompose(op: CollectiveOp, algorithm: str = "ring",
                     "share this fallback", stacklevel=1)
             flat.setdefault((n, True), []).append(group)
             continue
-        if not crosses and op.kind in AXIS_DECOMPOSABLE_KINDS \
+        if gvec is None and not crosses \
+                and op.kind in AXIS_DECOMPOSABLE_KINDS \
                 and algorithm != "tree":
             axes = axis_rings(group, topo)
             if axes is not None:
@@ -726,7 +1050,9 @@ def decompose(op: CollectiveOp, algorithm: str = "ring",
         flat.setdefault((n, crosses), []).append(group)
     for (n, crosses), gs in flat.items():
         phases += _flat_phases(op.kind, s, np.asarray(gs, dtype=np.intp),
-                               algorithm, crosses, stream)
+                               algorithm, crosses, stream,
+                               vec=vec if (vec is not None
+                                           and vec.size == n) else None)
         stream += 1
     return CollectiveSchedule(op.kind, algorithm, phases)
 

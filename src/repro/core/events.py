@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 # Bytes per element for HLO dtype names.
 DTYPE_BYTES = {
     "pred": 1,
@@ -34,6 +36,17 @@ COLLECTIVE_KINDS = (
     "all-to-all",
     "collective-permute",
     "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+# Kinds whose payload may legitimately differ per rank (allgatherv-style
+# irregular collectives).  ``bytes_per_rank_vec`` on other kinds is ignored:
+# an all-reduce moves the full reduced tensor through every rank, so a
+# per-rank contribution vector has no wire meaning.
+VECTOR_KINDS = (
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
     "ragged-all-to-all",
 )
 
@@ -74,6 +87,15 @@ class CollectiveOp:
     phase: str = ""                      # session phase ("" = unphased/legacy)
     operand_names: list[str] = dataclasses.field(default_factory=list)
     use_global_device_ids: bool = False  # replica_groups hold global ids
+    # Optional per-rank byte vector (irregular collectives, schema v8).
+    # ``bytes_per_rank_vec[i]`` is the logical payload contribution (bytes)
+    # of group POSITION i, applied positionally to every replica group:
+    # the shard rank i contributes to an allgatherv, the chunk destined to
+    # rank i for a v-reduce-scatter, the total bytes rank i injects into a
+    # skewed all-to-all.  ``sum(vec)`` replaces ``payload_bytes``.  Kept as
+    # a plain float list (JSON-friendly, dataclasses.replace-friendly);
+    # consumers read the validated ndarray via :meth:`byte_vector`.
+    bytes_per_rank_vec: Optional[list] = None
 
     # ------------------------------------------------------------------
     # Byte accounting.  The compiled module is per-device: result shapes are
@@ -96,9 +118,37 @@ class CollectiveOp:
     def result_bytes(self) -> int:
         return sum(s.bytes for s in self.result_shapes)
 
+    def byte_vector(self) -> Optional[np.ndarray]:
+        """Validated per-rank byte vector, or None.
+
+        Returns the ``float64`` vector only when the op's kind is in
+        :data:`VECTOR_KINDS`, the vector's length matches the group size,
+        and every entry is finite and non-negative -- anything else is
+        silently treated as the regular (scalar) op, so a stale or
+        malformed vector can never corrupt downstream byte accounting.
+        """
+        if self.bytes_per_rank_vec is None or self.kind not in VECTOR_KINDS:
+            return None
+        v = np.asarray(self.bytes_per_rank_vec, dtype=np.float64)
+        if v.ndim != 1 or v.size != self.group_size or v.size < 2:
+            return None
+        if not np.all(np.isfinite(v)) or np.any(v < 0) or v.sum() <= 0:
+            return None
+        return v
+
+    def skew(self) -> float:
+        """Max/mean of the per-rank byte vector (1.0 for regular ops)."""
+        v = self.byte_vector()
+        if v is None:
+            return 1.0
+        return float(v.max() / v.mean())
+
     @property
-    def payload_bytes(self) -> int:
+    def payload_bytes(self) -> float:
         """Full logical payload S per group (bytes)."""
+        v = self.byte_vector()
+        if v is not None:
+            return float(v.sum())
         n = self.group_size
         if self.kind == "all-reduce":
             # result (local) == full reduced tensor
@@ -129,7 +179,7 @@ class CollectiveOp:
 
         return cost_models.wire_bytes_per_rank(
             self.kind, self.payload_bytes, self.group_size, algorithm,
-            pods=pods,
+            pods=pods, vec=self.byte_vector(),
         )
 
     def wire_bytes_total(self, algorithm: str = "ring",
@@ -148,7 +198,7 @@ class CollectiveOp:
                 * self.num_groups * self.weight
         return (cost_models.wire_bytes_group_total(
                     self.kind, self.payload_bytes, self.group_size,
-                    algorithm, pods=pods)
+                    algorithm, pods=pods, vec=self.byte_vector())
                 * self.num_groups * self.weight)
 
 

@@ -148,14 +148,19 @@ def matrix_table(mat, *, max_devices: int = 32) -> str:
 
 
 def _summary_table(summary: dict) -> str:
+    has_skew = any("max_skew" in summary[k] for k in summary)
+    skew_th = "<th>skew (max/mean)</th>" if has_skew else ""
     rows = ["<table class='sum'><tr><th>primitive</th><th>calls</th>"
-            "<th>payload</th><th>wire bytes</th></tr>"]
+            f"<th>payload</th><th>wire bytes</th>{skew_th}</tr>"]
     for kind in sorted(summary, key=lambda k: -summary[k].get("wire_bytes", 0)):
         r = summary[kind]
+        skew_td = (f"<td>{r.get('max_skew', 1.0):.2f}x</td>"
+                   if has_skew else "")
         rows.append(
             f"<tr><td>{html.escape(kind)}</td><td>{r.get('calls', 0):,}</td>"
             f"<td>{reporter.human_bytes(r.get('payload_bytes', 0))}</td>"
-            f"<td>{reporter.human_bytes(r.get('wire_bytes', 0))}</td></tr>")
+            f"<td>{reporter.human_bytes(r.get('wire_bytes', 0))}</td>"
+            f"{skew_td}</tr>")
     rows.append("</table>")
     return "\n".join(rows)
 

@@ -52,6 +52,8 @@ def _op_args(op, algorithm: str) -> dict:
     }
     if op.phase:
         args["phase"] = op.phase
+    if op.skew() > 1.0:
+        args["skew"] = round(op.skew(), 4)
     return args
 
 
@@ -175,7 +177,7 @@ def trace_events(report, *, pid: int = 1) -> list[dict]:
                     "args": {
                         "tier": ph.tier, "structure": ph.structure,
                         "axis": ph.axis, "hlo_name": op.name,
-                        "bytes_per_rank": float(ph.bytes_per_rank),
+                        "bytes_per_rank": float(ph.max_bytes_per_rank()),
                         "latency_hops": float(ph.latency_hops),
                     }})
             # concurrent streams restart from the op's base, so sort the

@@ -1,4 +1,4 @@
-"""Lossless CommReport <-> plain-dict serialization (schema ``v6``).
+"""Lossless CommReport <-> plain-dict serialization (schema ``v8``).
 
 This is the substrate for everything under :mod:`repro.core.export`: the JSON
 exporter writes the dict verbatim, the on-disk report cache
@@ -64,6 +64,14 @@ sections, persisted findings ARE restored on load
 (``report._lint_findings``): the HLO def-use rules need the module text,
 so a file saved without ``hlo_gz`` could not reproduce them from the op
 list alone.
+
+Schema **v8** adds irregular collectives: the *optional* per-op
+``bytes_per_rank_vec`` key (a list of floats, one entry per group
+position, for allgatherv-style / skewed-MoE ops whose ranks contribute
+unequal bytes).  Ops without the key load with ``bytes_per_rank_vec=None``
+-- the scalar path -- so every v1...v7 file reads back unchanged, and a
+v8 file whose ops are all regular is byte-identical to v7 apart from the
+schema string.
 """
 from __future__ import annotations
 
@@ -79,15 +87,16 @@ from ..events import (CollectiveOp, HostTransfer, PhaseRecord, Shape,
 from ..sparse import SparseCommMatrix, is_sparse
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v7"
+SCHEMA = "repro.comm_report.v8"
+SCHEMA_V7 = "repro.comm_report.v7"
 SCHEMA_V6 = "repro.comm_report.v6"
 SCHEMA_V5 = "repro.comm_report.v5"
 SCHEMA_V4 = "repro.comm_report.v4"
 SCHEMA_V3 = "repro.comm_report.v3"
 SCHEMA_V2 = "repro.comm_report.v2"
 SCHEMA_V1 = "repro.comm_report.v1"
-ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V6, SCHEMA_V5, SCHEMA_V4, SCHEMA_V3,
-                    SCHEMA_V2, SCHEMA_V1)
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V7, SCHEMA_V6, SCHEMA_V5, SCHEMA_V4,
+                    SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +111,7 @@ def shape_from_dict(d: dict) -> Shape:
 
 
 def op_to_dict(op: CollectiveOp) -> dict:
-    return {
+    d = {
         "kind": op.kind,
         "name": op.name,
         "result_shapes": [shape_to_dict(s) for s in op.result_shapes],
@@ -121,6 +130,10 @@ def op_to_dict(op: CollectiveOp) -> dict:
         "group_size": op.group_size,
         "num_groups": op.num_groups,
     }
+    # schema v8: irregular ops only -- regular ops keep the v7 spelling
+    if op.bytes_per_rank_vec is not None:
+        d["bytes_per_rank_vec"] = [float(x) for x in op.bytes_per_rank_vec]
+    return d
 
 
 def op_from_dict(d: dict) -> CollectiveOp:
@@ -137,6 +150,9 @@ def op_from_dict(d: dict) -> CollectiveOp:
         phase=d.get("phase", ""),
         operand_names=list(d.get("operand_names", [])),
         use_global_device_ids=bool(d.get("use_global_device_ids", False)),
+        bytes_per_rank_vec=(list(d["bytes_per_rank_vec"])
+                            if d.get("bytes_per_rank_vec") is not None
+                            else None),
     )
 
 
@@ -339,7 +355,7 @@ def _lint_section(report, include_lint: bool) -> dict:
 def report_to_dict(report, *, include_hlo: bool = False,
                    include_schedules: bool = False,
                    include_lint: bool = False) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v7``)."""
+    """``CommReport`` -> JSON-serializable dict (schema ``v8``)."""
     return {
         "schema": SCHEMA,
         **_link_section(report),
@@ -369,7 +385,7 @@ def report_to_dict(report, *, include_hlo: bool = False,
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1`` ... ``v7``) -> ``CommReport``.
+    """Dict (schema ``v1`` ... ``v8``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
     needed for matrices, tables, exports and cost models; the live

@@ -104,6 +104,25 @@ _CHANNEL_RE = re.compile(r"channel_id=(\d+)")
 _GLOBAL_IDS_RE = re.compile(r"use_global_device_ids=true")
 _DIMS_RE = re.compile(r"dimensions=\{([0-9,]*)\}")
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+# Per-rank byte vector riding in frontend_attributes (irregular
+# collectives: allgatherv / skewed MoE all-to-all).  Runtimes that know the
+# true per-rank sizes stamp them as a comma-separated list, e.g.
+# ``frontend_attributes={repro.bytes_per_rank_vec="4096,1024,1024,1024"}``.
+_VEC_RE = re.compile(r'repro\.bytes_per_rank_vec="([0-9eE+\-.,\s]+)"')
+
+
+def _parse_byte_vector(line: str):
+    """``bytes_per_rank_vec`` list from a frontend attribute, or ``None``
+    (malformed vectors are dropped here; length/kind validation happens in
+    :meth:`~repro.core.events.CollectiveOp.byte_vector`)."""
+    m = _VEC_RE.search(line)
+    if not m:
+        return None
+    try:
+        vec = [float(x) for x in m.group(1).split(",") if x.strip()]
+    except ValueError:
+        return None
+    return vec or None
 
 
 # ----------------------------------------------------------------------------
@@ -228,6 +247,7 @@ def parse_hlo_collectives(hlo_text: str) -> list[CollectiveOp]:
                 op_name=om.group(1) if om else "",
                 operand_names=operands,
                 use_global_device_ids=bool(_GLOBAL_IDS_RE.search(line)),
+                bytes_per_rank_vec=_parse_byte_vector(line),
             )
         )
     return ops
@@ -244,14 +264,24 @@ def _op_wire_bytes(op: CollectiveOp, algorithm: str, topo) -> float:
     straddle pods."""
     from . import cost_models
 
-    if topo is None or not op.replica_groups \
-            or op.kind == "collective-permute":
+    if op.kind == "collective-permute":
+        if algorithm == "hierarchical" and topo is not None \
+                and topo.num_pods > 1 and op.source_target_pairs:
+            # the pod-leader relay adds ICI hops the flat pair count
+            # misses; read the total off the same schedule the matrix
+            # places so summary == matrix
+            from . import decompose as _dec
+            return _dec.decompose(op, algorithm, topo,
+                                  warn=False).total_bytes() * op.weight
+        return op.wire_bytes_total(algorithm)
+    if topo is None or not op.replica_groups:
         return op.wire_bytes_total(algorithm)
     total = 0.0
     for g in op.replica_groups:
         total += cost_models.wire_bytes_group_total(
             op.kind, op.payload_bytes, len(g), algorithm,
-            pods=cost_models.effective_pods(op.kind, g, topo))
+            pods=cost_models.effective_pods(op.kind, g, topo),
+            vec=op.byte_vector())
     return total * op.weight
 
 
@@ -273,6 +303,12 @@ def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring",
         row["calls"] += int(op.weight)
         row["payload_bytes"] += int(op.payload_bytes * op.num_groups * op.weight)
         row["wire_bytes"] += _op_wire_bytes(op, algorithm, topo)
+        skew = op.skew()
+        if skew > 1.0:
+            # irregular ops surface their worst max/mean per-rank skew
+            # (absent for regular kinds, so fixed-column consumers keep
+            # their layout)
+            row["max_skew"] = max(row.get("max_skew", 1.0), skew)
     return table
 
 

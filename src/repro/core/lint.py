@@ -20,6 +20,7 @@ allgather-then-slice  warn      all-gather consumed only through slices
 redundant-collective  error     identical collective executed twice, same operands
 dcn-permute           warn      DCN-crossing permute with a pod-local device order
 wire-dtype-waste      warn      f32 on the wire inside a bf16 producer/consumer
+skewed-a2a            warn      irregular all-to-all with a >2x hot rank (straggler)
 ====================  ========  ==================================================
 
 Entry points: :func:`lint_ops` (module-level),
@@ -634,6 +635,64 @@ def _rule_wire_dtype_waste(ctx: LintContext) -> list[LintFinding]:
 
 
 # ---------------------------------------------------------------------------
+# Rule 7: skewed all-to-all (hot-rank straggler).
+# ---------------------------------------------------------------------------
+_SKEW_THRESHOLD = 2.0
+_A2A_LINT_KINDS = ("all-to-all", "ragged-all-to-all")
+
+
+def _rule_skewed_a2a(ctx: LintContext) -> list[LintFinding]:
+    """An irregular all-to-all whose max per-rank bytes exceed twice the
+    mean is straggler-bound: every phase completes when its hottest rank
+    does, so the collective runs at the hot rank's time while the other
+    ranks idle.  Priced as the op's current (max-billed) modeled time
+    minus the same op with its bytes rebalanced to the mean -- i.e. the
+    time a load-balanced routing (capacity-factor cap, expert replication,
+    or re-sharding the hot expert) would achieve with the same total
+    payload."""
+    if ctx.topo is None:
+        return []
+    findings = []
+    for op in ctx.ops:
+        if op.kind not in _A2A_LINT_KINDS:
+            continue
+        skew = op.skew()
+        if skew <= _SKEW_THRESHOLD:
+            continue
+        vec = op.byte_vector()
+        if vec is None:
+            continue
+        n = int(vec.size)
+        w = max(1.0, op.weight)
+        current = ctx.op_time(op) * w
+        balanced = dataclasses.replace(
+            op, bytes_per_rank_vec=[float(vec.sum()) / n] * n)
+        savings, current = _clamp(current - ctx.op_time(balanced) * w,
+                                  current)
+        if savings <= 0.0:
+            continue
+        dcn_saved = max(0.0, (ctx.dcn_bytes(op)
+                              - ctx.dcn_bytes(balanced)) * w)
+        hot = int(np.argmax(vec))
+        findings.append(LintFinding(
+            rule_id="skewed-a2a", severity="warn",
+            op_names=[op.name], phase=op.phase,
+            message=(f"{op.kind} over {op.group_size} ranks is "
+                     f"{skew:.2f}x skewed (rank {hot} sends "
+                     f"{float(vec[hot]):.0f} B vs {float(vec.mean()):.0f} B "
+                     "mean): the schedule completes at the hot rank's "
+                     "pace while the rest idle"),
+            est_savings_s=savings, est_dcn_bytes_saved=dcn_saved,
+            est_current_s=current,
+            suggested_fix=("rebalance the routing (capacity-factor cap, "
+                           "replicate the hot expert, or re-shard it "
+                           "across ranks) so per-rank bytes approach the "
+                           "mean"),
+        ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # Registry and entry point.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -665,6 +724,9 @@ RULES: tuple[LintRule, ...] = (
     LintRule("wire-dtype-waste", "warn",
              "f32 on the wire inside a bf16 producer/consumer chain",
              _rule_wire_dtype_waste),
+    LintRule("skewed-a2a", "warn",
+             "irregular all-to-all with a >2x hot rank (straggler-bound)",
+             _rule_skewed_a2a),
 )
 
 

@@ -363,6 +363,7 @@ def monitor_fn(
     algorithm: str = "ring",
     host_transfers: Optional[list[HostTransfer]] = None,
     sparse: Optional[bool] = None,
+    op_transform=None,
     **kwargs,
 ) -> CommReport:
     """Monitor one function end-to-end: a single-capture, single-phase
@@ -399,7 +400,8 @@ def monitor_fn(
             fn, *args, name=name,
             in_shardings=in_shardings, out_shardings=out_shardings,
             donate_argnums=donate_argnums, static_argnums=static_argnums,
-            host_transfers=host_transfers, **kwargs)
+            host_transfers=host_transfers, op_transform=op_transform,
+            **kwargs)
     return session.report()
 
 

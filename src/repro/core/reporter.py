@@ -47,17 +47,25 @@ def format_table(rows: list[list[str]], header: list[str]) -> str:
 # paper Table 2/3 — primitive usage analysis
 # ---------------------------------------------------------------------------
 def primitive_usage_table(summary: dict, title: str = "") -> str:
-    """``summary`` maps primitive name -> {calls, payload_bytes[, wire_bytes]}."""
+    """``summary`` maps primitive name -> {calls, payload_bytes[,
+    wire_bytes][, max_skew]}.  ``max_skew`` (worst max/mean per-rank byte
+    ratio of any irregular op of that kind) adds a Skew column only when
+    some row carries it, so regular captures keep the classic layout."""
+    has_skew = any("max_skew" in summary[k] for k in summary)
     rows = []
     for name in sorted(summary, key=lambda k: -summary[k].get("payload_bytes", 0)):
         row = summary[name]
         cells = [name, f"{row['calls']:,}", human_bytes(row.get("payload_bytes", 0))]
         if "wire_bytes" in row:
             cells.append(human_bytes(row["wire_bytes"]))
+        if has_skew:
+            cells.append(f"{row.get('max_skew', 1.0):.2f}x")
         rows.append(cells)
     header = ["Communication Type", "Number of Calls", "Total Size"]
-    if rows and len(rows[0]) == 4:
+    if rows and len(rows[0]) >= 4 + has_skew:
         header.append("Wire Bytes")
+    if has_skew:
+        header.append("Skew (max/mean)")
     out = format_table(rows, header)
     if title:
         out = f"== {title} ==\n{out}"

@@ -174,6 +174,7 @@ class MonitorSession:
         donate_argnums=(),
         static_argnums=(),
         host_transfers: Optional[Iterable[HostTransfer]] = None,
+        op_transform=None,
         **kwargs,
     ) -> Capture:
         """Monitor one function: trace (intercepted) + compile + parse.
@@ -183,6 +184,13 @@ class MonitorSession:
         memory is allocated).  The parsed ops and traced events are tagged
         with ``phase`` (default: the innermost active :meth:`phase`, else
         ``"main"``) and accumulated into the session.
+
+        ``op_transform`` (``CollectiveOp -> CollectiveOp``, optional) is
+        applied to every parsed op before it is accumulated -- the hook
+        captured runtime knowledge the HLO cannot carry, e.g. injecting a
+        measured per-rank byte vector (``bytes_per_rank_vec``) onto an
+        all-to-all whose expert routing is skewed.  Returning the op
+        unchanged is fine; returning ``None`` keeps the original.
         """
         phase_name = phase or self.current_phase
         rec = self._phase_record(phase_name)
@@ -208,6 +216,8 @@ class MonitorSession:
         hlo_text = compiled.as_text()
         # loop-aware extraction: ops inside while bodies carry trip weights
         ops = hlo_cost.analyze_hlo(hlo_text).collectives
+        if op_transform is not None:
+            ops = [op_transform(op) or op for op in ops]
         for op in ops:
             op.phase = phase_name
         events = list(icpt.events)

@@ -22,7 +22,16 @@ Projection rule (documented convention, pinned by tests):
   (:data:`POD_DEVICES`) -- fleet-scale a2a is pod-local in practice, and
   an unsplit 16k-wide a2a would place ``n^2`` edges;
 * result shapes (and hence per-primitive payload semantics) are held
-  constant: per-device tensor shards do not change as the job scales out.
+  constant: per-device tensor shards do not change as the job scales out;
+* an *irregular* op (``bytes_per_rank_vec``) expands its vector with the
+  group -- each base entry tiles over its clone block and renormalizes by
+  the factor (``repeat(vec, F) / F``), so the group total is preserved
+  and a uniform vector stays the scalar path's equal shares.  When an
+  irregular a2a splits into pod chunks, each chunk op carries its own
+  *slice* of the expanded vector scaled by the chunk count (the same
+  convention that keeps every scalar chunk's payload at the base
+  payload), so the hot-expert pod stays hot instead of being flattened
+  to the group mean.
 
 Topologies come from :meth:`repro.core.topology.MeshTopology.fleet`:
 2D torus pods of ``16 x 16`` joined by a DCN ``pod`` axis.
@@ -32,6 +41,8 @@ from __future__ import annotations
 import dataclasses
 import time
 from typing import Callable, Iterable, Optional
+
+import numpy as np
 
 from repro.core.events import CollectiveOp
 from repro.core.reporter import format_table, human_bytes
@@ -58,17 +69,54 @@ def _chunk(group: list[int], size: int) -> list[list[int]]:
     return [group[i:i + size] for i in range(0, len(group), size)]
 
 
+def _scale_vec(op: CollectiveOp, factor: int):
+    """Expanded per-rank byte vector (``repeat(vec, F) / F``), or ``None``
+    for regular ops.  Tiling preserves each base rank's *share* across its
+    clone block; dividing by the factor keeps the group total constant,
+    so a uniform vector expands to the scalar path's equal shares."""
+    vec = op.byte_vector()
+    if vec is None:
+        return None
+    return np.repeat(vec, factor) / factor
+
+
 def scale_op(op: CollectiveOp, factor: int) -> CollectiveOp:
-    """Project ONE op onto a fleet ``factor`` times the base device count."""
+    """Project ONE op onto a fleet ``factor`` times the base device count.
+
+    Returns a *list* of ops in exactly one case: an irregular a2a whose
+    scaled group splits into multiple pod chunks -- the chunks carry
+    different slices of the expanded byte vector, so they cannot share
+    one op record.  Every other op (including ``factor == 1``, which is
+    the identity) comes back as a single op.
+    """
     if factor == 1:
         return op
     if op.kind == "collective-permute":
         return dataclasses.replace(op, source_target_pairs=[
             (s * factor, t * factor) for s, t in op.source_target_pairs])
     groups = [_scale_group(list(g), factor) for g in op.replica_groups]
+    vec = _scale_vec(op, factor)
     if op.kind in _A2A_KINDS:
-        groups = [c for g in groups for c in _chunk(g, POD_DEVICES)]
-    return dataclasses.replace(op, replica_groups=groups)
+        per_group = [_chunk(g, POD_DEVICES) for g in groups]
+        n_chunks = len(per_group[0]) if per_group else 1
+        if vec is not None and n_chunks > 1:
+            # one op per chunk index: chunk j of every group spans the
+            # same positional slice of the expanded vector.  Each slice is
+            # scaled by the chunk count -- the irregular twin of scalar
+            # chunking, where every chunk op keeps the full base payload.
+            out = []
+            for j in range(n_chunks):
+                sl = vec[j * POD_DEVICES:(j + 1) * POD_DEVICES] * n_chunks
+                out.append(dataclasses.replace(
+                    op,
+                    replica_groups=[ch[j] for ch in per_group],
+                    bytes_per_rank_vec=[float(x) for x in sl]))
+            return out
+        groups = [c for chunks in per_group for c in chunks]
+    rep = {"replica_groups": groups}
+    if vec is not None:
+        rep["bytes_per_rank_vec"] = [float(x) for x in vec]
+    return dataclasses.replace(op, **rep)
 
 
 def scale_ops(ops: Iterable[CollectiveOp], base_devices: int,
@@ -80,7 +128,14 @@ def scale_ops(ops: Iterable[CollectiveOp], base_devices: int,
             f"fleet size {num_devices} must be a multiple of the base "
             f"mesh's {base_devices} devices")
     factor = num_devices // base_devices
-    return [scale_op(op, factor) for op in ops]
+    out: list[CollectiveOp] = []
+    for op in ops:
+        scaled = scale_op(op, factor)
+        if isinstance(scaled, list):
+            out.extend(scaled)
+        else:
+            out.append(scaled)
+    return out
 
 
 @dataclasses.dataclass

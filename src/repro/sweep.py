@@ -248,6 +248,72 @@ def _build_serve(mesh):
     ]}
 
 
+def _build_moe_skew(mesh):
+    """Skewed MoE dispatch/combine: expert-parallel ``all_to_all`` with an
+    irregular per-rank byte vector.
+
+    The einsum MoE block (:mod:`repro.models.moe`) dispatches via matmuls
+    and emits no all-to-all, so this cell uses the NCCL-style formulation
+    instead: ``shard_map`` over the data axis, one expert per rank, one
+    ``jax.lax.all_to_all`` to dispatch token buffers to their experts and
+    one to combine the results back.  Expert capacity comes from the MoE
+    block's own :func:`~repro.models.moe.group_capacity`.
+
+    Static HLO cannot know the routing, so the cell injects the measured
+    skew through the capture's ``op_transform`` hook: expert 0 is hot,
+    handling 60% of all tokens, and every a2a gets a per-rank byte vector
+    (``bytes_per_rank_vec``) with 60% of the bytes on rank 0 -- the hot
+    row in the comm-matrix heatmap, the straggler in the timed schedule,
+    and the ``skewed-a2a`` lint finding.
+    """
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.models.common import ModelConfig
+    from repro.models.moe import group_capacity
+
+    n = _data_axis_size(mesh)
+    d, f = 128, 256
+    cfg = ModelConfig(name="moe_skew", family="moe", n_layers=1, d_model=d,
+                      n_heads=4, n_kv_heads=4, d_ff=f, vocab_size=256,
+                      n_experts=n, top_k=1)
+    cap = group_capacity(cfg, group=n * 32)   # tokens per (src, expert) slot
+
+    def step(tokens, wi, wo):
+        # tokens local: (n, cap, d) -- row e holds the tokens this rank
+        # routes to expert e (capacity-padded dense dispatch buffers)
+        recv = jax.lax.all_to_all(tokens, "data", 0, 0)           # dispatch
+        h = jax.nn.silu(recv.reshape(n * cap, d) @ wi) @ wo       # expert MLP
+        back = jax.lax.all_to_all(h.reshape(n, cap, d), "data", 0, 0)
+        return back                                               # combine
+
+    prog = shard_map(step, mesh=mesh,
+                     in_specs=(P("data"), P(), P()),
+                     out_specs=P("data"), check_vma=False)
+    f32 = jnp.float32
+    args = (jax.ShapeDtypeStruct((n * n, cap, d), f32),
+            jax.ShapeDtypeStruct((d, f), f32),
+            jax.ShapeDtypeStruct((f, d), f32))
+
+    hot_frac = 0.6
+
+    def hot_expert(op):
+        if op.kind not in ("all-to-all", "ragged-all-to-all"):
+            return op
+        m = op.group_size
+        if m < 2:
+            return op
+        total = float(op.payload_bytes)
+        vec = [total * (1.0 - hot_frac) / (m - 1)] * m
+        vec[0] = total * hot_frac
+        return dc.replace(op, bytes_per_rank_vec=vec)
+
+    return {"fn": prog, "args": args, "op_transform": hot_expert}
+
+
 def _arch_builder(arch: str):
     """Reduced-scale train step for one :mod:`repro.configs` architecture,
     sharded by the production Sharder over the given mesh (needs data+model
@@ -302,6 +368,10 @@ def _registry() -> dict[str, SweepSpec]:
         SweepSpec("serve", "prefill/decode serve cells: one multi-phase "
                   "session per cell (qwen3_8b reduced; use --by-phase)",
                   "v1:qwen3,prompt=32,max=48", _build_serve),
+        SweepSpec("moe-skew", "skewed MoE expert dispatch: expert-parallel "
+                  "all-to-all with a 60%-hot expert 0 (irregular per-rank "
+                  "byte vectors via op_transform)",
+                  "v1:d=128,hot=0.6,topk=1", _build_moe_skew),
     ]
     for arch in _configs.ARCH_IDS:
         specs.append(SweepSpec(
@@ -325,6 +395,7 @@ def _monitor_cell(built: dict, mesh, name: str, algorithm: str):
         return monitor_fn(
             built["fn"], *built.get("args", ()),
             mesh=mesh, name=name, algorithm=algorithm,
+            op_transform=built.get("op_transform"),
             **built.get("kwargs", {}))
     from repro.core import MonitorSession
 
@@ -333,6 +404,8 @@ def _monitor_cell(built: dict, mesh, name: str, algorithm: str):
             with sess.phase(cap["phase"]):
                 sess.capture(cap["fn"], *cap.get("args", ()),
                              name=cap.get("name"),
+                             op_transform=cap.get("op_transform",
+                                                  built.get("op_transform")),
                              **cap.get("kwargs", {}))
     return sess.report()
 

@@ -141,11 +141,23 @@ class TestVectorizedBuilder:
         # path must reproduce the legacy loop byte-for-byte
         topo = MeshTopology(axis_names=("pod", "data"), axis_sizes=(2, 4))
         for t in (None, topo):
+            check_ops = ops
+            if t is not None and algorithm == "hierarchical":
+                # hierarchical a2a / cross-pod permute on a multi-pod
+                # topology now genuinely decompose (intra-pod a2a +
+                # pod-leader DCN exchange; leader relay); the legacy loop
+                # keeps the flat placement -- the new paths' conservation
+                # laws are pinned in test_decompose /
+                # test_link_consistency instead
+                check_ops = [op for op in ops if op.kind not in
+                             ("all-to-all", "ragged-all-to-all",
+                              "collective-permute")]
             with warnings.catch_warnings():
                 warnings.simplefilter("ignore")
-                vec = comm_matrix.matrix_for_ops(ops, 8, algorithm, topo=t)
+                vec = comm_matrix.matrix_for_ops(check_ops, 8, algorithm,
+                                                 topo=t)
                 ref = comm_matrix.matrix_for_ops_reference(
-                    ops, 8, algorithm, topo=t)
+                    check_ops, 8, algorithm, topo=t)
             np.testing.assert_allclose(vec, ref, rtol=1e-12)
 
     @given(ops=op_streams(),

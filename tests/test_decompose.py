@@ -71,6 +71,24 @@ class TestScheduleEqualsLegacyOnSingleAxis:
             new = comm_matrix.matrix_for_ops([op], nd, algorithm, topo=topo)
             ref = comm_matrix.matrix_for_ops_reference([op], nd, algorithm,
                                                        topo=topo)
+        if kind == "all-to-all" and algorithm == "hierarchical" \
+                and topo is PODS_1AXIS:
+            # hierarchical a2a now decomposes (the oracle keeps the flat
+            # placement): same DCN share as flat, plus the two intra-pod
+            # exchange stages; totals match the hierarchical billing.
+            s, p = float(op.payload_bytes), 2
+            dcn = sum(new[i + 1, j + 1] for i in range(nd)
+                      for j in range(nd)
+                      if topo.pod_index(i) != topo.pod_index(j))
+            ref_dcn = sum(ref[i + 1, j + 1] for i in range(nd)
+                          for j in range(nd)
+                          if topo.pod_index(i) != topo.pod_index(j))
+            assert dcn == pytest.approx(ref_dcn)
+            assert dcn == pytest.approx((p - 1) / p * s * op.weight)
+            assert new[1:, 1:].sum() == pytest.approx(
+                cost_models.wire_bytes_group_total(
+                    kind, s, nd, algorithm, pods=p) * op.weight)
+            return
         np.testing.assert_allclose(new, ref, rtol=1e-12)
 
     @pytest.mark.parametrize("kind", KINDS + ("collective-permute",
@@ -85,7 +103,13 @@ class TestScheduleEqualsLegacyOnSingleAxis:
                                                 pods=pods)
             p, m = (pods, n // pods) if n % pods == 0 else (1, n)
             if kind == "all-to-all":
-                exp = (n - 1) * s / (n * n)
+                if algorithm == "hierarchical" and p > 1:
+                    # two intra-pod exchange stages + the pod-slot DCN
+                    # exchange of the S/m pod shard
+                    exp = 2.0 * (m - 1) * s / (p * m * m) \
+                        + (p - 1) * s / (p * p * m)
+                else:
+                    exp = (n - 1) * s / (n * n)
             elif kind in ("collective-permute", "mystery-kind"):
                 exp = s
             elif kind == "all-reduce":
@@ -383,7 +407,7 @@ class TestScheduleSerialization:
         p = str(tmp_path / "s.json")
         rep.save(p, include_schedules=True)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v7"
+        assert d["schema"] == "repro.comm_report.v8"
         assert len(d["schedules"]) == 1
         assert {ph["tier"] for ph in d["schedules"][0]["phases"]} == \
             {"ici", "dcn"}

@@ -110,7 +110,7 @@ class TestSchemaSections:
         p = str(tmp_path / "v6.json")
         report.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v7"
+        assert d["schema"] == "repro.comm_report.v8"
         assert len(d["link_matrix"]) == report.num_devices + 1
         assert d["links"], "per-link rows missing"
         for row in d["links"]:
@@ -148,7 +148,8 @@ class TestSchemaSections:
                                             "repro.comm_report.v3",
                                             "repro.comm_report.v4",
                                             "repro.comm_report.v5",
-                                            "repro.comm_report.v6"])
+                                            "repro.comm_report.v6",
+                                            "repro.comm_report.v7"])
     def test_old_file_loads_and_rederives_links(self, report, tmp_path,
                                                 old_schema):
         """Files written by previous schemas (no link/overlap/phase/
@@ -248,7 +249,7 @@ class TestSparseSerialization:
         p = str(tmp_path / "s.json")
         rep.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v7"
+        assert d["schema"] == "repro.comm_report.v8"
         assert d["matrix"]["format"] == "coo"
         assert len(d["matrix"]["src"]) == rep.matrix.nnz
         assert all(m["format"] == "coo"

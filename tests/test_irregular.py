@@ -1,0 +1,389 @@
+"""Irregular collectives: per-rank byte vectors through the schedule IR.
+
+The contract this module pins, end to end:
+
+* **uniform == scalar, bitwise** -- an op whose byte vector is uniform
+  collapses onto the scalar path at every entry point (decompose,
+  placement dense + sparse, billing, timing), so every regular capture is
+  unchanged by the vector plumbing (``==``, not ``allclose``);
+* **skewed vectors conserve bytes** -- matrix row sums equal the
+  schedule's per-device send totals, matrix total equals the billing
+  model's group total, and the straggler (max-billed) time is never below
+  the balanced time for the same total payload;
+* **schema v8 round-trips** the optional ``bytes_per_rank_vec`` key and
+  regular ops keep the v7 spelling (no key at all);
+* **malformed vectors degrade to scalar** -- wrong length, negative or
+  non-finite entries, or a non-vector kind never corrupt the accounting;
+* **fleet projection carries the vector** -- ``scale.scale_op`` tiles +
+  renormalizes instead of flattening to the mean, and irregular a2a pod
+  chunks each carry their own slice.
+
+A hypothesis-randomized sweep rides along when the optional [test] extra
+is installed; the deterministic seed grid below is the tier-1 guarantee.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import comm_matrix, cost_models, decompose as dec
+from repro.core.events import CollectiveOp, Shape
+from repro.core.export import serialize
+from repro.core.topology import MeshTopology
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    _HAVE_HYPOTHESIS = True
+except ImportError:            # tier-1 runs on a bare interpreter
+    _HAVE_HYPOTHESIS = False
+
+VEC_KINDS = ("all-gather", "reduce-scatter", "all-to-all")
+ALGORITHMS = ("ring", "tree", "hierarchical")
+
+ONE_AXIS = MeshTopology(axis_names=("data",), axis_sizes=(8,))
+PODS_1AXIS = MeshTopology(axis_names=("pod", "data"), axis_sizes=(2, 4))
+TOPOS = (None, ONE_AXIS, PODS_1AXIS)
+
+
+def mk_op(kind, elems, groups, vec=None, pairs=None, weight=1.0):
+    return CollectiveOp(
+        kind=kind, name="t", result_shapes=[Shape("f32", (elems,))],
+        replica_groups=groups, source_target_pairs=pairs or [],
+        weight=weight,
+        bytes_per_rank_vec=None if vec is None else [float(x) for x in vec])
+
+
+def skewed_vec(n, total, hot=0, frac=0.6):
+    v = np.full(n, total * (1.0 - frac) / (n - 1))
+    v[hot] = total * frac
+    return v
+
+
+def device_send_totals(op, algorithm, topo, num_devices):
+    """Per-device send bytes summed over the op's schedule phases."""
+    sched = dec.decompose(op, algorithm, topo, warn=False)
+    out = np.zeros(num_devices)
+    for ph in sched.phases:
+        if ph.pairs is not None:
+            amts = (ph.pair_bytes if ph.pair_bytes is not None
+                    else np.full(len(ph.pairs), ph.max_bytes_per_rank()))
+            for (s, _d), b in zip(ph.pairs.tolist(), amts.tolist()):
+                out[int(s)] += float(b)
+            continue
+        if ph.groups is None:
+            continue
+        bm = ph.byte_matrix()
+        for gi, g in enumerate(np.asarray(ph.groups).tolist()):
+            for pos, d in enumerate(g):
+                out[int(d)] += float(bm[gi, pos])
+    return out * op.weight
+
+
+# ---------------------------------------------------------------------------
+# uniform vector == scalar, bitwise
+# ---------------------------------------------------------------------------
+class TestUniformCollapsesToScalar:
+    """A uniform vector must take the scalar path *exactly*: same
+    schedules, same matrices (dense and sparse), same billed bytes, same
+    times -- compared with ``==``, never ``allclose``."""
+
+    @pytest.mark.parametrize("kind", VEC_KINDS)
+    @pytest.mark.parametrize("algorithm", ALGORITHMS)
+    @pytest.mark.parametrize("topo", TOPOS,
+                             ids=["none", "one_axis", "pods"])
+    @pytest.mark.parametrize("seed", range(3))
+    def test_matrix_bitwise(self, kind, algorithm, topo, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.choice([2, 4, 8]))
+        elems = int(rng.integers(1, 4096))
+        groups = [sorted(int(d) for d in g)
+                  for g in rng.permutation(8).reshape(-1, n)]
+        scalar = mk_op(kind, elems, groups,
+                       weight=float(rng.integers(1, 16)))
+        per = scalar.payload_bytes / n
+        uniform = dataclasses.replace(
+            scalar, bytes_per_rank_vec=[per] * n)
+        assert uniform.byte_vector() is not None
+        assert uniform.payload_bytes == scalar.payload_bytes
+        for sparse in (False, True):
+            ms = comm_matrix.matrix_for_ops([scalar], 8, algorithm,
+                                            topo=topo, sparse=sparse)
+            mu = comm_matrix.matrix_for_ops([uniform], 8, algorithm,
+                                            topo=topo, sparse=sparse)
+            if sparse:
+                ms, mu = ms.to_dense(), mu.to_dense()
+            assert (np.asarray(ms) == np.asarray(mu)).all()
+
+    @pytest.mark.parametrize("kind", VEC_KINDS)
+    @pytest.mark.parametrize("algorithm", ALGORITHMS)
+    def test_billing_and_timing_bitwise(self, kind, algorithm):
+        n, elems = 8, 1000
+        scalar = mk_op(kind, elems, [list(range(n))], weight=3.0)
+        uniform = dataclasses.replace(
+            scalar, bytes_per_rank_vec=[scalar.payload_bytes / n] * n)
+        assert uniform.wire_bytes_per_rank(algorithm) \
+            == scalar.wire_bytes_per_rank(algorithm)
+        assert uniform.wire_bytes_total(algorithm) \
+            == scalar.wire_bytes_total(algorithm)
+        for topo in (ONE_AXIS, PODS_1AXIS):
+            ss = dec.decompose(scalar, algorithm, topo, warn=False)
+            su = dec.decompose(uniform, algorithm, topo, warn=False)
+            assert ss.time_split(topo) == su.time_split(topo)
+            assert ss.total_bytes() == su.total_bytes()
+
+    if _HAVE_HYPOTHESIS:
+        @given(kind=st.sampled_from(VEC_KINDS),
+               algorithm=st.sampled_from(ALGORITHMS),
+               n=st.sampled_from([2, 4, 8]),
+               elems=st.integers(1, 1 << 14),
+               weight=st.integers(1, 64))
+        @settings(max_examples=60, deadline=None)
+        def test_matrix_bitwise_randomized(self, kind, algorithm, n,
+                                           elems, weight):
+            scalar = mk_op(kind, elems, [list(range(n))],
+                           weight=float(weight))
+            uniform = dataclasses.replace(
+                scalar,
+                bytes_per_rank_vec=[scalar.payload_bytes / n] * n)
+            for topo in TOPOS:
+                ms = comm_matrix.matrix_for_ops([scalar], 8, algorithm,
+                                                topo=topo)
+                mu = comm_matrix.matrix_for_ops([uniform], 8, algorithm,
+                                                topo=topo)
+                assert (ms == mu).all()
+
+
+# ---------------------------------------------------------------------------
+# skewed vectors: conservation + straggler laws
+# ---------------------------------------------------------------------------
+class TestSkewedVectors:
+    @pytest.mark.parametrize("kind", VEC_KINDS)
+    @pytest.mark.parametrize("topo", (None, ONE_AXIS),
+                             ids=["none", "one_axis"])
+    def test_row_sums_match_schedule(self, kind, topo):
+        n = 8
+        vec = skewed_vec(n, 81920.0, hot=2)
+        op = mk_op(kind, 100, [list(range(n))], vec=vec, weight=2.0)
+        mat = comm_matrix.matrix_for_ops([op], n, "ring", topo=topo)
+        np.testing.assert_allclose(
+            mat[1:, 1:].sum(axis=1),
+            device_send_totals(op, "ring", topo, n), rtol=1e-12)
+
+    @pytest.mark.parametrize("kind", VEC_KINDS)
+    def test_matrix_total_matches_billing(self, kind):
+        n = 4
+        vec = skewed_vec(n, 40960.0)
+        op = mk_op(kind, 100, [[0, 1, 2, 3], [4, 5, 6, 7]], vec=vec,
+                   weight=3.0)
+        mat = comm_matrix.matrix_for_ops([op], 8, "ring")
+        assert mat.sum() == pytest.approx(op.wire_bytes_total("ring"))
+        total = cost_models.wire_bytes_group_total(
+            kind, op.payload_bytes, n, "ring", vec=op.byte_vector())
+        assert mat.sum() == pytest.approx(total * op.num_groups * op.weight)
+
+    def test_sparse_matches_dense_skewed(self):
+        n = 8
+        ops = [mk_op(k, 500, [list(range(n))],
+                     vec=skewed_vec(n, 16000.0, hot=i % n), weight=2.0)
+               for i, k in enumerate(VEC_KINDS)]
+        dense = comm_matrix.matrix_for_ops(ops, n, "ring")
+        sp = comm_matrix.matrix_for_ops(ops, n, "ring", sparse=True)
+        np.testing.assert_allclose(sp.to_dense(), dense, rtol=1e-12)
+
+    def test_hot_rank_dominates_matrix_row(self):
+        n = 8
+        op = mk_op("all-to-all", 100, [list(range(n))],
+                   vec=skewed_vec(n, 81920.0, hot=3))
+        mat = comm_matrix.matrix_for_ops([op], n)[1:, 1:]
+        rows = mat.sum(axis=1)
+        assert rows[3] == rows.max()
+        assert rows[3] > 2.0 * np.delete(rows, 3).max()
+
+    @pytest.mark.parametrize("algorithm", ("ring", "hierarchical"))
+    def test_straggler_time_at_least_balanced(self, algorithm):
+        n = 8
+        total = 1 << 20
+        skewed = mk_op("all-to-all", 100, [list(range(n))],
+                       vec=skewed_vec(n, total))
+        balanced = dataclasses.replace(
+            skewed, bytes_per_rank_vec=[total / n] * n)
+        for topo in (ONE_AXIS, PODS_1AXIS):
+            ts = sum(dec.decompose(skewed, algorithm, topo,
+                                   warn=False).time_split(topo))
+            tb = sum(dec.decompose(balanced, algorithm, topo,
+                                   warn=False).time_split(topo))
+            assert ts >= tb > 0.0
+
+    def test_skew_property(self):
+        n = 8
+        op = mk_op("all-to-all", 100, [list(range(n))],
+                   vec=skewed_vec(n, 8000.0, frac=0.6))
+        assert op.skew() == pytest.approx(0.6 * n)
+        assert mk_op("all-to-all", 100, [list(range(n))]).skew() == 1.0
+
+    def test_hierarchical_kinds_fall_back_to_flat_vector(self):
+        """AG/RS vectors on a multi-pod group warn once and take the flat
+        vector path (bytes conserved), never the scalar hierarchical
+        schedule."""
+        n = 8
+        vec = skewed_vec(n, 81920.0)
+        op = mk_op("all-gather", 100, [list(range(n))], vec=vec)
+        sched = dec.decompose(op, "hierarchical", PODS_1AXIS, warn=False)
+        assert all(ph.structure == "ring" for ph in sched.phases)
+        dec.reset_fallback_warnings()
+        with pytest.warns(dec.HierarchicalFallbackWarning):
+            mat = comm_matrix.matrix_for_ops([op], n, "hierarchical",
+                                             topo=PODS_1AXIS)
+        np.testing.assert_allclose(
+            mat[1:, 1:].sum(axis=1),
+            device_send_totals(op, "hierarchical", PODS_1AXIS, n),
+            rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# malformed vectors degrade to scalar
+# ---------------------------------------------------------------------------
+class TestVectorValidation:
+    BASE = dict(kind="all-to-all", elems=100, groups=[[0, 1, 2, 3]])
+
+    def _scalar(self):
+        return mk_op(self.BASE["kind"], self.BASE["elems"],
+                     self.BASE["groups"])
+
+    @pytest.mark.parametrize("bad", [
+        [1.0, 2.0, 3.0],                    # wrong length
+        [1.0, 2.0, 3.0, -4.0],              # negative entry
+        [1.0, 2.0, 3.0, float("nan")],      # non-finite
+        [0.0, 0.0, 0.0, 0.0],               # zero sum
+    ], ids=["short", "negative", "nan", "zero-sum"])
+    def test_bad_vector_ignored(self, bad):
+        op = mk_op(**{k: v for k, v in self.BASE.items()}, vec=bad)
+        assert op.byte_vector() is None
+        assert op.payload_bytes == self._scalar().payload_bytes
+        ms = comm_matrix.matrix_for_ops([self._scalar()], 4)
+        mb = comm_matrix.matrix_for_ops([op], 4)
+        assert (ms == mb).all()
+
+    def test_non_vector_kind_ignored(self):
+        op = mk_op("all-reduce", 100, [[0, 1, 2, 3]],
+                   vec=[1.0, 2.0, 3.0, 4.0])
+        assert op.byte_vector() is None
+        assert op.skew() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# schema v8
+# ---------------------------------------------------------------------------
+class TestSchemaV8:
+    def test_schema_string(self):
+        assert serialize.SCHEMA == "repro.comm_report.v8"
+        assert serialize.SCHEMA_V7 in serialize.ACCEPTED_SCHEMAS
+
+    def test_op_round_trip_with_vector(self):
+        vec = [100.0, 200.0, 300.0, 400.0]
+        op = mk_op("all-to-all", 100, [[0, 1, 2, 3]], vec=vec, weight=7.0)
+        d = serialize.op_to_dict(op)
+        assert d["bytes_per_rank_vec"] == vec
+        back = serialize.op_from_dict(json.loads(json.dumps(d)))
+        assert back.bytes_per_rank_vec == vec
+        np.testing.assert_array_equal(back.byte_vector(), op.byte_vector())
+        assert back.skew() == op.skew()
+
+    def test_regular_op_keeps_v7_spelling(self):
+        op = mk_op("all-reduce", 100, [[0, 1]])
+        d = serialize.op_to_dict(op)
+        assert "bytes_per_rank_vec" not in d
+        assert serialize.op_from_dict(d).bytes_per_rank_vec is None
+
+    def test_v7_file_without_vectors_loads(self, tmp_path):
+        """A v7-tagged file (no vec keys anywhere) loads as scalar ops."""
+        op = mk_op("all-to-all", 64, [[0, 1, 2, 3]])
+        mat = comm_matrix.matrix_for_ops([op], 4)
+        d = {
+            "schema": "repro.comm_report.v7",
+            "name": "old", "num_devices": 4,
+            "summary": {}, "traced_summary": {},
+            "ops": [serialize.op_to_dict(op)],
+            "matrix": mat.tolist(), "per_primitive": {},
+        }
+        back = serialize.report_from_dict(d)
+        assert back.compiled_ops[0].bytes_per_rank_vec is None
+        np.testing.assert_allclose(np.asarray(back.matrix), mat)
+
+    def test_report_round_trip_preserves_vector(self, tmp_path):
+        from repro.core.monitor import CommReport
+        vec = skewed_vec(4, 4096.0)
+        op = mk_op("all-to-all", 100, [[0, 1, 2, 3]], vec=vec)
+        rep = CommReport(
+            name="irr", num_devices=4, traced=[], compiled_ops=[op],
+            traced_summary={}, compiled_summary={},
+            matrix=comm_matrix.matrix_for_ops([op], 4), per_primitive={},
+            cost={}, memory_stats=None, trace_seconds=0.0,
+            compile_seconds=0.0, topo=None, host_transfers=[])
+        p = str(tmp_path / "r.json")
+        rep.save(p)
+        d = json.loads(open(p).read())
+        assert d["schema"] == "repro.comm_report.v8"
+        back = CommReport.load(p)
+        got = back.compiled_ops[0]
+        np.testing.assert_array_equal(got.byte_vector(), vec)
+        np.testing.assert_allclose(np.asarray(back.matrix),
+                                   np.asarray(rep.matrix))
+
+
+# ---------------------------------------------------------------------------
+# fleet projection carries the vector
+# ---------------------------------------------------------------------------
+class TestScaleProjection:
+    def test_vector_expansion_preserves_total_and_uniformity(self):
+        from repro import scale
+        n, total = 4, 4096.0
+        op = mk_op("all-gather", 100, [list(range(n))],
+                   vec=skewed_vec(n, total))
+        out = scale.scale_op(op, 4)
+        v = out.byte_vector()
+        assert v is not None and v.size == n * 4
+        assert v.sum() == pytest.approx(total)
+        # each base rank's share tiles over its clone block
+        np.testing.assert_allclose(v.reshape(n, 4).sum(axis=1),
+                                   op.byte_vector())
+        # a uniform vector stays uniform (the scalar path after collapse)
+        uni = scale.scale_op(dataclasses.replace(
+            op, bytes_per_rank_vec=[total / n] * n), 4)
+        vu = uni.byte_vector()
+        assert vu is not None and float(vu.max()) == float(vu.min())
+
+    def test_irregular_a2a_chunks_carry_slices(self):
+        from repro import scale
+        n = 8
+        total = float(n * scale.POD_DEVICES)
+        vec = skewed_vec(n, total, hot=0)
+        op = mk_op("all-to-all", 100, [list(range(n))], vec=vec)
+        factor = 2 * scale.POD_DEVICES // n          # -> 2 pod chunks
+        out = scale.scale_op(op, factor)
+        assert isinstance(out, list) and len(out) == 2
+        for chunk in out:
+            assert chunk.group_size == scale.POD_DEVICES
+            assert chunk.byte_vector() is not None
+        # slices partition the expanded vector (x chunk-count renorm):
+        # the hot rank's clones land in chunk 0, so chunk 0 stays hot
+        s0 = out[0].byte_vector().sum()
+        s1 = out[1].byte_vector().sum()
+        assert s0 > s1
+        # totals follow the scalar chunking convention: each chunk op
+        # would carry the full base payload if balanced, so the two sum
+        # to 2x the base total with the skew split across chunks
+        assert s0 + s1 == pytest.approx(2.0 * total)
+        # scale_ops flattens the chunk list
+        flat = scale.scale_ops([op], n, n * factor)
+        assert len(flat) == 2
+
+    def test_scalar_path_unchanged(self):
+        from repro import scale
+        op = mk_op("all-to-all", 100, [list(range(8))])
+        assert scale.scale_op(op, 1) is op
+        out = scale.scale_op(op, 2 * scale.POD_DEVICES // 8)
+        assert not isinstance(out, list)
+        assert len(out.replica_groups) == 2

@@ -255,6 +255,96 @@ class TestHierarchicalPlacement:
             summary["all-reduce"]["wire_bytes"])
 
 
+class TestHierarchicalAllToAll:
+    """Hierarchical a2a (intra-pod exchange + pod-leader DCN relay) and the
+    cross-pod permute relay: byte conservation against the billing model,
+    with the DCN share pinned in closed form -- for scalar AND irregular
+    (per-rank vector) payloads."""
+
+    @pytest.mark.parametrize("topo_name", ["two_pod", "four_pod"])
+    @pytest.mark.parametrize("skewed", [False, True],
+                             ids=["scalar", "skewed-vec"])
+    def test_a2a_dcn_share_and_total(self, topo_name, skewed):
+        """DCN carries exactly (p-1)/p * S -- the bytes whose destination
+        lives in another pod -- regardless of how the per-rank vector
+        skews the sources; the matrix total equals the billing model's
+        group total."""
+        topo = TOPOLOGIES[topo_name]
+        p = topo.num_pods
+        op = mk_op("all-to-all", weight=2.0)
+        s = op.payload_bytes
+        if skewed:
+            op.bytes_per_rank_vec = [s * 0.6] + [s * 0.4 / 7] * 7
+        mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                         topo=topo)[1:, 1:]
+        cross = sum(mat[i, j] for i in range(8) for j in range(8)
+                    if topo.pod_index(i) != topo.pod_index(j))
+        assert cross == pytest.approx((p - 1) / p * s * op.weight)
+        total = cost_models.wire_bytes_group_total(
+            "all-to-all", s, 8, "hierarchical", pods=p,
+            vec=op.byte_vector())
+        assert mat.sum() == pytest.approx(total * op.weight)
+
+    @pytest.mark.parametrize("topo_name", ["two_pod", "four_pod"])
+    def test_a2a_dcn_edges_are_rank_aligned(self, topo_name):
+        """a2a is personalized: every byte must reach its pod either way,
+        so the decomposition cannot shrink the DCN *bytes* (they match the
+        flat placement's cross-pod total) -- what it buys is structure:
+        each rank exchanges only with its positional peer in every other
+        pod (p*(p-1)*m aligned flows), never with arbitrary remote
+        devices."""
+        topo = TOPOLOGIES[topo_name]
+        p = topo.num_pods
+        m = 8 // p
+        op = mk_op("all-to-all")
+        pods = topo.pod_partition(list(range(8)))
+        rank_of = {d: pod.index(d) for pod in pods for d in pod}
+
+        def cross(algorithm):
+            mat = comm_matrix.matrix_for_ops([op], 8, algorithm,
+                                             topo=topo)[1:, 1:]
+            return {(i, j): mat[i, j] for i in range(8) for j in range(8)
+                    if mat[i, j] > 0
+                    and topo.pod_index(i) != topo.pod_index(j)}
+
+        hier = cross("hierarchical")
+        assert sum(hier.values()) == pytest.approx(
+            sum(cross("ring").values()))
+        assert len(hier) == p * (p - 1) * m
+        for i, j in hier:
+            assert rank_of[i] == rank_of[j], (i, j)
+
+    def test_permute_relay_conserves_pair_bytes(self):
+        """A cross-pod permute pair relays src -> leader -> leader -> dst;
+        every hop carries the pair's full result bytes and intra-pod
+        pairs stay direct."""
+        op = CollectiveOp(
+            kind="collective-permute", name="t",
+            result_shapes=[Shape("f32", (256,))], replica_groups=[],
+            source_target_pairs=[(1, 7), (2, 3)], weight=2.0)
+        nb = op.payload_bytes * op.weight
+        mat = comm_matrix.matrix_for_ops([op], 8, "hierarchical",
+                                         topo=TWO_POD)[1:, 1:]
+        # intra-pod pair: one direct edge
+        assert mat[2, 3] == pytest.approx(nb)
+        # cross-pod pair 1 -> 7: src 1 -> leader 0 (ici), leader 0 ->
+        # leader 4 (dcn), leader 4 -> dst 7 (ici)
+        assert mat[1, 0] == pytest.approx(nb)
+        assert mat[0, 4] == pytest.approx(nb)
+        assert mat[4, 7] == pytest.approx(nb)
+        cross = sum(mat[i, j] for i in range(8) for j in range(8)
+                    if TWO_POD.pod_index(i) != TWO_POD.pod_index(j))
+        assert cross == pytest.approx(nb)      # exactly one DCN crossing
+        # and the DCN edges are ICI/DCN-pure, like every hierarchical kind
+        for i in range(8):
+            for j in range(8):
+                if mat[i, j] <= 0:
+                    continue
+                kinds = {l.kind for l in TWO_POD.route(i, j)}
+                cross_pair = TWO_POD.pod_index(i) != TWO_POD.pod_index(j)
+                assert kinds == ({"dcn"} if cross_pair else {"ici"}), (i, j)
+
+
 class TestTreePlacement:
     @pytest.mark.parametrize("kind", ("all-reduce", "all-gather",
                                       "reduce-scatter",

@@ -273,6 +273,64 @@ class TestWireDtypeWaste:
 
 
 # ---------------------------------------------------------------------------
+# rule 7: skewed-a2a
+# ---------------------------------------------------------------------------
+def _a2a(name, vec=None, weight=1.0):
+    return CollectiveOp(
+        kind="all-to-all", name=name,
+        result_shapes=[Shape("f32", (4096,))],
+        replica_groups=[[0, 1, 2, 3, 4, 5, 6, 7]], weight=weight,
+        bytes_per_rank_vec=vec)
+
+
+def _skewed_vec(total, n=8, frac=0.6):
+    return [total * frac] + [total * (1.0 - frac) / (n - 1)] * (n - 1)
+
+
+class TestSkewedA2a:
+    def test_hot_rank_flags_warn(self):
+        op = _a2a("%a2a.0", vec=_skewed_vec(16384.0))   # skew 4.8x
+        got = _findings("skewed-a2a", lint_ops([op], topo=TOPO_FLAT))
+        assert len(got) == 1
+        f = got[0]
+        assert f.severity == "warn"
+        assert f.op_names == ["%a2a.0"]
+        assert 0.0 < f.est_savings_s <= f.est_current_s
+        # the straggler gap is the whole story: rebalancing the same
+        # bytes evenly is exactly the alternative the rule prices
+        assert "rank 0" in f.message
+        assert f.suggested_fix
+
+    def test_balanced_vector_clean(self):
+        op = _a2a("%a2a.0", vec=[2048.0] * 8)           # skew 1.0
+        assert not _findings("skewed-a2a", lint_ops([op], topo=TOPO_FLAT))
+
+    def test_scalar_a2a_clean(self):
+        assert not _findings("skewed-a2a",
+                             lint_ops([_a2a("%a2a.0")], topo=TOPO_FLAT))
+
+    def test_mild_skew_below_threshold_clean(self):
+        # 1.5x hot rank: below the 2x threshold
+        vec = [1.5 * 2048.0] + [(16384.0 - 1.5 * 2048.0) / 7] * 7
+        assert not _findings(
+            "skewed-a2a",
+            lint_ops([_a2a("%a2a.0", vec=vec)], topo=TOPO_FLAT))
+
+    def test_no_topo_no_finding(self):
+        op = _a2a("%a2a.0", vec=_skewed_vec(16384.0))
+        assert not _findings("skewed-a2a", lint_ops([op], topo=None))
+
+    def test_weight_scales_savings(self):
+        one = _findings("skewed-a2a", lint_ops(
+            [_a2a("%a2a.0", vec=_skewed_vec(16384.0))], topo=TOPO_FLAT))[0]
+        sixteen = _findings("skewed-a2a", lint_ops(
+            [_a2a("%a2a.0", vec=_skewed_vec(16384.0), weight=16.0)],
+            topo=TOPO_FLAT))[0]
+        assert sixteen.est_savings_s == pytest.approx(
+            16.0 * one.est_savings_s)
+
+
+# ---------------------------------------------------------------------------
 # cross-rule properties
 # ---------------------------------------------------------------------------
 def _all_scenario_findings():
@@ -282,6 +340,10 @@ def _all_scenario_findings():
     out += lint_ops([_ar("%ar.0")], topo=TOPO_PODS, algorithm="ring")
     out += lint_ops([_ar("%ar.0")], topo=TOPO_PODS, algorithm="tree")
     out += lint_ops([_permute([(0, 4), (4, 0)])], topo=TOPO_PODS)
+    out += lint_ops([_a2a("%a2a.0", vec=_skewed_vec(16384.0))],
+                    topo=TOPO_FLAT)
+    out += lint_ops([_a2a("%a2a.0", vec=_skewed_vec(16384.0), weight=8.0)],
+                    topo=TOPO_PODS)
     for text in (HLO_AG_SLICE, HLO_DUP, HLO_DTYPE):
         ops, texts = _hlo_case(text)
         out += lint_ops(ops, topo=TOPO_FLAT, hlo_texts=texts)
@@ -376,7 +438,7 @@ class TestReportLint:
         p = str(tmp_path / "r.json")
         pod_report.save(p, include_lint=True)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v7"
+        assert d["schema"] == "repro.comm_report.v8"
         assert d["lint"], "lint section missing"
         from repro.core import CommReport
         back = CommReport.load(p)

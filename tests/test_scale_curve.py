@@ -103,6 +103,64 @@ class TestScaleOps:
         with pytest.raises(ValueError):
             scale.scale_ops(ddp_ops(), 8, 4)
 
+    def test_irregular_vector_tiles_and_renormalizes(self):
+        """A per-rank vector expands by ``np.repeat(vec, F) / F``: the
+        total is preserved, each base rank's share spreads over its clone
+        block, and the skew ratio survives the projection (the old code
+        path would have flattened the hot expert into the mean)."""
+        vec = [6000.0, 1000.0, 500.0, 500.0]
+        op = CollectiveOp(kind="all-gather", name="v",
+                          result_shapes=[Shape("f32", (8,))],
+                          replica_groups=[[0, 1, 2, 3]],
+                          bytes_per_rank_vec=vec)
+        out = scale.scale_op(op, 8)
+        got = out.byte_vector()
+        assert got is not None and got.size == 32
+        assert got.sum() == pytest.approx(8000.0)
+        np.testing.assert_allclose(got.reshape(4, 8).sum(axis=1), vec)
+        assert out.skew() == pytest.approx(op.skew())
+
+    def test_uniform_vector_matches_scalar_at_scale(self):
+        base = CollectiveOp(kind="all-gather", name="u",
+                            result_shapes=[Shape("f32", (1024,))],
+                            replica_groups=[[0, 1, 2, 3]])
+        per = base.payload_bytes / 4
+        uni = CollectiveOp(kind="all-gather", name="u",
+                           result_shapes=[Shape("f32", (1024,))],
+                           replica_groups=[[0, 1, 2, 3]],
+                           bytes_per_rank_vec=[per] * 4)
+        ms = comm_matrix.matrix_for_ops([scale.scale_op(base, 8)], 32)
+        mu = comm_matrix.matrix_for_ops([scale.scale_op(uni, 8)], 32)
+        assert (ms == mu).all()
+
+    def test_irregular_a2a_chunks_slice_the_vector(self):
+        """Pod-chunked irregular a2a: one op per chunk index, each
+        carrying its positional slice of the expanded vector times the
+        chunk count (the irregular twin of scalar chunking, where every
+        chunk op keeps the full base payload)."""
+        n = 8
+        total = float(n * 100)
+        vec = [total * 0.6] + [total * 0.4 / (n - 1)] * (n - 1)
+        op = CollectiveOp(kind="all-to-all", name="a",
+                          result_shapes=[Shape("f32", (8,))],
+                          replica_groups=[list(range(n))],
+                          bytes_per_rank_vec=vec)
+        factor = 2 * scale.POD_DEVICES // n       # 2 pod chunks
+        out = scale.scale_op(op, factor)
+        assert isinstance(out, list) and len(out) == 2
+        expanded = np.repeat(np.asarray(vec), factor) / factor
+        for j, chunk in enumerate(out):
+            assert all(len(g) == scale.POD_DEVICES
+                       for g in chunk.replica_groups)
+            np.testing.assert_allclose(
+                chunk.byte_vector(),
+                expanded[j * scale.POD_DEVICES:
+                         (j + 1) * scale.POD_DEVICES] * 2)
+        # the hot base rank's clones land in chunk 0
+        assert out[0].byte_vector().sum() > out[1].byte_vector().sum()
+        flat = scale.scale_ops([op], n, n * factor)
+        assert len(flat) == 2
+
 
 # ---------------------------------------------------------------------------
 # the curve: CSV schema golden + monotone growth

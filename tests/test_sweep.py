@@ -34,6 +34,11 @@ class TestRegistry:
         spec = sweep.available_configs()["serve"]
         assert "prefill/decode" in spec.description
 
+    def test_moe_skew_config_present(self):
+        assert "moe-skew" in sweep.available_configs()
+        spec = sweep.available_configs()["moe-skew"]
+        assert "irregular" in spec.description
+
     def test_unknown_config_rejected(self):
         with pytest.raises(KeyError):
             sweep.run_sweep(["nope"], ["4x2"], ["ring"])
@@ -129,6 +134,26 @@ class TestSweepRuns:
                                   phase="prefill"), phase="prefill")
         assert hit is not None and hit.phase_names() == ["prefill"]
         assert cache.get(key, phase="decode") is None   # never captured
+
+    def test_moe_skew_cell_carries_irregular_vectors(self, mesh8):
+        """The moe-skew builder's ``op_transform`` hook threads through
+        ``_monitor_cell``: every captured a2a carries a per-rank byte
+        vector with the hot expert above the skewed-a2a threshold, the
+        summary grows the ``max_skew`` column, and the lint pass fires."""
+        built = sweep.available_configs()["moe-skew"].build(mesh8)
+        assert callable(built.get("op_transform"))
+        rep = sweep._monitor_cell(built, mesh8, "moe-skew@4x2", "ring")
+        a2as = [op for op in rep.compiled_ops
+                if op.kind in ("all-to-all", "ragged-all-to-all")]
+        assert a2as
+        for op in a2as:
+            vec = op.byte_vector()
+            assert vec is not None
+            assert vec.sum() == pytest.approx(op.payload_bytes)
+            assert op.skew() > 2.0
+        assert any(row.get("max_skew", 1.0) > 2.0
+                   for row in rep.compiled_summary.values())
+        assert any(f.rule_id == "skewed-a2a" for f in rep.lint())
 
     def test_unrequested_sibling_spares_compile(self, tmp_path):
         cache = ReportCache(root=str(tmp_path / "cache"))
