@@ -16,7 +16,7 @@ import traceback
 from benchmarks import common
 
 BENCHES = ("table1", "table2", "table3", "fig3", "links", "matrix",
-           "overhead", "roofline")
+           "overhead", "roofline", "trace")
 
 
 def run_one(name: str) -> bool:
@@ -30,6 +30,7 @@ def run_one(name: str) -> bool:
         "matrix": "benchmarks.matrix_build",
         "overhead": "benchmarks.overhead",
         "roofline": "benchmarks.roofline_table",
+        "trace": "benchmarks.trace_ingest",
     }[name]
     print(f"\n{'='*72}\n## {name} ({mod})\n{'='*72}")
     t0 = time.perf_counter()

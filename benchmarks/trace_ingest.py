@@ -1,0 +1,163 @@
+"""Trace-ingestion throughput: events/sec through ``load_trace``.
+
+A monitored fleet job emits six-figure event counts per trace; the
+importer has to chew through them at parser-bound speed, not op-builder
+speed.  This benchmark generates a synthetic 100k-event JSONL trace
+(mixed collective kinds across 64 devices, per-rank observations merged
+by correlation id, h2d/d2h rows in the stream), runs it through the full
+:func:`repro.core.trace.load_trace` pipeline -- sniff, parse, validate,
+cluster, build ops -- and reports events/sec.
+
+Raw events/sec is not comparable across runner hardware, so the guard is
+normalized by a bare ``json.loads``-per-line pass over the same file on
+the same machine (the floor any JSONL parser pays): the importer must
+stay within **1.5x of the recorded overhead ratio** in
+``artifacts/BENCH_trace.json``, which this run rewrites.
+"""
+import json
+import os
+import time
+
+from benchmarks.common import ARTIFACTS, emit
+from repro.core.reporter import format_table
+from repro.core.trace import load_trace
+
+NUM_EVENTS = 100_000
+NUM_DEVICES = 64
+RANKS_PER_COLLECTIVE = 4       # observations sharing one corr id
+
+KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-broadcast")
+
+
+def synthetic_trace(path: str, num_events: int = NUM_EVENTS) -> int:
+    """A deterministic JSONL trace shaped like a long fleet profile:
+    every collective is observed from RANKS_PER_COLLECTIVE ranks (rows
+    sharing a corr id), with a sprinkle of host transfers."""
+    lines = [json.dumps({"trace": {
+        "name": "bench", "num_devices": NUM_DEVICES, "time_unit": "us"}})]
+    i = 0
+    corr = 0
+    while i < num_events:
+        if corr % 13 == 12:                   # ~2% host-transfer rows
+            lines.append(json.dumps({
+                "kind": "h2d" if corr % 2 else "d2h",
+                "device": corr % NUM_DEVICES, "bytes": 4096}))
+            i += 1
+            if i >= num_events:
+                break
+        kind = KINDS[corr % len(KINDS)]
+        base = (corr * RANKS_PER_COLLECTIVE) % NUM_DEVICES
+        group = [(base + r) % NUM_DEVICES
+                 for r in range(RANKS_PER_COLLECTIVE)]
+        nbytes = 1024 << (corr % 12)
+        for r in sorted(group):
+            lines.append(json.dumps({
+                "kind": kind, "name": f"{kind}.{corr}", "device": r,
+                "dur": 100.0 + (corr % 7), "bytes": nbytes,
+                "corr": corr, "group": sorted(group),
+                "phase": "fwd" if corr % 3 else "bwd"}))
+            i += 1
+            if i >= num_events:
+                break
+        corr += 1
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return len(lines) - 1                      # events, sans header
+
+
+def _time(fn, repeats: int = 5) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _json_floor(path: str) -> float:
+    """The bare per-line ``json.loads`` pass -- the parser floor that
+    normalizes the guard across runner hardware."""
+    def run():
+        with open(path) as f:
+            for line in f:
+                json.loads(line)
+    return _time(run)
+
+
+def _baseline_guard(metrics: dict) -> None:
+    """Fast-CI perf guard: the importer's overhead over the raw
+    ``json.loads`` floor must stay within 1.5x of the recorded
+    ``artifacts/BENCH_trace.json`` baseline."""
+    path = os.path.join(ARTIFACTS, "BENCH_trace.json")
+    if not os.path.exists(path):
+        print("[trace] no recorded baseline; skipping the 1.5x guard")
+        return
+    try:
+        with open(path) as f:
+            base = json.load(f)["metrics"]
+        base_overhead = base["trace_ingest/100000ev/overhead_vs_json"]
+    except (KeyError, ValueError, OSError):
+        print("[trace] unreadable baseline; skipping the 1.5x guard")
+        return
+    cur = metrics["trace_ingest/100000ev/overhead_vs_json"]
+    ratio = cur / base_overhead
+    assert ratio <= 1.5, (
+        f"trace importer regressed to {ratio:.2f}x the recorded baseline "
+        f"(overhead {cur:.1f}x the raw json.loads floor now vs "
+        f"{base_overhead:.1f}x recorded; allowed: 1.5x)")
+    print(f"[trace] baseline guard OK: {ratio:.2f}x the recorded "
+          f"json-normalized ingest time (limit 1.5x)")
+
+
+def main():
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    trace_path = os.path.join(ARTIFACTS, "bench_trace.jsonl")
+    n = synthetic_trace(trace_path)
+
+    imp = load_trace(trace_path)
+    assert imp.num_devices == NUM_DEVICES
+    assert imp.ops, "importer produced no ops from the synthetic trace"
+    assert all(op.measured_s is not None for op in imp.ops)
+    # clustering contract: RANKS_PER_COLLECTIVE rows -> one op (the
+    # final cluster may be truncated by the event budget)
+    n_transfer = len(imp.host_transfers)
+    n_coll = n - n_transfer
+    assert n_transfer > 0
+    assert len(imp.ops) == -(-n_coll // RANKS_PER_COLLECTIVE)
+
+    t_ingest = _time(lambda: load_trace(trace_path))
+    t_json = _json_floor(trace_path)
+    ev_per_s = n / t_ingest
+    overhead = t_ingest / t_json
+
+    metrics = {}
+
+    def record(name, value, derived=""):
+        metrics[name] = float(value)
+        emit(name, value, derived)
+
+    tag = f"trace_ingest/{NUM_EVENTS}ev"
+    record(f"{tag}/ingest_ms", t_ingest * 1e3, "full_load_trace")
+    record(f"{tag}/json_floor_ms", t_json * 1e3, "raw_json_loads_pass")
+    record(f"{tag}/events_per_sec", ev_per_s, "events/ingest_seconds")
+    record(f"{tag}/overhead_vs_json", overhead, "ingest_ms/json_floor_ms")
+    record(f"{tag}/ops_built", len(imp.ops), "clustered_collectives")
+
+    print(format_table(
+        [[f"{n:,}", f"{t_json * 1e3:.1f}", f"{t_ingest * 1e3:.1f}",
+          f"{ev_per_s / 1e3:.0f}k", f"{overhead:.1f}x",
+          f"{len(imp.ops):,}"]],
+        ["events", "json ms", "ingest ms", "ev/s", "overhead", "ops"]))
+    _baseline_guard(metrics)      # vs the recorded artifact, pre-overwrite
+
+    out = os.path.join(ARTIFACTS, "BENCH_trace.json")
+    with open(out, "w") as f:
+        json.dump({"benchmark": "trace_ingest", "metrics": metrics}, f,
+                  indent=2, sort_keys=True)
+    print(f"[trace] wrote {out}")
+    os.remove(trace_path)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,9 @@ Subcommands:
 * ``lint``     -- static anti-pattern analysis over a config's (or a saved
   report's) captured collectives, with modeled savings and CI exit codes
   (``--fail-on warn|error``);
+* ``compare``  -- import a real device trace (Perfetto JSON / nvprof CSV /
+  JSONL) and compare measured vs modeled per-collective seconds, with
+  error statistics and CI exit codes (``--fail-on rel-err=X``);
 * ``report``   -- re-export a saved report (``CommReport.save`` / cache
   entry) into any format without recompiling anything;
 * ``configs``  -- list the sweepable configs;
@@ -231,6 +234,128 @@ def _cmd_lint(args) -> int:
     return 0
 
 
+def _is_saved_report(path: str) -> bool:
+    """Whether ``path`` is a CommReport.save JSON (vs a device trace)."""
+    if not path.endswith(".json") or not os.path.exists(path):
+        return False
+    try:
+        with open(path, errors="replace") as f:
+            return '"repro.comm_report' in f.read(2048)
+    except OSError:
+        return False
+
+
+def _cmd_compare(args) -> int:
+    """``repro compare <trace> [model]``: import a real device trace and
+    pin its measured per-collective seconds against the cost model.
+    Exit 0 on a finished comparison (below ``--fail-on``), 1 when the
+    ``--fail-on rel-err=X`` threshold is hit, 2 on usage errors (bad
+    path / format / config / threshold)."""
+    import json as json_mod
+
+    from repro.core.trace import FORMATS, load_trace
+
+    def log(msg):
+        print(msg, file=sys.stderr)
+
+    threshold = None
+    if args.fail_on:
+        key, _, val = args.fail_on.partition("=")
+        try:
+            if key.strip() != "rel-err":
+                raise ValueError
+            threshold = float(val)
+        except ValueError:
+            print(f"error: --fail-on wants rel-err=<float> (e.g. "
+                  f"rel-err=0.25), got {args.fail_on!r}", file=sys.stderr)
+            return 2
+    if args.fmt and args.fmt not in FORMATS:
+        print(f"error: unknown trace format {args.fmt!r}; valid formats: "
+              f"{list(FORMATS)}", file=sys.stderr)
+        return 2
+
+    if _is_saved_report(args.trace):
+        # a saved v9 report of an earlier import (--save-import): its ops
+        # already carry measured_s, no trace frontend needed
+        from repro.core import CommReport
+        measured = CommReport.load(args.trace)
+        log(f"loaded saved report {args.trace}: "
+            f"{len(measured.compiled_ops)} collectives, "
+            f"{measured.num_devices} devices")
+    else:
+        imp = load_trace(args.trace, fmt=args.fmt or None,
+                         num_devices=args.trace_devices)
+        measured = imp.report()
+        log(f"imported {args.trace} [{imp.meta.get('source')}]: "
+            f"{len(measured.compiled_ops)} collectives, "
+            f"{len(measured.host_transfers)} host transfers, "
+            f"{measured.num_devices} devices")
+    if args.save_import:
+        measured.save(args.save_import)
+        log(f"[report] {args.save_import}")
+
+    algs = _split(args.algorithms)
+    models: list = []
+    if not args.model:
+        # the import's own model (needs a topology, e.g. our own exports)
+        models = [(None, a or None) for a in (algs or [None])]
+    elif args.model.endswith(".json"):
+        from repro.core import export
+        reports = export.load_json_reports(args.model)
+        models = [(rep, alg) for rep in reports
+                  for alg in (algs or [rep.algorithm])]
+    else:
+        _ensure_devices(args.devices)
+        from repro import sweep as sweep_mod
+        registry = sweep_mod.available_configs()
+        if args.model not in registry:
+            print(f"error: unknown config {args.model!r}; known configs: "
+                  f"{sorted(registry)}", file=sys.stderr)
+            return 2
+        result = sweep_mod.run_sweep(
+            [args.model], [args.mesh], algs or ["ring"],
+            cache=_cache_from(args), use_cache=not args.no_cache, log=log)
+        if result.failures:
+            print(f"error: {result.failures[0]['error']}", file=sys.stderr)
+            return 1
+        models = [(rep, rep.algorithm) for rep in result.reports]
+
+    results = []
+    for model_rep, alg in models:
+        cr = measured.compare(model_rep, algorithm=alg)
+        results.append(cr)
+        if not args.as_json:
+            print(cr.table(
+                title=f"== {cr.measured_label} vs {cr.modeled_label} "
+                      f"[{cr.algorithm}]: modeled vs measured =="))
+            print()
+    if args.as_json:
+        docs = [cr.to_dict() for cr in results]
+        print(json_mod.dumps(docs[0] if len(docs) == 1 else docs,
+                             indent=1))
+    for fmt in _split(args.formats):
+        from repro.core.export import csv_exporter, html_exporter
+        stem = os.path.splitext(os.path.basename(args.trace))[0]
+        if fmt == "csv":
+            path = csv_exporter.export_compare_csv(
+                results[0], os.path.join(args.out, f"{stem}_compare.csv"))
+        elif fmt == "html":
+            path = html_exporter.export_compare_html(
+                results, os.path.join(args.out, f"{stem}_compare.html"))
+        else:
+            print(f"error: unknown compare export format {fmt!r}; valid "
+                  f"formats: ['csv', 'html']", file=sys.stderr)
+            return 2
+        log(f"[{fmt}] {path}")
+    if threshold is not None:
+        worst = max((cr.max_rel_err() or 0.0) for cr in results)
+        if worst > threshold:
+            log(f"fail: max rel err {worst:.3f} exceeds --fail-on "
+                f"threshold {threshold:.3f}")
+            return 1
+    return 0
+
+
 def _cmd_report(args) -> int:
     from repro.core import export
 
@@ -386,6 +511,47 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--devices", type=int, default=8)
     _add_cache_opts(p)
     p.set_defaults(func=_cmd_lint)
+
+    p = sub.add_parser("compare",
+                       help="import a device trace and compare measured "
+                            "vs modeled per-collective seconds")
+    p.add_argument("trace",
+                   help="a trace file: Perfetto/Chrome JSON (jax profiler "
+                        "or our own export), nvprof/ComScribe CSV, or the "
+                        "generic JSONL schema")
+    p.add_argument("model", nargs="?", default="",
+                   help="the modeled side: a sweep-config name or a saved "
+                        "report .json (default: the imported trace's own "
+                        "model, which needs a topology -- true for our "
+                        "own Perfetto exports)")
+    p.add_argument("--fmt", default="",
+                   help="force a trace frontend: perfetto, nvprof, jsonl "
+                        "(default: sniff the file)")
+    p.add_argument("--trace-devices", type=int, default=None,
+                   dest="trace_devices",
+                   help="device count of the traced job (default: from "
+                        "the trace; device ids are validated against it)")
+    p.add_argument("--mesh", default="4x2",
+                   help="mesh spec for config models, e.g. 8, 4x2, 2x2x2")
+    p.add_argument("--algorithms", default="",
+                   help="comma list of ring,tree,hierarchical; default: "
+                        "the model's own binding")
+    p.add_argument("--fail-on", default=None, dest="fail_on",
+                   metavar="rel-err=X",
+                   help="exit 1 when the max relative error exceeds X "
+                        "(e.g. rel-err=0.25)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="machine-readable comparison JSON on stdout "
+                        "(sweep logs go to stderr)")
+    p.add_argument("--formats", default="",
+                   help="also export: comma list of csv,html")
+    p.add_argument("--out", default="artifacts")
+    p.add_argument("--save-import", default="", dest="save_import",
+                   help="also save the imported trace as a schema-v9 "
+                        "report JSON at this path")
+    p.add_argument("--devices", type=int, default=8)
+    _add_cache_opts(p)
+    p.set_defaults(func=_cmd_compare)
 
     p = sub.add_parser("report", help="re-export a saved report")
     p.add_argument("path", help="a CommReport.save JSON file")

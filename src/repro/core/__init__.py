@@ -27,8 +27,13 @@ from .roofline import RooflineReport, analyze as roofline_analyze
 from .report_cache import ReportCache, cache_key
 from . import reporter
 from . import export
+from . import trace
+from .trace import (CompareResult, TraceImport, TraceParseError, load_trace,
+                    trace_compare)
 
 __all__ = [
+    "trace", "TraceImport", "TraceParseError", "load_trace",
+    "CompareResult", "trace_compare",
     "CollectiveOp", "HostTransfer", "PhaseRecord", "Shape", "TraceEvent",
     "jax_shape",
     "CollectiveInterceptor", "intercept", "traced_summary",

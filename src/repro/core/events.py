@@ -96,6 +96,14 @@ class CollectiveOp:
     # a plain float list (JSON-friendly, dataclasses.replace-friendly);
     # consumers read the validated ndarray via :meth:`byte_vector`.
     bytes_per_rank_vec: Optional[list] = None
+    # Optional *measured* wall-clock seconds (schema v9): the total device
+    # time a real trace recorded for this op across all its executions
+    # (worst rank for multi-rank records), set by the trace importers
+    # (:mod:`repro.core.trace`).  ``None`` for purely modeled ops -- the
+    # cost models never read it, so modeled and measured time coexist and
+    # the compare layer (:mod:`repro.core.trace.compare`) can pin one
+    # against the other.
+    measured_s: Optional[float] = None
 
     # ------------------------------------------------------------------
     # Byte accounting.  The compiled module is per-device: result shapes are

@@ -1,6 +1,6 @@
 """CSV export: communication matrices + per-primitive summary rows.
 
-Three products:
+Four products:
 
 * ``export_matrix_csv`` -- one ``(d+1) x (d+1)`` matrix as CSV.  Dense
   matrices keep the square layout (paper Fig. 2/3 data, host row/column
@@ -10,6 +10,8 @@ Three products:
 * ``export_summary_csv`` -- long-form rows
   ``config,mesh,algorithm,primitive,calls,payload_bytes,wire_bytes`` across
   one or many reports -- the sweep's machine-readable comparison table;
+* ``export_compare_csv`` -- one modeled-vs-measured row per matched
+  collective of a trace-import comparison (``repro compare``);
 * ``export_scale_csv`` -- one row per (config, algorithm, device count)
   from a ``sweep --scale-curve`` run.
 """
@@ -67,6 +69,26 @@ def export_summary_csv(reports, path: str) -> str:
     for rep in reports:
         for row in summary_rows(rep):
             lines.append(",".join(str(row[c]) for c in _COLUMNS))
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+# stable schema for ``repro compare`` output; tests pin the header
+COMPARE_COLUMNS = ("op", "kind", "phase", "payload_bytes", "size_class",
+                   "modeled_s", "measured_s", "rel_err")
+
+
+def export_compare_csv(result, path: str) -> str:
+    """Write one modeled-vs-measured row per matched collective (a
+    :class:`repro.core.trace.compare.CompareResult`), in match order."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    lines = [",".join(COMPARE_COLUMNS)]
+    for r in result.rows:
+        d = r.to_dict()
+        d["op"] = d.pop("name")
+        lines.append(",".join(
+            "" if d[c] is None else str(d[c]) for c in COMPARE_COLUMNS))
     with open(path, "w") as f:
         f.write("\n".join(lines) + "\n")
     return path

@@ -260,13 +260,92 @@ def lint_panel(report) -> str:
     return "\n".join(rows)
 
 
+def _compare_rows_table(result) -> str:
+    """The shared per-collective modeled-vs-measured table body."""
+    rows = ["<table class='sum'><tr><th>op</th><th>kind</th><th>phase</th>"
+            "<th>payload</th><th>modeled</th><th>measured</th>"
+            "<th>rel err</th></tr>"]
+    for r in result.rows:
+        mod = "-" if r.modeled_s is None else f"{r.modeled_s * 1e3:.3f} ms"
+        err = "-" if r.rel_err is None else f"{r.rel_err * 100:.1f}%"
+        rows.append(
+            f"<tr><td>{html.escape(r.name)}</td>"
+            f"<td>{html.escape(r.kind)}</td>"
+            f"<td>{html.escape(r.phase or '-')}</td>"
+            f"<td>{reporter.human_bytes(r.payload_bytes)}</td>"
+            f"<td>{mod}</td><td>{r.measured_s * 1e3:.3f} ms</td>"
+            f"<td>{err}</td></tr>")
+    rows.append("</table>")
+    return "\n".join(rows)
+
+
+def _compare_buckets_table(label: str, buckets: dict) -> str:
+    rows = [f"<table class='sum'><tr><th>{html.escape(label)}</th>"
+            "<th>ops</th><th>modeled</th><th>measured</th>"
+            "<th>mean err</th><th>max err</th></tr>"]
+    for key, b in buckets.items():
+        mean = ("-" if b["mean_rel_err"] is None
+                else f"{b['mean_rel_err'] * 100:.1f}%")
+        mx = ("-" if b["max_rel_err"] is None
+              else f"{b['max_rel_err'] * 100:.1f}%")
+        rows.append(
+            f"<tr><td>{html.escape(str(key))}</td><td>{b['count']}</td>"
+            f"<td>{b['modeled_s'] * 1e3:.3f} ms</td>"
+            f"<td>{b['measured_s'] * 1e3:.3f} ms</td>"
+            f"<td>{mean}</td><td>{mx}</td></tr>")
+    rows.append("</table>")
+    return "\n".join(rows)
+
+
+def compare_panel(result) -> str:
+    """The modeled-vs-measured panel for one
+    :class:`repro.core.trace.compare.CompareResult`: per-collective rows
+    plus per-kind and per-size-class aggregates."""
+    s = result.stats()
+    mean = ("-" if s["mean_rel_err"] is None
+            else f"{s['mean_rel_err'] * 100:.1f}%")
+    mx = ("-" if s["max_rel_err"] is None
+          else f"{s['max_rel_err'] * 100:.1f}%")
+    parts = [
+        "<div><h3>modeled vs measured</h3>",
+        f"<div class='meta'>measured: {html.escape(result.measured_label)}"
+        f" &middot; model: {html.escape(result.modeled_label)}"
+        f" [{html.escape(result.algorithm)}] &middot; {s['count']} matched"
+        f" ({s['unmatched_measured']} measured /"
+        f" {s['unmatched_modeled']} modeled unmatched) &middot;"
+        f" mean rel err {mean}, max {mx}</div>",
+        _compare_rows_table(result),
+        _compare_buckets_table("kind", result.by_kind()),
+        _compare_buckets_table("size class", result.by_size_class()),
+        "</div>",
+    ]
+    return "\n".join(parts)
+
+
+def _measured_panel(report) -> str:
+    """The compare panel for a measured (trace-imported) report, against
+    its own model when one exists.  Empty string for purely modeled
+    reports or when no comparison is possible (no topology, nothing
+    matched) -- the dashboard never fails over an absent model."""
+    if not hasattr(report, "compare") or \
+            not any(getattr(op, "measured_s", None) is not None
+                    for op in report.compiled_ops):
+        return ""
+    try:
+        return compare_panel(report.compare())
+    except ValueError:
+        return ""
+
+
 def _matrices_section(report) -> str:
     """The whole-report artifact set: summary + lint findings +
+    modeled-vs-measured panel (trace imports) +
     combined/per-primitive/link heatmaps (the body of the "all phases"
     view)."""
     parts = [
         _summary_table(report.compiled_summary),
         lint_panel(report),
+        _measured_panel(report),
         "<div class='grid'>",
         "<div><h3>all primitives</h3>" + matrix_table(report.matrix)
         + "</div>",
@@ -447,4 +526,39 @@ def export_scale_html(points: list[dict], path: str,
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "w") as f:
         f.write(render_scale_curve(points, title))
+    return path
+
+
+# ---------------------------------------------------------------------------
+# compare page (``repro compare``): modeled vs measured
+# ---------------------------------------------------------------------------
+def render_compare(results, title: str = "Modeled vs measured") -> str:
+    """Standalone page for one or many
+    :class:`repro.core.trace.compare.CompareResult` (one per algorithm
+    binding)."""
+    if not isinstance(results, (list, tuple)):
+        results = [results]
+    sections = []
+    for res in results:
+        sections.append(
+            f"<h2>{html.escape(res.measured_label)} vs "
+            f"{html.escape(res.modeled_label)} "
+            f"[{html.escape(res.algorithm)}]</h2>\n" + compare_panel(res))
+    return (
+        "<!doctype html>\n<html lang='en'>\n<head>\n<meta charset='utf-8'>\n"
+        f"<title>{html.escape(title)}</title>\n"
+        "<meta name='viewport' content='width=device-width, initial-scale=1'>"
+        f"\n<style>{_CSS}</style>\n</head>\n<body>\n"
+        f"<h1>{html.escape(title)}</h1>\n"
+        "<div class='meta'>per-collective cost-model seconds vs the wall "
+        "time a real device trace measured; rel err = |measured &minus; "
+        "modeled| / measured.</div>\n"
+        + "\n".join(sections) + "\n</body>\n</html>\n")
+
+
+def export_compare_html(results, path: str,
+                        title: str = "Modeled vs measured") -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(render_compare(results, title))
     return path

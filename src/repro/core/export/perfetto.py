@@ -28,6 +28,13 @@ Only the documented subset of the Chrome trace-event format is emitted
 (https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU):
 ``X`` duration events and ``M`` metadata events, each with ``name``, ``ph``,
 ``ts``/``dur`` in microseconds, ``pid``, ``tid``, ``cat`` and ``args``.
+
+**Lossless re-import.**  Every ``collective`` event embeds the op's full
+serialized record (``args.repro_op``, the schema-v9 op dict) and each
+process carries one ``repro_report`` metadata event (devices, algorithm,
+topology, phases, host transfers), so the Perfetto frontend of
+:mod:`repro.core.trace` can rebuild the originating report exactly --
+importing our own export reproduces the comm matrix bitwise.
 """
 from __future__ import annotations
 
@@ -35,9 +42,14 @@ import json
 import os
 
 from ..decompose import decompose as _decompose
+from ..sparse import is_sparse
+from . import serialize
 
 # floor so zero-cost ops (group size 1, no topology) stay visible in the UI
 _MIN_DUR_US = 0.05
+
+# metadata-event name carrying the report-level round-trip record
+REPORT_META_EVENT = "repro_report"
 
 
 def _op_args(op, algorithm: str) -> dict:
@@ -49,12 +61,36 @@ def _op_args(op, algorithm: str) -> dict:
         "group_size": op.group_size,
         "num_groups": op.num_groups,
         "weight": op.weight,
+        # the full serialized op -- replica groups, shapes, pairs, byte
+        # vectors -- so a re-import loses nothing the matrix needs
+        "repro_op": serialize.op_to_dict(op),
     }
     if op.phase:
         args["phase"] = op.phase
     if op.skew() > 1.0:
         args["skew"] = round(op.skew(), 4)
+    if op.measured_s is not None:
+        args["measured_s"] = float(op.measured_s)
     return args
+
+
+def _report_meta(report) -> dict:
+    """Report-level round-trip record for the ``repro_report`` metadata
+    event: everything the comm matrix needs beyond the op list (device
+    count, algorithm binding, topology, phase order, host transfers --
+    the matrix's row/col 0)."""
+    meta = {
+        "name": report.name,
+        "num_devices": report.num_devices,
+        "algorithm": getattr(report, "algorithm", "ring"),
+        "topo": serialize.topo_to_dict(getattr(report, "topo", None)),
+        "sparse": bool(is_sparse(getattr(report, "matrix", None))),
+        "phases": [serialize.phase_to_dict(p)
+                   for p in getattr(report, "phases", []) or []],
+        "host_transfers": [serialize.transfer_to_dict(t)
+                           for t in getattr(report, "host_transfers", [])],
+    }
+    return meta
 
 
 def _memoized_schedules(report, algorithm: str) -> dict:
@@ -91,6 +127,9 @@ def trace_events(report, *, pid: int = 1) -> list[dict]:
     events: list[dict] = [{
         "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
         "args": {"name": label},
+    }, {
+        "name": REPORT_META_EVENT, "ph": "M", "pid": pid, "tid": 0,
+        "args": _report_meta(report),
     }]
     kinds = sorted({op.kind for op in report.compiled_ops})
     tid_of = {kind: i + 1 for i, kind in enumerate(kinds)}
@@ -121,11 +160,16 @@ def trace_events(report, *, pid: int = 1) -> list[dict]:
             span[1] = max(span[1], end)
 
     if topo is None:
-        # no topology: the legacy serial layout (generic 50 GB/s link)
+        # no topology: the legacy serial layout (generic 50 GB/s link);
+        # imported ops carry measured wall time -- already execution-total
+        # -- so their spans show the trace's truth, not the generic link
         ts = 0.0
         for op in ops:
-            sec = op.wire_bytes_per_rank(algorithm) / 50e9
-            dur = max(_MIN_DUR_US, sec * 1e6) * max(1.0, op.weight)
+            if op.measured_s is not None:
+                dur = max(_MIN_DUR_US, op.measured_s * 1e6)
+            else:
+                sec = op.wire_bytes_per_rank(algorithm) / 50e9
+                dur = max(_MIN_DUR_US, sec * 1e6) * max(1.0, op.weight)
             events.append({
                 "name": op.op_name or op.kind, "cat": "collective",
                 "ph": "X", "ts": round(ts, 3), "dur": round(dur, 3),

@@ -1,4 +1,4 @@
-"""Lossless CommReport <-> plain-dict serialization (schema ``v8``).
+"""Lossless CommReport <-> plain-dict serialization (schema ``v9``).
 
 This is the substrate for everything under :mod:`repro.core.export`: the JSON
 exporter writes the dict verbatim, the on-disk report cache
@@ -72,6 +72,15 @@ unequal bytes).  Ops without the key load with ``bytes_per_rank_vec=None``
 -- the scalar path -- so every v1...v7 file reads back unchanged, and a
 v8 file whose ops are all regular is byte-identical to v7 apart from the
 schema string.
+
+Schema **v9** closes the model-vs-measured loop: the *optional* per-op
+``measured_s`` key (total measured wall seconds for the op, set by the
+trace importers in :mod:`repro.core.trace`) and the *optional* top-level
+``trace_meta`` section (import provenance: source frontend, trace path,
+record counts, clock-alignment rule, device mapping), both restored on
+load.  Purely modeled reports carry neither key, so an all-modeled v9
+file is byte-identical to v8 apart from the schema string, and every
+v1...v8 file loads with ``measured_s=None`` / ``trace_meta=None``.
 """
 from __future__ import annotations
 
@@ -87,7 +96,8 @@ from ..events import (CollectiveOp, HostTransfer, PhaseRecord, Shape,
 from ..sparse import SparseCommMatrix, is_sparse
 from ..topology import HardwareSpec, MeshTopology
 
-SCHEMA = "repro.comm_report.v8"
+SCHEMA = "repro.comm_report.v9"
+SCHEMA_V8 = "repro.comm_report.v8"
 SCHEMA_V7 = "repro.comm_report.v7"
 SCHEMA_V6 = "repro.comm_report.v6"
 SCHEMA_V5 = "repro.comm_report.v5"
@@ -95,8 +105,8 @@ SCHEMA_V4 = "repro.comm_report.v4"
 SCHEMA_V3 = "repro.comm_report.v3"
 SCHEMA_V2 = "repro.comm_report.v2"
 SCHEMA_V1 = "repro.comm_report.v1"
-ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V7, SCHEMA_V6, SCHEMA_V5, SCHEMA_V4,
-                    SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
+ACCEPTED_SCHEMAS = (SCHEMA, SCHEMA_V8, SCHEMA_V7, SCHEMA_V6, SCHEMA_V5,
+                    SCHEMA_V4, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +143,10 @@ def op_to_dict(op: CollectiveOp) -> dict:
     # schema v8: irregular ops only -- regular ops keep the v7 spelling
     if op.bytes_per_rank_vec is not None:
         d["bytes_per_rank_vec"] = [float(x) for x in op.bytes_per_rank_vec]
+    # schema v9: measured (imported-trace) ops only -- modeled ops keep
+    # the v8 spelling, so all-modeled files stay byte-identical
+    if op.measured_s is not None:
+        d["measured_s"] = float(op.measured_s)
     return d
 
 
@@ -153,6 +167,8 @@ def op_from_dict(d: dict) -> CollectiveOp:
         bytes_per_rank_vec=(list(d["bytes_per_rank_vec"])
                             if d.get("bytes_per_rank_vec") is not None
                             else None),
+        measured_s=(float(d["measured_s"])
+                    if d.get("measured_s") is not None else None),
     )
 
 
@@ -352,13 +368,23 @@ def _lint_section(report, include_lint: bool) -> dict:
     return {"lint": [f.to_dict() for f in report.lint()]}
 
 
+def _trace_meta_section(report) -> dict:
+    """Optional schema-v9 import provenance for measured (trace-imported)
+    reports: which frontend parsed the trace, how device ids were mapped
+    and clocks aligned.  Restored verbatim on load -- it cannot be
+    re-derived from the op list."""
+    tm = getattr(report, "trace_meta", None)
+    return {"trace_meta": dict(tm)} if tm else {}
+
+
 def report_to_dict(report, *, include_hlo: bool = False,
                    include_schedules: bool = False,
                    include_lint: bool = False) -> dict:
-    """``CommReport`` -> JSON-serializable dict (schema ``v8``)."""
+    """``CommReport`` -> JSON-serializable dict (schema ``v9``)."""
     return {
         "schema": SCHEMA,
         **_link_section(report),
+        **_trace_meta_section(report),
         **_hlo_section(report, include_hlo),
         **_schedule_section(report, include_schedules),
         **_lint_section(report, include_lint),
@@ -385,7 +411,7 @@ def report_to_dict(report, *, include_hlo: bool = False,
 
 
 def report_from_dict(d: dict):
-    """Dict (schema ``v1`` ... ``v8``) -> ``CommReport``.
+    """Dict (schema ``v1`` ... ``v9``) -> ``CommReport``.
 
     The reverse of :func:`report_to_dict`.  Loaded reports carry everything
     needed for matrices, tables, exports and cost models; the live
@@ -426,6 +452,8 @@ def report_from_dict(d: dict):
         algorithm=d.get("algorithm", "ring"),
         meta=dict(d.get("meta", {})),
         phases=[phase_from_dict(p) for p in d.get("phases", [])],
+        trace_meta=(dict(d["trace_meta"])
+                    if d.get("trace_meta") else None),
     )
     if d.get("hlo_gz"):
         blobs = d["hlo_gz"]

@@ -309,6 +309,12 @@ def summarize(ops: Iterable[CollectiveOp], algorithm: str = "ring",
             # (absent for regular kinds, so fixed-column consumers keep
             # their layout)
             row["max_skew"] = max(row.get("max_skew", 1.0), skew)
+        if op.measured_s is not None:
+            # trace-imported ops carry measured wall time (schema v9);
+            # absent for purely modeled captures, so fixed-column
+            # consumers keep their layout
+            row["measured_s"] = (row.get("measured_s", 0.0)
+                                 + float(op.measured_s))
     return table
 
 

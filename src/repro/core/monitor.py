@@ -84,6 +84,10 @@ class CommReport:
     algorithm: str = "ring"                 # algorithm the matrices assume
     meta: dict = dataclasses.field(default_factory=dict)  # sweep provenance
     phases: list[PhaseRecord] = dataclasses.field(default_factory=list)
+    # import provenance when the report was built from a real device trace
+    # (:mod:`repro.core.trace`): source frontend, trace path, clock
+    # alignment, device mapping.  None for purely modeled reports.
+    trace_meta: Optional[dict] = None
 
     # -- lazy algorithm/phase-bound views ---------------------------------
     def view(self, algorithm: Optional[str] = None,
@@ -289,6 +293,22 @@ class CommReport:
         op, aligned with ``compiled_ops``): the phase IR's serializable
         face, also written by ``save(..., include_schedules=True)``."""
         return self.view(algorithm).schedule_summaries()
+
+    # -- measured (trace-imported) time -------------------------------------
+    def measured_seconds(self, phase: Optional[str] = None) -> Optional[float]:
+        """Total *measured* wall seconds over ops that carry a trace
+        measurement (``op.measured_s``, schema v9) -- ``None`` when no op
+        does, i.e. for purely modeled reports."""
+        return self.view(phase=phase).measured_seconds()
+
+    def compare(self, model=None, algorithm: Optional[str] = None):
+        """Modeled-vs-measured comparison
+        (:class:`~repro.core.trace.compare.CompareResult`) of this report's
+        measured ops against ``model`` (a CommReport / CommView; default:
+        this report's own modeled times)."""
+        from .trace.compare import compare as compare_fn
+
+        return compare_fn(self, model, algorithm=algorithm)
 
     # -- static lint ---------------------------------------------------------
     def lint(self, algorithm: Optional[str] = None,

@@ -48,10 +48,13 @@ def format_table(rows: list[list[str]], header: list[str]) -> str:
 # ---------------------------------------------------------------------------
 def primitive_usage_table(summary: dict, title: str = "") -> str:
     """``summary`` maps primitive name -> {calls, payload_bytes[,
-    wire_bytes][, max_skew]}.  ``max_skew`` (worst max/mean per-rank byte
-    ratio of any irregular op of that kind) adds a Skew column only when
-    some row carries it, so regular captures keep the classic layout."""
+    wire_bytes][, max_skew][, measured_s]}.  ``max_skew`` (worst max/mean
+    per-rank byte ratio of any irregular op of that kind) adds a Skew
+    column only when some row carries it; ``measured_s`` (trace-imported
+    wall time, schema v9) likewise adds a Measured column -- regular,
+    purely modeled captures keep the classic layout."""
     has_skew = any("max_skew" in summary[k] for k in summary)
+    has_meas = any("measured_s" in summary[k] for k in summary)
     rows = []
     for name in sorted(summary, key=lambda k: -summary[k].get("payload_bytes", 0)):
         row = summary[name]
@@ -60,12 +63,16 @@ def primitive_usage_table(summary: dict, title: str = "") -> str:
             cells.append(human_bytes(row["wire_bytes"]))
         if has_skew:
             cells.append(f"{row.get('max_skew', 1.0):.2f}x")
+        if has_meas:
+            cells.append(f"{row.get('measured_s', 0.0) * 1e3:.3f} ms")
         rows.append(cells)
     header = ["Communication Type", "Number of Calls", "Total Size"]
-    if rows and len(rows[0]) >= 4 + has_skew:
+    if rows and len(rows[0]) >= 4 + has_skew + has_meas:
         header.append("Wire Bytes")
     if has_skew:
         header.append("Skew (max/mean)")
+    if has_meas:
+        header.append("Measured")
     out = format_table(rows, header)
     if title:
         out = f"== {title} ==\n{out}"
@@ -132,6 +139,14 @@ def lint_table(findings, title: str = "") -> str:
     if title:
         out = f"== {title} ==\n{out}"
     return out
+
+
+def compare_table(result, title: str = "") -> str:
+    """Modeled-vs-measured table for a
+    :class:`~repro.core.trace.compare.CompareResult` (per-collective rows
+    plus per-kind / per-size-class aggregates -- the ``repro compare``
+    terminal rendering)."""
+    return result.table(title)
 
 
 def phase_diff_table(a_name: str, a_summary: dict,

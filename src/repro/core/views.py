@@ -200,6 +200,29 @@ class CommView:
         """Tier-overlapped communication time: ``max(ici_s, dcn_s)``."""
         return max(self.collective_seconds_split())
 
+    def op_seconds(self) -> list:
+        """Modeled seconds per op (aligned with ``self.ops``): each entry
+        is the op's serialized schedule time -- ``sum(time_split)`` --
+        times its execution weight.  ``None`` entries without a topology
+        (no time model); the compare layer matches these against the
+        measured ``op.measured_s`` values a trace import carries."""
+        def build():
+            if self.topo is None:
+                return [None] * len(self.ops)
+            out = []
+            for op, sched in zip(self.ops, self.schedules()):
+                out.append(sum(sched.time_split(self.topo))
+                           * max(1.0, op.weight))
+            return out
+        return self._cached("op_seconds", build)
+
+    def measured_seconds(self):
+        """Total measured wall seconds over ops carrying ``measured_s``
+        (trace imports, schema v9); ``None`` when no op is measured."""
+        vals = [op.measured_s for op in self.ops
+                if op.measured_s is not None]
+        return float(sum(vals)) if vals else None
+
     # -- physical-link view ------------------------------------------------
     def link_utilization(self):
         """Per-physical-link byte counts (None without a topology)."""

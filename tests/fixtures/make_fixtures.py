@@ -1,4 +1,4 @@
-"""Regenerate the committed lint-CI fixtures.
+"""Regenerate the committed lint- and compare-CI fixtures.
 
 Two saved multi-phase session reports mirroring the examples --
 ``examples/translation.py`` (GNMT fwd/bwd/optim on an 8-way data mesh) and
@@ -8,7 +8,21 @@ offline) and ``include_lint=True`` (so ``python -m repro lint <file>``
 serves the v7 findings as saved).  The CI fast job gates on
 ``--fail-on error`` over both files.
 
+On top of the reports, two trace fixtures for the ingestion subsystem
+(:mod:`repro.core.trace`), derived from the COMMITTED report JSONs so
+regenerating them never needs XLA:
+
+* ``translation_trace.json`` -- our own Perfetto export of
+  ``translation_report.json``; importing it must reproduce the report's
+  comm matrix bitwise (the round-trip CI gate);
+* ``serve_trace.csv`` -- a synthesized ComScribe-style nvprof GPU-trace
+  CSV of ``serve_report.json``'s collectives, one kernel row per
+  participating device, with deterministic measured durations
+  ``modeled * (1 + delta_i)`` (|delta| <= 0.08) so ``repro compare``
+  sees finite errors below the pinned CI bound (0.15).
+
 Run:  PYTHONPATH=src python tests/fixtures/make_fixtures.py
+      PYTHONPATH=src python tests/fixtures/make_fixtures.py --traces-only
 """
 import os
 
@@ -109,17 +123,103 @@ def serve_report():
     return sess.report()
 
 
+# deterministic measured-vs-modeled skew per op index (|delta| <= 0.08,
+# cycling): keeps every fixture rel err finite and below the CI bound
+_DELTAS = (0.05, -0.03, 0.07, -0.06, 0.02, -0.08, 0.04, -0.01)
+
+_NCCL_NAMES = {
+    "all-reduce": "ncclAllReduceRingLLKernel_sum_f32",
+    "all-gather": "ncclAllGatherRingLLKernel_f32",
+    "reduce-scatter": "ncclReduceScatterRingLLKernel_sum_f32",
+    "all-to-all": "ncclAllToAllRingKernel_f32",
+    "collective-broadcast": "ncclBroadcastRingLLKernel_f32",
+}
+
+
+def make_translation_trace():
+    """Perfetto export of the committed translation report (the bitwise
+    round-trip fixture)."""
+    from repro.core import CommReport
+    from repro.core.export.perfetto import export_perfetto
+
+    rep = CommReport.load(os.path.join(HERE, "translation_report.json"))
+    path = os.path.join(HERE, "translation_trace.json")
+    export_perfetto(rep, path)
+    print(f"translation_trace: {len(rep.compiled_ops)} collectives "
+          f"-> {path}")
+    return path
+
+
+def make_serve_trace():
+    """Synthesized nvprof GPU-trace CSV of the committed serve report:
+    one kernel row per device per collective (PtoP memcpy rows for the
+    permutes), durations = modeled * (1 + delta_i)."""
+    from repro.core import CommReport
+
+    rep = CommReport.load(os.path.join(HERE, "serve_report.json"))
+    view = rep.view()
+    secs = view.op_seconds()
+    mb = 1024.0 ** 2
+    dev = "Tesla V100-SXM2-16GB ({})"
+    lines = [
+        "==12345== NVPROF is profiling process 12345, "
+        "command: serve_lm",
+        "==12345== Profiling result:",
+        '"Start","Duration","Size","SrcDev","DstDev","Device","Name",'
+        '"Correlation_ID"',
+        "s,ms,MB,,,,,",
+    ]
+    start = 0.0
+    for i, (op, modeled) in enumerate(zip(rep.compiled_ops, secs)):
+        measured_ms = modeled * (1.0 + _DELTAS[i % len(_DELTAS)]) * 1e3
+        corr = 100 + i
+        if op.kind == "collective-permute":
+            size_mb = op.result_bytes / mb
+            for src, dst in op.source_target_pairs:
+                lines.append(
+                    f"{start:.6f},{measured_ms:.9f},{size_mb:.9f},"
+                    f'"{dev.format(src)}","{dev.format(dst)}",,'
+                    f'"[CUDA memcpy PtoP]",{corr}')
+        else:
+            kname = _NCCL_NAMES[op.kind]
+            size_mb = op.payload_bytes / mb
+            group = (op.replica_groups[0] if op.replica_groups
+                     else range(rep.num_devices))
+            for d in group:
+                lines.append(
+                    f"{start:.6f},{measured_ms:.9f},{size_mb:.9f},,,"
+                    f'"{dev.format(d)}","{kname}(...)",{corr}')
+        start += measured_ms * 1e-3
+    # one host transfer each way so row/col 0 of the matrix is exercised
+    lines.append(f'{start:.6f},0.100000000,1.000000000,,,'
+                 f'"{dev.format(0)}","[CUDA memcpy HtoD]",900')
+    lines.append(f'{start + 0.001:.6f},0.100000000,1.000000000,,,'
+                 f'"{dev.format(0)}","[CUDA memcpy DtoH]",901')
+    path = os.path.join(HERE, "serve_trace.csv")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"serve_trace: {len(rep.compiled_ops)} collectives -> {path}")
+    return path
+
+
+def make_traces():
+    make_translation_trace()
+    make_serve_trace()
+
+
 def main():
-    for stem, build in (("translation_report", translation_report),
-                        ("serve_report", serve_report)):
-        rep = build()
-        path = os.path.join(HERE, f"{stem}.json")
-        rep.save(path, include_hlo=True, include_lint=True)
-        findings = rep.lint()
-        print(f"{stem}: {len(rep.compiled_ops)} collectives, "
-              f"{len(findings)} lint findings -> {path}")
-        for f in findings:
-            print(f"  [{f.severity}] {f.rule_id}: {f.op_names}")
+    if "--traces-only" not in sys.argv:
+        for stem, build in (("translation_report", translation_report),
+                            ("serve_report", serve_report)):
+            rep = build()
+            path = os.path.join(HERE, f"{stem}.json")
+            rep.save(path, include_hlo=True, include_lint=True)
+            findings = rep.lint()
+            print(f"{stem}: {len(rep.compiled_ops)} collectives, "
+                  f"{len(findings)} lint findings -> {path}")
+            for f in findings:
+                print(f"  [{f.severity}] {f.rule_id}: {f.op_names}")
+    make_traces()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,326 @@
+"""The modeled-vs-measured compare layer and its CLI.
+
+Covers the matching rules (exact ``(phase, name)`` first, then per-kind
+FIFO), the rel-err / size-class math, the committed-fixture CI gate
+(``serve_trace.csv`` vs ``serve_report.json`` stays below the pinned
+0.15 bound -- the deltas baked into the fixture peak at 8.7%), and the
+``repro compare`` exit-code contract: 0 clean, 1 threshold, 2 usage.
+"""
+import json
+import os
+
+import pytest
+
+from repro import cli
+from repro.core import CommReport
+from repro.core.trace import load_trace
+from repro.core.trace.compare import (CompareResult, CompareRow, compare,
+                                      size_class)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+SERVE_CSV = os.path.join(FIXTURES, "serve_trace.csv")
+SERVE_REPORT = os.path.join(FIXTURES, "serve_report.json")
+
+#: the bound the CI gate pins; fixture deltas peak at 0.08/0.92 = 8.7%
+CI_REL_ERR_BOUND = 0.15
+
+
+# ---------------------------------------------------------------------------
+# row / bucket math
+# ---------------------------------------------------------------------------
+class TestRowMath:
+    def test_rel_err(self):
+        r = CompareRow(name="ar.1", kind="all-reduce", phase="fwd",
+                       payload_bytes=4096, modeled_s=0.9e-3,
+                       measured_s=1.0e-3)
+        assert r.rel_err == pytest.approx(0.1)
+
+    def test_rel_err_none_when_unmodeled_or_zero(self):
+        r = CompareRow("a", "all-reduce", "", 1, None, 1.0)
+        assert r.rel_err is None
+        r = CompareRow("a", "all-reduce", "", 1, 1.0, 0.0)
+        assert r.rel_err is None
+
+    @pytest.mark.parametrize("nbytes,label", [
+        (0, "<64KiB"),
+        (64 * 1024 - 1, "<64KiB"),
+        (64 * 1024, "64KiB-1MiB"),
+        ((1 << 20) - 1, "64KiB-1MiB"),
+        (1 << 20, "1-16MiB"),
+        ((16 << 20) - 1, "1-16MiB"),
+        (16 << 20, ">=16MiB"),
+        (1 << 30, ">=16MiB"),
+    ])
+    def test_size_class_boundaries(self, nbytes, label):
+        assert size_class(nbytes) == label
+
+    def test_bucket_stats_and_table(self):
+        rows = [
+            CompareRow("ar.1", "all-reduce", "fwd", 1024, 1.0e-3, 1.1e-3),
+            CompareRow("ar.2", "all-reduce", "bwd", 2 << 20, 2.0e-3,
+                       1.9e-3),
+            CompareRow("ag.1", "all-gather", "fwd", 512, 0.5e-3, 0.5e-3),
+        ]
+        res = CompareResult(rows=rows, measured_label="m",
+                            modeled_label="M")
+        s = res.stats()
+        assert s["count"] == 3
+        assert s["max_rel_err"] == pytest.approx(abs(1.1 - 1.0) / 1.1)
+        assert set(res.by_kind()) == {"all-reduce", "all-gather"}
+        assert set(res.by_size_class()) == {"<64KiB", "1-16MiB"}
+        txt = res.table(title="hdr")
+        assert "hdr" in txt and "ar.1" in txt and "RelErr" in txt
+        assert "3 matched" in txt
+        d = res.to_dict()
+        assert len(d["rows"]) == 3 and d["stats"]["count"] == 3
+
+
+# ---------------------------------------------------------------------------
+# matching
+# ---------------------------------------------------------------------------
+def _measured_report(ops_spec, num_devices=8, name="measured"):
+    """A topology-free report whose ops carry measured_s."""
+    from repro.core.trace.base import TraceImport
+    from repro.core.trace.normalize import measured_op
+
+    ops = [measured_op(kind, payload_bytes=nbytes,
+                       groups=[list(range(num_devices))], name=opname,
+                       measured_s=sec, phase=phase)
+           for (opname, kind, nbytes, sec, phase) in ops_spec]
+    return TraceImport(name=name, num_devices=num_devices,
+                       ops=ops).report()
+
+
+@pytest.fixture(scope="module")
+def serve_model():
+    return CommReport.load(SERVE_REPORT)
+
+
+class TestMatching:
+    def test_exact_phase_name_match_beats_fifo(self, serve_model):
+        # copy two modeled ops' identities exactly, but list them in
+        # reverse order: (phase, name) matching must pair them right
+        # (name alone is ambiguous -- prefill and decode reuse HLO names)
+        mview = serve_model.view()
+        secs = dict(zip([(op.phase, op.name) for op in mview.ops],
+                        mview.op_seconds()))
+        picks = [op for op in mview.ops if op.kind == "all-reduce"][:2]
+        assert len(picks) == 2
+        spec = [(op.name, op.kind, op.payload_bytes,
+                 secs[(op.phase, op.name)] * 1.05, op.phase)
+                for op in reversed(picks)]
+        res = compare(_measured_report(spec), serve_model)
+        by_key = {(r.phase, r.name): r for r in res.rows}
+        for op in picks:
+            row = by_key[(op.phase, op.name)]
+            assert row.modeled_s == \
+                pytest.approx(secs[(op.phase, op.name)])
+            assert row.rel_err == pytest.approx(0.05 / 1.05, rel=1e-6)
+
+    def test_fifo_matches_kth_measured_to_kth_modeled(self, serve_model):
+        # nvprof-style names never match HLO names: program order within
+        # a kind is the signal
+        mview = serve_model.view()
+        kinds = [op.kind for op in mview.ops]
+        secs = mview.op_seconds()
+        idx = [i for i, k in enumerate(kinds) if k == "all-to-all"][:2]
+        assert len(idx) == 2
+        spec = [(f"ncclAllToAll.r{j}", "all-to-all",
+                 mview.ops[i].payload_bytes, secs[i] * 1.02, "")
+                for j, i in enumerate(idx)]
+        res = compare(_measured_report(spec), serve_model)
+        assert [r.modeled_s for r in res.rows] == \
+            [pytest.approx(secs[i]) for i in idx]
+        assert res.unmatched_measured == 0
+
+    def test_unmatched_counts(self, serve_model):
+        # a kind the serve report has none of stays unmatched; leftover
+        # modeled ops are counted on the other side
+        n_model = len(serve_model.compiled_ops)
+        assert not any(op.kind == "all-gather"
+                       for op in serve_model.compiled_ops)
+        spec = [("x.1", "all-gather", 1024, 1e-3, ""),
+                ("y.1", "all-reduce", 1024, 1e-3, "")]
+        res = compare(_measured_report(spec), serve_model)
+        assert res.unmatched_measured == 1
+        assert res.unmatched_modeled == n_model - 1
+        assert len(res.rows) == 1
+
+    def test_no_overlap_raises(self, serve_model):
+        spec = [("x.1", "all-gather", 1024, 1e-3, "")]
+        with pytest.raises(ValueError, match="matched"):
+            compare(_measured_report(spec), serve_model)
+
+    def test_no_measured_ops_raises(self, serve_model):
+        with pytest.raises(ValueError, match="no measured ops"):
+            compare(serve_model, serve_model)
+
+    def test_own_model_needs_topology(self):
+        spec = [("x.1", "all-gather", 1024, 1e-3, "")]
+        with pytest.raises(ValueError, match="no topology"):
+            compare(_measured_report(spec))
+
+    def test_own_model_of_own_export(self, tmp_path):
+        # our own Perfetto export carries topology + measured_s: its
+        # import compares against its own cost model with zero error
+        # (the export stamps modeled durations when ops carry none)
+        from repro.core.export.perfetto import export_perfetto
+
+        rep = CommReport.load(
+            os.path.join(FIXTURES, "translation_report.json"))
+        path = export_perfetto(rep, str(tmp_path / "t.trace.json"))
+        res = load_trace(path).report().compare()
+        assert res.rows
+        # only the exporter's microsecond rounding separates the sides
+        assert res.max_rel_err() < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# the committed-fixture CI gate
+# ---------------------------------------------------------------------------
+class TestFixtureGate:
+    def test_serve_csv_vs_serve_report_below_bound(self, serve_model):
+        measured = load_trace(SERVE_CSV).report()
+        res = compare(measured, serve_model)
+        s = res.stats()
+        assert s["count"] == len(serve_model.compiled_ops)
+        assert s["unmatched_measured"] == 0
+        assert s["unmatched_modeled"] == 0
+        assert 0 < s["mean_rel_err"] < CI_REL_ERR_BOUND
+        assert 0 < s["max_rel_err"] < CI_REL_ERR_BOUND
+
+    def test_gate_survives_a_v9_save_load_cycle(self, tmp_path,
+                                                serve_model):
+        measured = load_trace(SERVE_CSV).report()
+        p = str(tmp_path / "imported.json")
+        measured.save(p)
+        res = compare(CommReport.load(p), serve_model)
+        assert res.max_rel_err() < CI_REL_ERR_BOUND
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+class TestExports:
+    @pytest.fixture()
+    def result(self, serve_model):
+        return compare(load_trace(SERVE_CSV).report(), serve_model)
+
+    def test_csv_export_header_and_rows(self, result, tmp_path):
+        from repro.core.export.csv_exporter import (COMPARE_COLUMNS,
+                                                    export_compare_csv)
+
+        path = export_compare_csv(result, str(tmp_path / "cmp.csv"))
+        with open(path) as f:
+            lines = f.read().splitlines()
+        assert lines[0] == ",".join(COMPARE_COLUMNS)
+        assert len(lines) == 1 + len(result.rows)
+
+    def test_html_export(self, result, tmp_path):
+        from repro.core.export.html_exporter import export_compare_html
+
+        path = export_compare_html([result], str(tmp_path / "cmp.html"))
+        html = open(path).read()
+        assert "Modeled vs measured" in html
+        assert "size class" in html
+
+    def test_measured_panel_in_report_html(self, tmp_path):
+        # an imported report's regular HTML export grows the compare
+        # panel; a purely modeled report's does not
+        from repro.core.export.html_exporter import export_html
+
+        rep = load_trace(os.path.join(
+            FIXTURES, "translation_trace.json")).report()
+        html = open(export_html(rep, str(tmp_path / "m.html"))).read()
+        assert "modeled vs measured" in html
+        modeled = CommReport.load(
+            os.path.join(FIXTURES, "translation_report.json"))
+        html2 = open(export_html(modeled,
+                                 str(tmp_path / "p.html"))).read()
+        assert "modeled vs measured" not in html2
+
+    def test_reporter_compare_table(self, result):
+        from repro.core import reporter
+
+        txt = reporter.compare_table(result, title="T")
+        assert txt.startswith("T")
+        assert "RelErr" in txt
+
+
+# ---------------------------------------------------------------------------
+# CLI: repro compare
+# ---------------------------------------------------------------------------
+class TestCli:
+    def test_exit_0_and_table_on_stdout(self, capsys):
+        rc = cli.main(["compare", SERVE_CSV, SERVE_REPORT,
+                       "--fail-on", f"rel-err={CI_REL_ERR_BOUND}"])
+        out, err = capsys.readouterr()
+        assert rc == 0
+        assert "RelErr" in out and "matched" in out
+        assert "imported" in err        # logs stay on stderr
+
+    def test_exit_1_when_threshold_hit(self, capsys):
+        rc = cli.main(["compare", SERVE_CSV, SERVE_REPORT,
+                       "--fail-on", "rel-err=0.01"])
+        _, err = capsys.readouterr()
+        assert rc == 1
+        assert "exceeds --fail-on" in err
+
+    def test_json_stdout_is_pure(self, capsys, tmp_path):
+        save = str(tmp_path / "imported.json")
+        rc = cli.main(["compare", SERVE_CSV, SERVE_REPORT, "--json",
+                       "--save-import", save])
+        out, err = capsys.readouterr()
+        assert rc == 0
+        doc = json.loads(out)            # stdout parses as one document
+        assert doc["stats"]["count"] > 0
+        assert doc["rows"]
+        assert "imported" in err
+        # the saved import feeds a second, trace-free compare run
+        rc = cli.main(["compare", save, SERVE_REPORT,
+                       "--fail-on", f"rel-err={CI_REL_ERR_BOUND}"])
+        assert rc == 0
+
+    def test_exports_land_in_out_dir(self, capsys, tmp_path):
+        rc = cli.main(["compare", SERVE_CSV, SERVE_REPORT,
+                       "--formats", "csv,html", "--out", str(tmp_path)])
+        _, err = capsys.readouterr()
+        assert rc == 0
+        assert os.path.exists(tmp_path / "serve_trace_compare.csv")
+        assert os.path.exists(tmp_path / "serve_trace_compare.html")
+        assert "[csv]" in err and "[html]" in err
+
+    def test_exit_2_on_bad_threshold(self, capsys):
+        rc = cli.main(["compare", SERVE_CSV, SERVE_REPORT,
+                       "--fail-on", "latency=9"])
+        _, err = capsys.readouterr()
+        assert rc == 2
+        assert "rel-err=<float>" in err
+
+    def test_exit_2_on_bad_format(self, capsys):
+        rc = cli.main(["compare", SERVE_CSV, SERVE_REPORT,
+                       "--fmt", "vtune"])
+        _, err = capsys.readouterr()
+        assert rc == 2
+        assert "valid formats" in err
+
+    def test_exit_2_on_missing_trace(self, capsys):
+        rc = cli.main(["compare", "/nonexistent/trace.json",
+                       SERVE_REPORT])
+        _, err = capsys.readouterr()
+        assert rc == 2
+        assert "not found" in err
+
+    def test_exit_2_on_unknown_config(self, capsys):
+        rc = cli.main(["compare", SERVE_CSV, "no_such_config"])
+        _, err = capsys.readouterr()
+        assert rc == 2
+        assert "known configs" in err
+
+    def test_exit_2_on_malformed_trace(self, capsys, tmp_path):
+        bad = tmp_path / "bad.jsonl"
+        bad.write_text('{"kind": "all-reduce", "dur": 1.0, "by')
+        rc = cli.main(["compare", str(bad), SERVE_REPORT])
+        _, err = capsys.readouterr()
+        assert rc == 2
+        assert "line 1" in err

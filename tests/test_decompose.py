@@ -407,7 +407,7 @@ class TestScheduleSerialization:
         p = str(tmp_path / "s.json")
         rep.save(p, include_schedules=True)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v8"
+        assert d["schema"] == "repro.comm_report.v9"
         assert len(d["schedules"]) == 1
         assert {ph["tier"] for ph in d["schedules"][0]["phases"]} == \
             {"ici", "dcn"}

@@ -110,7 +110,7 @@ class TestSchemaSections:
         p = str(tmp_path / "v6.json")
         report.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v8"
+        assert d["schema"] == "repro.comm_report.v9"
         assert len(d["link_matrix"]) == report.num_devices + 1
         assert d["links"], "per-link rows missing"
         for row in d["links"]:
@@ -249,7 +249,7 @@ class TestSparseSerialization:
         p = str(tmp_path / "s.json")
         rep.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v8"
+        assert d["schema"] == "repro.comm_report.v9"
         assert d["matrix"]["format"] == "coo"
         assert len(d["matrix"]["src"]) == rep.matrix.nnz
         assert all(m["format"] == "coo"

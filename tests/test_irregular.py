@@ -278,7 +278,7 @@ class TestVectorValidation:
 # ---------------------------------------------------------------------------
 class TestSchemaV8:
     def test_schema_string(self):
-        assert serialize.SCHEMA == "repro.comm_report.v8"
+        assert serialize.SCHEMA == "repro.comm_report.v9"
         assert serialize.SCHEMA_V7 in serialize.ACCEPTED_SCHEMAS
 
     def test_op_round_trip_with_vector(self):
@@ -325,7 +325,7 @@ class TestSchemaV8:
         p = str(tmp_path / "r.json")
         rep.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v8"
+        assert d["schema"] == "repro.comm_report.v9"
         back = CommReport.load(p)
         got = back.compiled_ops[0]
         np.testing.assert_array_equal(got.byte_vector(), vec)

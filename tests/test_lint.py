@@ -438,7 +438,7 @@ class TestReportLint:
         p = str(tmp_path / "r.json")
         pod_report.save(p, include_lint=True)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v8"
+        assert d["schema"] == "repro.comm_report.v9"
         assert d["lint"], "lint section missing"
         from repro.core import CommReport
         back = CommReport.load(p)

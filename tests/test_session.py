@@ -335,7 +335,7 @@ class TestSchemaRoundTrip:
         p = str(tmp_path / "v6.json")
         rep.save(p)
         d = json.loads(open(p).read())
-        assert d["schema"] == "repro.comm_report.v8"
+        assert d["schema"] == "repro.comm_report.v9"
         assert [ph["name"] for ph in d["phases"]] == ["fwd", "bwd", "optim"]
         assert all("phase" in op for op in d["ops"])
         back = CommReport.load(p)
