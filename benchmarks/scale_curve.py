@@ -82,6 +82,10 @@ def main():
     t_sparse = _time(lambda: comm_matrix.matrix_for_ops(ops1k, 1024,
                                                         sparse=True))
     ratio = t_sparse / t_dense
+    assert ratio <= 1.5, (
+        f"sparse build is {ratio:.2f}x the dense build at 1024 devices "
+        f"(acceptance bar: 1.5x -- the counting-sort coalesce should keep "
+        f"COO accumulation within range of np.add.at)")
     rows.append(["1024", "500", f"{t_dense * 1e3:.1f}",
                  f"{t_sparse * 1e3:.1f}", f"{sparse.nnz:,}"])
     record("scale_curve/1024dev/dense_ms", t_dense * 1e3, "dense_np_add_at")

@@ -1,0 +1,233 @@
+"""Batched schedule evaluation vs the per-op decompose loop.
+
+A monitored training step replays the same few collective *shapes*
+thousands of times (every layer's all-reduce is byte-identical; an MoE
+layer repeats one skewed all-to-all per step).  The batched engine --
+signature-memoized :func:`~repro.core.decompose.cached_decompose`,
+deduping :func:`~repro.core.decompose.schedules_for_ops`, columnar
+:class:`~repro.core.decompose.ScheduleBatch` -- runs decompose -> place ->
+bill -> time once per *distinct* shape instead of once per op.
+
+This benchmark times the full derived-artifact build (dense comm matrix +
+execution-weighted per-tier time split) both ways on repeated-shape
+streams (regular kinds + irregular hot-expert all-to-all) at 256 / 1024
+devices x 2k / 10k ops, asserts **bitwise** agreement, and requires the
+acceptance bar: **>= 3x end-to-end on the 10k-op cells**.  Every batched
+run starts from cleared caches, so the speedup measures within-stream
+dedup + columnar math, not leftover warm state.
+
+Metrics land in ``artifacts/BENCH_schedule.json``; the fast CI job runs
+this module and the guard asserts the batched path stays within **1.5x**
+of the recorded per-op-normalized baseline on the 1024dev/10k-op cell.
+"""
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, emit
+from repro.core import comm_matrix
+from repro.core.decompose import (ScheduleBatch, clear_schedule_cache,
+                                  decompose, schedule_cache)
+from repro.core.cost_models import clear_billing_caches
+from repro.core.events import CollectiveOp, Shape
+from repro.core.reporter import format_table
+from repro.core.topology import MeshTopology
+
+REGULAR_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                 "collective-broadcast", "all-to-all",
+                 "collective-permute")
+
+
+def _prototypes(num_devices: int, seed: int, pool: int = 32):
+    """``pool`` distinct op shapes: 3/4 regular kinds over partition
+    groups, 1/4 irregular all-to-all with a hot-expert byte vector."""
+    rng = np.random.default_rng(seed)
+    protos = []
+    n_irregular = pool // 4
+    for i in range(pool - n_irregular):
+        kind = REGULAR_KINDS[int(rng.integers(len(REGULAR_KINDS)))]
+        elems = int(rng.integers(1, 1 << 14))
+        if kind == "collective-permute":
+            perm = rng.permutation(num_devices)
+            pairs = [(int(perm[j]), int(perm[(j + 1) % len(perm)]))
+                     for j in range(len(perm))]
+            protos.append(CollectiveOp(
+                kind=kind, name=f"proto{i}",
+                result_shapes=[Shape("f32", (elems,))],
+                replica_groups=[], source_target_pairs=pairs))
+            continue
+        sizes = ((4, 8, 16) if kind == "all-to-all"
+                 else (8, 16, 64, num_devices))
+        gsize = int(rng.choice([s for s in sizes if s <= num_devices]))
+        devs = rng.permutation(num_devices)
+        groups = [sorted(int(d) for d in devs[k:k + gsize])
+                  for k in range(0, num_devices, gsize)]
+        protos.append(CollectiveOp(
+            kind=kind, name=f"proto{i}",
+            result_shapes=[Shape("f32", (elems,))],
+            replica_groups=groups))
+    for i in range(n_irregular):
+        gsize = int(rng.choice((4, 8, 16)))
+        devs = rng.permutation(num_devices)
+        groups = [sorted(int(d) for d in devs[k:k + gsize])
+                  for k in range(0, num_devices, gsize)]
+        total = float(rng.integers(1 << 10, 1 << 20))
+        vec = rng.random(gsize) + 0.1
+        vec[int(rng.integers(gsize))] *= 8.0          # the hot expert
+        vec = vec / vec.sum() * total
+        protos.append(CollectiveOp(
+            kind="all-to-all", name=f"iproto{i}",
+            result_shapes=[Shape("f32", (1,))],
+            replica_groups=groups,
+            bytes_per_rank_vec=[float(x) for x in vec]))
+    return protos
+
+
+def repeated_ops(num_ops: int, num_devices: int,
+                 seed: int = 0) -> list[CollectiveOp]:
+    """A repeated-shape stream: ``num_ops`` draws from a 32-prototype
+    pool, each with a fresh name and loop-trip weight (neither enters the
+    memoization signature, so a training loop's layer-repeated collectives
+    dedupe to the pool)."""
+    rng = np.random.default_rng(seed + 1)
+    protos = _prototypes(num_devices, seed)
+    return [dataclasses.replace(
+        protos[int(rng.integers(len(protos)))], name=f"op{i}",
+        weight=float(rng.integers(1, 65))) for i in range(num_ops)]
+
+
+def per_op_eval(ops, num_devices: int, topo):
+    """The pre-batching oracle: decompose EVERY op, place and time it
+    individually.  Mirrors the replaced code paths exactly -- per-op
+    ``np.add.at`` flushes in op order, sequential weighted time sums."""
+    mat = np.zeros((num_devices + 1, num_devices + 1), dtype=np.float64)
+    ici = dcn = 0.0
+    for op in ops:
+        sched = decompose(op, "ring", topo, warn=False)
+        src, dst, val = comm_matrix.schedule_edge_arrays(sched)
+        w = max(1.0, getattr(op, "weight", 1.0))
+        if src.size:
+            keep = (src < num_devices) & (dst < num_devices)
+            np.add.at(mat, (src[keep] + 1, dst[keep] + 1), val[keep] * w)
+        i, d = sched.time_split(topo)
+        ici += i * w
+        dcn += d * w
+    return mat, (ici, dcn)
+
+
+def batched_eval(ops, num_devices: int, topo):
+    """The engine under test, cold: cleared schedule/billing caches, then
+    the production view path -- ONE :class:`ScheduleBatch` feeding both
+    the matrix build and the columnar time split (exactly how
+    ``CommView.schedule_batch`` shares the IR across its artifacts)."""
+    clear_schedule_cache()
+    clear_billing_caches()
+    batch = ScheduleBatch.from_ops(ops, "ring", topo, warn=False)
+    mat = comm_matrix.matrix_for_schedules(ops, batch, num_devices)
+    split = batch.total_time_split(topo)
+    return mat, split
+
+
+def _time(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _baseline_guard(metrics: dict[str, float]) -> None:
+    """Fast-CI perf guard, per-op-loop-normalized (the loop's time on the
+    same machine is the yardstick, so the guard compares code, not runner
+    hardware): the batched path's speedup on the 1024dev/10k-op cell must
+    stay within 1.5x of the recorded ``BENCH_schedule.json`` baseline."""
+    path = os.path.join(ARTIFACTS, "BENCH_schedule.json")
+    if not os.path.exists(path):
+        print("[schedule] no recorded baseline; skipping the 1.5x guard")
+        return
+    try:
+        with open(path) as f:
+            base = json.load(f)["metrics"]
+        base_speedup = base["schedule_eval/1024dev/10000ops/speedup"]
+    except (KeyError, ValueError, OSError):
+        print("[schedule] unreadable baseline; skipping the 1.5x guard")
+        return
+    cur_speedup = metrics["schedule_eval/1024dev/10000ops/speedup"]
+    ratio = base_speedup / cur_speedup
+    assert ratio <= 1.5, (
+        f"batched engine regressed to {ratio:.2f}x the recorded baseline "
+        f"on the 1024dev/10k-op cell (speedup {cur_speedup:.1f}x now vs "
+        f"{base_speedup:.1f}x recorded; allowed: 1.5x)")
+    print(f"[schedule] baseline guard OK: {ratio:.2f}x the recorded "
+          f"per-op-normalized batched time (limit 1.5x)")
+
+
+def main():
+    cases = [  # (devices, ops); the 10k cells are the acceptance bar
+        (256, 2000),
+        (256, 10000),
+        (1024, 2000),
+        (1024, 10000),
+    ]
+    rows = []
+    metrics: dict[str, float] = {}
+
+    def record(name, value, derived=""):
+        metrics[name] = float(value)
+        emit(name, value, derived)
+
+    accept = {}
+    for num_devices, num_ops in cases:
+        side = int(round(num_devices ** 0.5))
+        topo = MeshTopology(axis_names=("data", "model"),
+                            axis_sizes=(side, num_devices // side))
+        ops = repeated_ops(num_ops, num_devices)
+
+        ref_mat, ref_split = per_op_eval(ops, num_devices, topo)
+        bat_mat, bat_split = batched_eval(ops, num_devices, topo)
+        assert np.array_equal(ref_mat, bat_mat), \
+            f"matrix mismatch at {num_devices}dev/{num_ops}ops"
+        assert ref_split == bat_split, \
+            f"time-split mismatch at {num_devices}dev/{num_ops}ops: " \
+            f"{ref_split} vs {bat_split}"
+        distinct = schedule_cache().misses or len(schedule_cache())
+
+        t_ref = _time(lambda: per_op_eval(ops, num_devices, topo),
+                      repeats=1)
+        t_bat = _time(lambda: batched_eval(ops, num_devices, topo))
+        speedup = t_ref / t_bat
+        if num_ops == 10000:
+            accept[num_devices] = speedup
+        rows.append([f"{num_devices}", f"{num_ops:,}", f"{distinct}",
+                     f"{t_ref * 1e3:.1f}", f"{t_bat * 1e3:.1f}",
+                     f"{speedup:.1f}x"])
+        tag = f"schedule_eval/{num_devices}dev/{num_ops}ops"
+        record(f"{tag}/per_op_ms", t_ref * 1e3, "per_op_decompose_loop")
+        record(f"{tag}/batched_ms", t_bat * 1e3,
+               "memoized_columnar_engine")
+        record(f"{tag}/speedup", speedup, "per_op_ms/batched_ms")
+
+    print(format_table(rows, ["devices", "ops", "distinct shapes",
+                              "per-op ms", "batched ms", "speedup"]))
+    for dev, sp in accept.items():
+        assert sp >= 3.0, (
+            f"batched engine must be >= 3x the per-op loop on the "
+            f"{dev}dev/10k-op repeated-shape stream (got {sp:.1f}x)")
+    print(f"[schedule] batched engine bitwise-matches the per-op loop and "
+          f"is {min(accept.values()):.1f}x+ faster on the 10k-op cells")
+    _baseline_guard(metrics)      # vs the recorded artifact, pre-overwrite
+
+    out = os.path.join(ARTIFACTS, "BENCH_schedule.json")
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"benchmark": "schedule_eval", "metrics": metrics}, f,
+                  indent=2, sort_keys=True)
+    print(f"[schedule] wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -102,9 +102,15 @@ def _cmd_sweep(args) -> int:
         return 2
     if args.scale_curve:
         return _cmd_scale_curve(args, sweep_mod)
+    try:
+        jobs = sweep_mod.resolve_jobs(args.jobs)
+    except ValueError:
+        print(f"error: --jobs wants an int or 'auto', got {args.jobs!r}",
+              file=sys.stderr)
+        return 2
     result = sweep_mod.run_sweep(
         _split(args.configs), _split(args.meshes), _split(args.algorithms),
-        cache=_cache_from(args), use_cache=not args.no_cache)
+        cache=_cache_from(args), use_cache=not args.no_cache, jobs=jobs)
     if not result.reports:
         print("no cell finished; failures:", file=sys.stderr)
         for f in result.failures:
@@ -147,10 +153,16 @@ def _cmd_scale_curve(args, sweep_mod) -> int:
         print(f"error: --scale-points wants comma-separated ints, got "
               f"{args.scale_points!r}", file=sys.stderr)
         return 2
+    try:
+        jobs = sweep_mod.resolve_jobs(args.jobs)
+    except ValueError:
+        print(f"error: --jobs wants an int or 'auto', got {args.jobs!r}",
+              file=sys.stderr)
+        return 2
     result, points = sweep_mod.run_scale_curve(
         _split(args.configs), _split(args.meshes), _split(args.algorithms),
         device_counts=device_counts,
-        cache=_cache_from(args), use_cache=not args.no_cache)
+        cache=_cache_from(args), use_cache=not args.no_cache, jobs=jobs)
     if not result.reports:
         print("no cell finished; failures:", file=sys.stderr)
         for f in result.failures:
@@ -485,6 +497,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--scale-points", default="256,1024,4096,16384",
                    dest="scale_points",
                    help="comma list of fleet device counts for --scale-curve")
+    p.add_argument("--jobs", "-j", default="1",
+                   help="evaluate (config, mesh) cells on N worker threads "
+                        "('-j auto' = one per CPU).  Output is identical "
+                        "to the default serial run (-j 1, the CI setting): "
+                        "results are assembled in deterministic order")
     p.add_argument("--formats", default="json,csv,html,perfetto")
     p.add_argument("--out", default=os.path.join("artifacts", "sweep"))
     p.add_argument("--devices", type=int, default=8)

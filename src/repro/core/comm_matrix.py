@@ -159,7 +159,7 @@ def op_edges(op: CollectiveOp, algorithm: str = "ring",
     instead (silently degenerating is exactly the matrix/model mismatch
     this module exists to expose).
     """
-    sched = decompose(op, algorithm, topo)
+    sched = decompose_mod.cached_decompose(op, algorithm, topo)
     edges: list[tuple[int, int, float]] = []
     for ph in sched.phases:
         edges += _phase_edges(ph)
@@ -302,7 +302,8 @@ def op_edge_arrays(op: CollectiveOp, algorithm: str = "ring",
     and emits the same :class:`HierarchicalFallbackWarning` in the same
     refusal case.
     """
-    return schedule_edge_arrays(decompose(op, algorithm, topo))
+    return schedule_edge_arrays(
+        decompose_mod.cached_decompose(op, algorithm, topo))
 
 
 # flush threshold for the batched COO accumulation: large enough to amortize
@@ -338,10 +339,26 @@ def matrix_for_ops(
     tractable.
     """
     cost_models.validate_algorithm(algorithm)
-    return _accumulate_edges(
-        ((op, op_edge_arrays(op, algorithm, topo))
-         for op in ops if kinds is None or op.kind in kinds),
-        num_devices, sparse=sparse)
+    kept = [op for op in ops if kinds is None or op.kind in kinds]
+    scheds = decompose_mod.schedules_for_ops(kept, algorithm, topo,
+                                             warn=True)
+    return _accumulate_edges(_edge_pairs(kept, scheds, None, {}),
+                             num_devices, sparse=sparse)
+
+
+def _edge_pairs(ops, schedules, kinds, edge_cache: dict):
+    """``(op, (src, dst, val))`` pairs in op order, with edge arrays built
+    once per *distinct* schedule object (``id``-keyed, which the deduped
+    ``schedules_for_ops`` output makes meaningful).  Accumulation stays
+    per-op so the float addition order -- and hence the matrix, bitwise --
+    is identical to the uncached path."""
+    for op, sched in zip(ops, schedules):
+        if kinds is not None and op.kind not in kinds:
+            continue
+        e = edge_cache.get(id(sched))
+        if e is None:
+            e = edge_cache[id(sched)] = schedule_edge_arrays(sched)
+        yield op, e
 
 
 def matrix_for_schedules(
@@ -354,13 +371,21 @@ def matrix_for_schedules(
     The entry point for callers that already hold the ops' decomposition
     schedules (e.g. a :class:`~repro.core.views.CommView`'s memoized IR):
     identical accumulation to :func:`matrix_for_ops` without re-running
-    :func:`~repro.core.decompose.decompose` per op.  ``sparse=True``
-    builds the COO :class:`~repro.core.sparse.SparseCommMatrix` form.
+    :func:`~repro.core.decompose.decompose` per op.  ``schedules`` may be
+    the plain aligned list or a :class:`~repro.core.decompose.
+    ScheduleBatch` -- the batch's persistent ``edge_cache`` then carries
+    rendered COO edge arrays across calls (the whole-matrix build and
+    every per-primitive slice of one view pay edge generation once per
+    distinct schedule).  ``sparse=True`` builds the COO
+    :class:`~repro.core.sparse.SparseCommMatrix` form.
     """
+    if isinstance(schedules, decompose_mod.ScheduleBatch):
+        edge_cache = schedules.edge_cache
+        schedules = schedules.schedules
+    else:
+        edge_cache = {}
     return _accumulate_edges(
-        ((op, schedule_edge_arrays(sched))
-         for op, sched in zip(ops, schedules)
-         if kinds is None or op.kind in kinds),
+        _edge_pairs(ops, schedules, kinds, edge_cache),
         num_devices, sparse=sparse)
 
 

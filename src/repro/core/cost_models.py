@@ -30,7 +30,6 @@ re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Iterable, Optional
 
@@ -38,13 +37,28 @@ import numpy as np
 
 from . import decompose as _dec
 from .decompose import (A2A_KINDS, ALGORITHMS,  # noqa: F401
-                        HIERARCHICAL_KINDS, HierarchicalFallbackWarning,
-                        a2a_decomposition, effective_byte_vector,
-                        effective_pods, hier_phases,
+                        HIERARCHICAL_KINDS, BoundedCache,
+                        HierarchicalFallbackWarning, a2a_decomposition,
+                        effective_byte_vector, effective_pods, hier_phases,
                         hierarchical_decomposition, tree_children,
                         tree_subtree_sizes, validate_algorithm)
 from .events import CollectiveOp
 from .topology import MeshTopology
+
+# Bounded signature-keyed caches for the Table-1 entry points.  These used
+# to be ``functools.lru_cache`` on the helper functions -- unbounded in
+# practice for long-running sessions (every distinct (kind, payload, n,
+# algorithm, pods) tuple pinned forever) and invisible to invalidation.
+# The explicit :class:`~repro.core.decompose.BoundedCache` keeps the same
+# hit rate on real workloads (shape diversity is tiny) with a hard cap.
+_PER_RANK_CACHE = BoundedCache(maxsize=8192)
+_GROUP_TOTAL_CACHE = BoundedCache(maxsize=8192)
+
+
+def clear_billing_caches() -> None:
+    """Drop the memoized Table-1 entries (tests, post-spec mutation)."""
+    _PER_RANK_CACHE.clear()
+    _GROUP_TOTAL_CACHE.clear()
 
 
 def wire_bytes_per_rank(kind: str, payload: float, n: int,
@@ -100,17 +114,22 @@ def wire_bytes_per_rank(kind: str, payload: float, n: int,
     return float(max(totals.values(), default=0.0))
 
 
-@functools.lru_cache(maxsize=8192)
 def _per_rank_cached(kind: str, payload: float, n: int, algorithm: str,
                      pods: int) -> float:
     """Scalar-cached per-rank sum over the abstract phase plan (ops repeat
     the same (kind, payload, n) tuples across summaries, the Perfetto
     exporter's per-op args, and matrices, so the schedule is built once
     per distinct entry)."""
+    key = (kind, payload, n, algorithm, pods)
+    hit = _PER_RANK_CACHE.get(key)
+    if hit is not None:
+        return hit
     phases = _dec.group_phases(kind, payload, np.arange(n, dtype=np.intp),
                                algorithm, topo=None, pods=pods,
                                warn=False)
-    return float(sum(ph.bytes_per_rank for ph in phases))
+    out = float(sum(ph.bytes_per_rank for ph in phases))
+    _PER_RANK_CACHE.put(key, out)
+    return out
 
 
 def wire_bytes_received_per_rank(kind: str, payload: float, n: int,
@@ -148,13 +167,18 @@ def wire_bytes_group_total(kind: str, payload: float, n: int,
     return float(sum(ph.total_send_bytes() for ph in phases))
 
 
-@functools.lru_cache(maxsize=8192)
 def _group_total_cached(kind: str, payload: float, n: int, algorithm: str,
                         pods: int) -> float:
+    key = (kind, payload, n, algorithm, pods)
+    hit = _GROUP_TOTAL_CACHE.get(key)
+    if hit is not None:
+        return hit
     phases = _dec.group_phases(kind, payload, np.arange(n, dtype=np.intp),
                                algorithm, topo=None, pods=pods,
                                warn=False)
-    return float(sum(ph.total_send_bytes() for ph in phases))
+    out = float(sum(ph.total_send_bytes() for ph in phases))
+    _GROUP_TOTAL_CACHE.put(key, out)
+    return out
 
 
 def device_send_bytes(kind: str, payload: float, group: list[int],
@@ -211,7 +235,8 @@ def collective_time_split(op: CollectiveOp, topo: MeshTopology,
       payload at the per-chip DCN share -- it is NOT silently rebilled as
       hierarchical (that would contradict the matrix's edge placement).
     """
-    return _dec.decompose(op, algorithm, topo, warn=False).time_split(
+    return _dec.cached_decompose(op, algorithm, topo,
+                                 warn=False).time_split(
         topo, include_latency=include_latency)
 
 
@@ -246,15 +271,14 @@ def total_time_split(ops: Iterable[CollectiveOp], topo: MeshTopology,
     ``total_time == sum(total_time_split)`` by construction; the overlap
     roofline bound takes ``max`` of these instead of their sum (ICI and DCN
     are independent fabrics, so their busy times can fully overlap).
+    Evaluated through the columnar :class:`~repro.core.decompose.
+    ScheduleBatch` (decompose once per distinct shape, per-tier sums as
+    array expressions) -- bitwise identical to the per-op loop it
+    replaced.
     """
-    ici = dcn = 0.0
-    for op in ops:
-        i, d = collective_time_split(op, topo, algorithm,
-                                     include_latency=include_latency)
-        w = max(1.0, getattr(op, "weight", 1.0))
-        ici += i * w
-        dcn += d * w
-    return ici, dcn
+    batch = _dec.ScheduleBatch.from_ops(list(ops), algorithm, topo,
+                                        warn=False)
+    return batch.total_time_split(topo, include_latency=include_latency)
 
 
 def contention_time(ops: Iterable[CollectiveOp], topo: MeshTopology,

@@ -42,7 +42,8 @@ import numpy as np
 
 from . import hlo_cost, hlo_parser
 from .decompose import (CommPhase, CollectiveSchedule, HIERARCHICAL_KINDS,
-                        decompose, hierarchical_decomposition)
+                        cached_decompose, decompose,  # noqa: F401
+                        hierarchical_decomposition)
 from .events import CollectiveOp, Shape
 from .topology import MeshTopology
 
@@ -238,8 +239,10 @@ class LintContext:
                 include_latency: bool = True) -> float:
         if self.topo is None:
             return 0.0
-        sched = decompose(op, algorithm or self.algorithm, self.topo,
-                          warn=False)
+        # memoized: a rule pricing its suggested alternative re-decomposes
+        # the same shapes the capture already decomposed
+        sched = cached_decompose(op, algorithm or self.algorithm, self.topo,
+                                 warn=False)
         ici, dcn = sched.time_split(self.topo,
                                     include_latency=include_latency)
         return ici + dcn
@@ -254,8 +257,8 @@ class LintContext:
                   algorithm: Optional[str] = None) -> float:
         if self.topo is None:
             return 0.0
-        sched = decompose(op, algorithm or self.algorithm, self.topo,
-                          warn=False)
+        sched = cached_decompose(op, algorithm or self.algorithm, self.topo,
+                                 warn=False)
         return sum(ph.total_send_bytes() for ph in sched.phases
                    if ph.tier == "dcn")
 

@@ -24,7 +24,7 @@ from typing import Iterable, Optional
 import numpy as np
 
 from . import comm_matrix, cost_models, hlo_parser
-from .decompose import schedules_for_ops
+from .decompose import ScheduleBatch
 from .events import CollectiveOp, HostTransfer
 from .sparse import SPARSE_DEVICE_THRESHOLD
 from .topology import MeshTopology
@@ -129,7 +129,7 @@ class CommView:
         """
         def build():
             mat = comm_matrix.matrix_for_schedules(
-                self.ops, self.schedules(), self.num_devices,
+                self.ops, self.schedule_batch(), self.num_devices,
                 sparse=self.use_sparse)
             if self.host_transfers:
                 comm_matrix.add_host_transfers(mat, self.host_transfers)
@@ -141,7 +141,7 @@ class CommView:
         """Paper Fig. 3: one matrix per collective primitive."""
         def build():
             return {k: comm_matrix.matrix_for_schedules(
-                        self.ops, self.schedules(), self.num_devices,
+                        self.ops, self.schedule_batch(), self.num_devices,
                         kinds={k}, sparse=self.use_sparse)
                     for k in sorted({op.kind for op in self.ops})}
         return self._cached("per_primitive", build)
@@ -159,17 +159,24 @@ class CommView:
                                         topo=self.topo)))
 
     # -- decomposition schedules -------------------------------------------
+    def schedule_batch(self) -> ScheduleBatch:
+        """The columnar :class:`~repro.core.decompose.ScheduleBatch` over
+        this binding's ops -- deduped by op signature (``decompose`` runs
+        once per *distinct shape*, not once per op), memoized, and shared
+        by every derived artifact: :attr:`matrix` / :attr:`per_primitive`
+        reuse its per-schedule edge cache, the time models read its flat
+        phase columns, the Perfetto exporter slices its per-op phase
+        seconds.  Built with fallback warnings on, like the placement
+        always warned."""
+        return self._cached("schedule_batch", lambda: (
+            ScheduleBatch.from_ops(self.ops, self.algorithm, self.topo,
+                                   warn=True)))
+
     def schedules(self) -> list:
         """One :class:`~repro.core.decompose.CollectiveSchedule` per op
-        (aligned with ``self.ops``) -- the phase IR every derived artifact
-        reads: :attr:`matrix` / :attr:`per_primitive` accumulate its
-        edges, :meth:`collective_seconds_split` sums its per-tier times,
-        the Perfetto exporter renders its lanes.  Built once (with
-        fallback warnings, like the placement always warned) and memoized;
-        ``decompose`` runs at most once per op per binding."""
-        return self._cached("schedules", lambda: (
-            schedules_for_ops(self.ops, self.algorithm, self.topo,
-                              warn=True)))
+        (aligned with ``self.ops``; ops sharing a signature share one
+        schedule object) -- the phase IR every derived artifact reads."""
+        return self.schedule_batch().schedules
 
     def schedule_summaries(self) -> list[dict]:
         """Serializable per-op schedule summaries (schema-v5 section)."""
@@ -187,13 +194,7 @@ class CommView:
         def build():
             if self.topo is None:
                 return 0.0, 0.0
-            ici = dcn = 0.0
-            for op, sched in zip(self.ops, self.schedules()):
-                i, d = sched.time_split(self.topo)
-                w = max(1.0, op.weight)
-                ici += i * w
-                dcn += d * w
-            return ici, dcn
+            return self.schedule_batch().total_time_split(self.topo)
         return self._cached("seconds_split", build)
 
     def collective_overlap_seconds(self) -> float:
@@ -209,11 +210,9 @@ class CommView:
         def build():
             if self.topo is None:
                 return [None] * len(self.ops)
-            out = []
-            for op, sched in zip(self.ops, self.schedules()):
-                out.append(sum(sched.time_split(self.topo))
-                           * max(1.0, op.weight))
-            return out
+            batch = self.schedule_batch()
+            ici, dcn = batch.time_split_per_op(self.topo)
+            return ((ici + dcn) * batch.weight).tolist()
         return self._cached("op_seconds", build)
 
     def measured_seconds(self):

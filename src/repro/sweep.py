@@ -34,7 +34,9 @@ snapshot per cell) -- see the ``serve`` config's prefill/decode cells and
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import os
 import time
 from typing import Callable, Optional
 
@@ -496,24 +498,35 @@ def run_scale_curve(
     device_counts: Optional[list[int]] = None,
     cache: Optional[ReportCache] = None,
     use_cache: bool = True,
+    jobs: int = 1,
     log: Callable[[str], None] = print,
 ):
     """``sweep --scale-curve``: monitor each cell once at its (small) base
-    mesh -- cache rules identical to :func:`run_sweep` -- then project the
-    compiled ops onto synthetic fleet topologies per device count
-    (:mod:`repro.scale`), all sparse, no recompilation.
+    mesh -- cache rules identical to :func:`run_sweep` (including the
+    ``jobs`` thread pool) -- then project the compiled ops onto synthetic
+    fleet topologies per device count (:mod:`repro.scale`), all sparse, no
+    recompilation.
 
     Returns ``(SweepResult, list[ScalePoint])``.
     """
     from repro import scale
 
     result = run_sweep(config_names, mesh_specs, algorithms,
-                       cache=cache, use_cache=use_cache, log=log)
+                       cache=cache, use_cache=use_cache, jobs=jobs, log=log)
     points = scale.scale_curve(
         result.reports,
         device_counts if device_counts else scale.DEFAULT_SCALE_POINTS,
         log=log)
     return result, points
+
+
+def resolve_jobs(jobs) -> int:
+    """Normalize a ``--jobs`` value: int-like, or ``"auto"`` -> cpu count."""
+    if isinstance(jobs, str):
+        if jobs.strip().lower() == "auto":
+            return max(1, os.cpu_count() or 1)
+        jobs = int(jobs)
+    return max(1, int(jobs))
 
 
 def run_sweep(
@@ -523,6 +536,7 @@ def run_sweep(
     *,
     cache: Optional[ReportCache] = None,
     use_cache: bool = True,
+    jobs: int = 1,
     log: Callable[[str], None] = print,
 ) -> SweepResult:
     """Monitor every (config, mesh) cell, derive every algorithm, cache all.
@@ -530,6 +544,13 @@ def run_sweep(
     Per cell: try the cache for each requested algorithm; if at least one
     entry exists, derive the missing algorithms from it (compile-free); only
     a fully-cold cell compiles, once, regardless of algorithm count.
+
+    ``jobs > 1`` evaluates independent cells on a thread pool (cells are
+    jax compiles -- most of the wall clock releases the GIL).  Workers only
+    *read* the shared :class:`ReportCache`; all writes (``cache.put``,
+    report/failure assembly, counters) happen afterwards on the calling
+    thread in the serial iteration order, so the result -- reports order,
+    failures, CSV output -- is identical to ``jobs=1``.
     """
     registry = _registry()
     unknown = [c for c in config_names if c not in registry]
@@ -540,80 +561,105 @@ def run_sweep(
         validate_algorithm(alg)
     cache = cache or ReportCache()
     result = SweepResult(reports=[], failures=[], cache_hits=0, compiles=0)
+    jobs = resolve_jobs(jobs)
 
-    for cname in config_names:
+    def eval_cell(cname: str, mspec: str):
+        """One (config, mesh) cell: probe cache, compile if cold, derive
+        missing algorithms.  Pure w.r.t. shared state -- returns
+        ``(cell, keys, failure, cache_hits, compiles)`` for the caller to
+        merge deterministically."""
         spec = registry[cname]
-        for mspec in mesh_specs:
-            mid = mesh_id(mspec)
-            keys = {alg: cache_key(spec.config_id, mid, alg)
-                    for alg in algorithms}
-            cell: dict[str, object] = {}
-            if use_cache:
-                for alg, key in keys.items():
-                    rep = cache.get(key)
-                    if rep is not None:
-                        log(f"[cache] hit config={cname} mesh={mspec} "
-                            f"algorithm={alg} key={key}")
-                        rep.meta["source"] = "cache"
-                        cell[alg] = rep
-                        result.cache_hits += 1
-            missing = [a for a in algorithms if a not in cell]
-            sibling = None
-            if missing and not cell and use_cache:
-                # an entry for an UNrequested algorithm still spares the
-                # compile: everything derives from the same compiled ops
-                for alg in ALGORITHMS:
-                    if alg in keys:
-                        continue            # already probed above
-                    rep = cache.get(cache_key(spec.config_id, mid, alg))
-                    if rep is not None:
-                        log(f"[cache] sibling hit config={cname} "
-                            f"mesh={mspec} algorithm={alg} -- deriving "
-                            "requested algorithms without recompiling")
-                        rep.meta["source"] = "cache"
-                        sibling = rep
-                        break
-            if missing and not cell and sibling is None:
-                # fully cold: compile once for the first missing algorithm
-                alg0 = missing[0]
-                log(f"[sweep] compile config={cname} mesh={mspec} "
-                    f"algorithm={alg0} ...")
-                t0 = time.perf_counter()
-                try:
-                    mesh = build_mesh(mspec)
-                    built = spec.build(mesh)
-                    rep = _monitor_cell(built, mesh, f"{cname}@{mspec}",
-                                        alg0)
-                except Exception as e:  # noqa: BLE001 -- keep sweeping
-                    log(f"[sweep] FAIL config={cname} mesh={mspec}: {e!r}")
-                    result.failures.append(
-                        {"config": cname, "mesh": mspec, "error": repr(e)})
-                    continue
-                result.compiles += 1
-                log(f"[sweep] compiled config={cname} mesh={mspec} in "
-                    f"{time.perf_counter() - t0:.1f}s "
-                    f"({len(rep.compiled_ops)} collectives)")
-                rep.meta.update(config=cname, mesh=mspec, source="compiled")
-                cell[alg0] = rep
-                missing = [a for a in algorithms if a not in cell]
-            if missing and (cell or sibling):
-                # warm: derive remaining algorithms without recompiling --
-                # a lazy view(alg) binding over the sibling's compiled ops,
-                # snapshotted so the cache gets one report per algorithm
-                base = next(iter(cell.values())) if cell else sibling
-                for alg in missing:
-                    rep = base.rebound(alg)
-                    rep.meta = dict(base.meta, source="derived",
-                                    algorithm=alg)
-                    log(f"[sweep] derive config={cname} mesh={mspec} "
-                        f"algorithm={alg} (no recompile)")
+        mid = mesh_id(mspec)
+        keys = {alg: cache_key(spec.config_id, mid, alg)
+                for alg in algorithms}
+        cell: dict[str, object] = {}
+        hits = 0
+        compiles = 0
+        if use_cache:
+            for alg, key in keys.items():
+                rep = cache.get(key)
+                if rep is not None:
+                    log(f"[cache] hit config={cname} mesh={mspec} "
+                        f"algorithm={alg} key={key}")
+                    rep.meta["source"] = "cache"
                     cell[alg] = rep
-            for alg in algorithms:
-                if alg not in cell:
-                    continue
-                rep = cell[alg]
-                rep.meta.update(config=cname, mesh=mspec, algorithm=alg)
-                result.reports.append(rep)
-                if use_cache and rep.meta.get("source") != "cache":
-                    cache.put(keys[alg], rep, meta=rep.meta)
+                    hits += 1
+        missing = [a for a in algorithms if a not in cell]
+        sibling = None
+        if missing and not cell and use_cache:
+            # an entry for an UNrequested algorithm still spares the
+            # compile: everything derives from the same compiled ops
+            for alg in ALGORITHMS:
+                if alg in keys:
+                    continue            # already probed above
+                rep = cache.get(cache_key(spec.config_id, mid, alg))
+                if rep is not None:
+                    log(f"[cache] sibling hit config={cname} "
+                        f"mesh={mspec} algorithm={alg} -- deriving "
+                        "requested algorithms without recompiling")
+                    rep.meta["source"] = "cache"
+                    sibling = rep
+                    break
+        if missing and not cell and sibling is None:
+            # fully cold: compile once for the first missing algorithm
+            alg0 = missing[0]
+            log(f"[sweep] compile config={cname} mesh={mspec} "
+                f"algorithm={alg0} ...")
+            t0 = time.perf_counter()
+            try:
+                mesh = build_mesh(mspec)
+                built = spec.build(mesh)
+                rep = _monitor_cell(built, mesh, f"{cname}@{mspec}",
+                                    alg0)
+            except Exception as e:  # noqa: BLE001 -- keep sweeping
+                log(f"[sweep] FAIL config={cname} mesh={mspec}: {e!r}")
+                failure = {"config": cname, "mesh": mspec,
+                           "error": repr(e)}
+                return cell, keys, failure, hits, compiles
+            compiles += 1
+            log(f"[sweep] compiled config={cname} mesh={mspec} in "
+                f"{time.perf_counter() - t0:.1f}s "
+                f"({len(rep.compiled_ops)} collectives)")
+            rep.meta.update(config=cname, mesh=mspec, source="compiled")
+            cell[alg0] = rep
+            missing = [a for a in algorithms if a not in cell]
+        if missing and (cell or sibling):
+            # warm: derive remaining algorithms without recompiling --
+            # a lazy view(alg) binding over the sibling's compiled ops,
+            # snapshotted so the cache gets one report per algorithm
+            base = next(iter(cell.values())) if cell else sibling
+            for alg in missing:
+                rep = base.rebound(alg)
+                rep.meta = dict(base.meta, source="derived",
+                                algorithm=alg)
+                log(f"[sweep] derive config={cname} mesh={mspec} "
+                    f"algorithm={alg} (no recompile)")
+                cell[alg] = rep
+        return cell, keys, None, hits, compiles
+
+    cells = [(cname, mspec) for cname in config_names
+             for mspec in mesh_specs]
+    if jobs > 1 and len(cells) > 1:
+        with concurrent.futures.ThreadPoolExecutor(
+                max_workers=min(jobs, len(cells))) as pool:
+            futures = [pool.submit(eval_cell, cn, ms) for cn, ms in cells]
+            outcomes = [f.result() for f in futures]
+    else:
+        outcomes = [eval_cell(cn, ms) for cn, ms in cells]
+
+    for (cname, mspec), (cell, keys, failure, hits, compiles) in zip(
+            cells, outcomes):
+        result.cache_hits += hits
+        result.compiles += compiles
+        if failure is not None:
+            result.failures.append(failure)
+            continue
+        for alg in algorithms:
+            if alg not in cell:
+                continue
+            rep = cell[alg]
+            rep.meta.update(config=cname, mesh=mspec, algorithm=alg)
+            result.reports.append(rep)
+            if use_cache and rep.meta.get("source") != "cache":
+                cache.put(keys[alg], rep, meta=rep.meta)
     return result

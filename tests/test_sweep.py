@@ -48,6 +48,23 @@ class TestRegistry:
             sweep.run_sweep(["paper"], ["4x2"], ["nccl"])
 
 
+class TestResolveJobs:
+    def test_int_and_strings(self):
+        assert sweep.resolve_jobs(1) == 1
+        assert sweep.resolve_jobs(4) == 4
+        assert sweep.resolve_jobs("2") == 2
+        assert sweep.resolve_jobs(0) == 1          # floor at one worker
+
+    def test_auto_is_cpu_count(self):
+        import os
+        assert sweep.resolve_jobs("auto") == max(1, os.cpu_count() or 1)
+        assert sweep.resolve_jobs(" AUTO ") >= 1
+
+    def test_garbage_rejected(self):
+        with pytest.raises(ValueError):
+            sweep.resolve_jobs("many")
+
+
 class TestSweepRuns:
     pytestmark = pytest.mark.compile
 
@@ -154,6 +171,33 @@ class TestSweepRuns:
         assert any(row.get("max_skew", 1.0) > 2.0
                    for row in rep.compiled_summary.values())
         assert any(f.rule_id == "skewed-a2a" for f in rep.lint())
+
+    def test_parallel_and_serial_sweeps_are_identical(self, tmp_path):
+        """``--jobs N`` must be invisible in the output: same report
+        order, same counters, byte-identical summary CSV and table."""
+        from repro.core.export import csv_exporter
+
+        serial = sweep.run_sweep(
+            ["paper"], ["4x2", "8"], ["ring", "tree"],
+            cache=ReportCache(root=str(tmp_path / "c1")),
+            log=lambda _: None)
+        par = sweep.run_sweep(
+            ["paper"], ["4x2", "8"], ["ring", "tree"],
+            cache=ReportCache(root=str(tmp_path / "c2")), jobs=3,
+            log=lambda _: None)
+        assert not serial.failures and not par.failures
+        assert serial.compiles == par.compiles == 2
+        assert [(r.meta["config"], r.meta["mesh"], r.algorithm)
+                for r in serial.reports] == \
+               [(r.meta["config"], r.meta["mesh"], r.algorithm)
+                for r in par.reports]
+        p1 = csv_exporter.export_summary_csv(
+            serial.reports, str(tmp_path / "serial.csv"))
+        p2 = csv_exporter.export_summary_csv(
+            par.reports, str(tmp_path / "parallel.csv"))
+        with open(p1) as f1, open(p2) as f2:
+            assert f1.read() == f2.read()
+        assert serial.summary_table() == par.summary_table()
 
     def test_unrequested_sibling_spares_compile(self, tmp_path):
         cache = ReportCache(root=str(tmp_path / "cache"))
